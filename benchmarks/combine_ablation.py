@@ -1,0 +1,79 @@
+"""Combine-strategy ablation — the Ceballos et al. (2020) comparison the
+paper cites in §2.3 (they study multiple ways to merge head outputs; the
+paper uses concat).  Same data, same budget, four combine modes, plus the
+paper's §5.1 imbalanced-split future-work case.
+
+Rows: (name, us_per_call=us per step, derived=val accuracy).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import SplitConfig
+from repro.configs.pyvertical_mnist import CONFIG, MLPSplitConfig
+from repro.core.splitnn import (MLPSplitNN, make_split_train_step,
+                                train_state_init)
+from repro.data import make_mnist_like
+from repro.optim import multi_segment, sgd
+
+
+def _train(cfg, X, y, epochs=10, seed=0):
+    model = MLPSplitNN(cfg)
+    params = model.init(jax.random.PRNGKey(seed))
+    opt = multi_segment({"heads": sgd(cfg.split.owner_lr),
+                         "trunk": sgd(cfg.split.scientist_lr)})
+    state = train_state_init(params, opt)
+    step = make_split_train_step(model.loss_fn, opt, donate=False)
+    n = len(y)
+    ntr = int(n * 0.85)
+    if model.symmetric:
+        xs_all = np.stack(np.split(X, model.P, axis=1))
+        slice_fn = lambda idx: jnp.asarray(xs_all[:, idx])
+    else:
+        cuts = np.cumsum(model.splits)[:-1]
+        parts = np.split(X, cuts, axis=1)
+        slice_fn = lambda idx: [jnp.asarray(p[idx]) for p in parts]
+    rng = np.random.default_rng(seed)
+    t_tot = n_steps = 0
+    for ep in range(epochs):
+        order = rng.permutation(ntr)
+        for s in range(0, ntr - 128, 128):
+            idx = order[s:s + 128]
+            b = {"x_slices": slice_fn(idx), "labels": jnp.asarray(y[idx])}
+            t0 = time.perf_counter()
+            params, state, m = step(params, state, b, ep)
+            jax.block_until_ready(m["loss"])
+            t_tot += time.perf_counter() - t0
+            n_steps += 1
+    vb = {"x_slices": slice_fn(np.arange(ntr, n)),
+          "labels": jnp.asarray(y[ntr:])}
+    _, vm = model.loss_fn(params, vb)
+    return 1e6 * t_tot / n_steps, float(vm["accuracy"])
+
+
+def run(n=3000, epochs=10):
+    X, y = make_mnist_like(n, 0)
+    rows = []
+    for combine in ("concat", "sum", "mean", "max"):
+        cfg = dataclasses.replace(
+            CONFIG, split=dataclasses.replace(CONFIG.split, combine=combine))
+        us, acc = _train(cfg, X, y, epochs)
+        rows.append((f"combine_{combine}", round(us, 1), acc))
+    # imbalanced vertical datasets (paper §5.1): 588/196 feature split
+    cfg = MLPSplitConfig(feature_splits=(588, 196),
+                         split=SplitConfig(n_owners=2, combine="concat",
+                                           cut_dim=64, owner_lr=0.01,
+                                           scientist_lr=0.1))
+    us, acc = _train(cfg, X, y, epochs)
+    rows.append(("combine_concat_imbalanced_75_25", round(us, 1), acc))
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(",".join(str(x) for x in r))

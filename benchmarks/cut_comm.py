@@ -1,0 +1,44 @@
+"""Cut-layer communication accounting (the SplitNN efficiency argument,
+§2.2: cross-party traffic is ONE activation + ONE gradient per step).
+
+Reports bytes/step crossing each owner<->scientist boundary for the
+paper's MLP, for combine-strategy variants (Ceballos et al. comparison),
+and for the production text archs at train_4k — the quantity the
+multi-pod roofline's cross-pod collective term measures.
+
+Rows: (name, us_per_call=0 [static analysis], derived=MiB per step).
+"""
+from __future__ import annotations
+
+from repro.configs import get_config
+from repro.core.splitnn import cut_layer_traffic
+
+
+def run():
+    rows = []
+    # the paper's MLP: batch 128, 64-dim cut, fp32
+    t = cut_layer_traffic(2, 128, 1, 64, 4)
+    rows.append(("cut_mlp_paper_concat", 0.0,
+                 round(t["total_per_step_bytes"] / 2 ** 20, 4)))
+    # sum/mean/max combine move the same per-owner tensor
+    rows.append(("cut_mlp_paper_sum", 0.0,
+                 round(t["total_per_step_bytes"] / 2 ** 20, 4)))
+    # production archs, train_4k (B=256, S=4096, bf16)
+    for arch in ("llama3.2-3b", "gemma2-9b", "llama3-405b", "zamba2-2.7b"):
+        cfg = get_config(arch)
+        P = cfg.split.n_owners
+        t = cut_layer_traffic(P, 256, 4096 // P, cfg.d_model, 2)
+        rows.append((f"cut_{arch}_train4k", 0.0,
+                     round(t["total_per_step_bytes"] / 2 ** 20, 1)))
+    # the cut-dim bottleneck lever (beyond-paper, privacy + bandwidth)
+    cfg = get_config("llama3.2-3b")
+    for k in (3072, 1024, 256):
+        t = cut_layer_traffic(2, 256, 2048, k, 2)
+        rows.append((f"cut_llama3.2-3b_k{k}", 0.0,
+                     round(t["total_per_step_bytes"] / 2 ** 20, 1)))
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(",".join(str(x) for x in r))

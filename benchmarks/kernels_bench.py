@@ -1,0 +1,74 @@
+"""Kernel-layer micro-benchmarks.
+
+This host is CPU-only, so what executes is the jnp oracle path (the same
+code the models run); the Pallas kernels are correctness-validated in
+interpret mode and TARGET TPU.  We report the oracle's wall time (the
+CPU substrate the tests/examples actually pay for) and, as `derived`,
+the achieved GFLOP/s.
+
+Rows: (name, us_per_call, derived=GFLOP/s).
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels.block_attention.ref import attention_ref
+from repro.kernels.cut_fusion.ref import cut_fusion_ref
+from repro.kernels.mamba2_scan.ref import ssd_ref
+
+
+def _time(fn, *args, iters=5):
+    out = fn(*args)
+    jax.block_until_ready(out)
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / iters
+
+
+def run():
+    rng = np.random.default_rng(0)
+    rows = []
+
+    B, S, nh, nkv, hd = 2, 1024, 8, 2, 64
+    q = jnp.asarray(rng.normal(size=(B, S, nh, hd)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(B, S, nkv, hd)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(B, S, nkv, hd)), jnp.float32)
+    f = jax.jit(lambda q, k, v: attention_ref(q, k, v))
+    dt = _time(f, q, k, v)
+    flops = 4 * B * nh * S * S * hd
+    rows.append(("attention_oracle_1k", 1e6 * dt,
+                 round(flops / dt / 1e9, 1)))
+
+    P, T, K, D = 2, 4096, 512, 1024
+    z = jnp.asarray(rng.normal(size=(P, T, K)), jnp.float32)
+    w = jnp.asarray(rng.normal(size=(P, K, D)), jnp.float32)
+    f = jax.jit(lambda z, w: cut_fusion_ref(z, w))
+    dt = _time(f, z, w)
+    flops = 2 * P * T * K * D
+    rows.append(("cut_fusion_oracle_4k", 1e6 * dt,
+                 round(flops / dt / 1e9, 1)))
+
+    B, S, H, Pd, G, N = 1, 2048, 8, 64, 1, 64
+    x = jnp.asarray(rng.normal(size=(B, S, H, Pd)), jnp.float32)
+    dts = jnp.asarray(rng.uniform(0.001, 0.1, (B, S, H)), jnp.float32)
+    A = -jnp.ones((H,), jnp.float32)
+    Bi = jnp.asarray(rng.normal(size=(B, S, G, N)), jnp.float32)
+    Ci = jnp.asarray(rng.normal(size=(B, S, G, N)), jnp.float32)
+    f = jax.jit(lambda *a: ssd_ref(*a)[0])
+    dt = _time(f, x, dts, A, Bi, Ci)
+    chunk = 128
+    flops = 2 * B * S * H * (chunk * N + chunk * Pd + N * Pd) * 2
+    rows.append(("mamba2_ssd_oracle_2k", 1e6 * dt,
+                 round(flops / dt / 1e9, 1)))
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(",".join(str(x) for x in r))

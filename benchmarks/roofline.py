@@ -1,0 +1,140 @@
+"""Roofline analysis over the dry-run artifacts (deliverable g).
+
+Per (arch x shape x mesh), from the compiled dry-run JSON:
+
+    compute term    = HLO_FLOPs_total / (chips * peak_FLOP/s)
+    memory term     = HLO_bytes_total / (chips * HBM_bw)
+    collective term = collective_bytes_per_dev / link_bw
+
+cost_analysis() on the SPMD-partitioned module reports PER-DEVICE flops
+and bytes (the module is the per-device program), so totals multiply by
+the device count; collective bytes were parsed per-device already.
+
+MODEL_FLOPS = 6 * N * D (dense) or 6 * N_active * D (MoE), D = tokens
+processed in the step (x3 for the backward pass in training).
+
+    PYTHONPATH=src python -m benchmarks.roofline [--markdown]
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+
+from benchmarks.analytic import step_costs
+from repro.configs import SHAPES, get_config
+from repro.launch.mesh import HBM_BW, ICI_BW, PEAK_FLOPS_BF16
+
+ART_DIR = os.path.join(os.path.dirname(__file__), "..", "experiments",
+                       "dryrun")
+HBM_PER_CHIP = 16 * 2 ** 30          # v5e: 16 GiB
+
+
+def model_flops(arch: str, shape_name: str) -> float:
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    n = cfg.param_count(active_only=True)
+    if shape.kind == "train":
+        tokens = shape.seq_len * shape.global_batch
+        return 6.0 * n * tokens
+    if shape.kind == "prefill":
+        tokens = shape.seq_len * shape.global_batch
+        return 2.0 * n * tokens
+    # decode: one token per request
+    return 2.0 * n * shape.global_batch
+
+
+def terms(rec: dict) -> dict:
+    """Three roofline terms from the ANALYTIC model (primary — see
+    benchmarks/analytic.py for why XLA cost_analysis cannot be used
+    directly for scanned models), plus HLO-reported values as relative
+    reference metrics."""
+    chips = rec["n_devices"]
+    ac = step_costs(rec["arch"], rec["shape"])
+    t_c = ac.flops / (chips * PEAK_FLOPS_BF16)
+    t_m = ac.hbm_bytes / (chips * HBM_BW)
+    t_x = ac.coll_bytes_dev / ICI_BW
+    # HLO-reported (scan bodies counted once — relative metric only)
+    hlo_c = rec["cost"]["flops"] * chips / (chips * PEAK_FLOPS_BF16)
+    hlo_x = rec["collectives"]["total_bytes"] / ICI_BW
+    dom = max(("compute", t_c), ("memory", t_m), ("collective", t_x),
+              key=lambda kv: kv[1])
+    mf = model_flops(rec["arch"], rec["shape"])
+    return {
+        "compute_s": t_c, "memory_s": t_m, "collective_s": t_x,
+        "dominant": dom[0], "bound_s": dom[1],
+        "model_flops": mf,
+        "useful_frac": mf / max(ac.flops, 1.0),
+        "hlo_compute_s": hlo_c, "hlo_collective_s": hlo_x,
+        "hbm_gib": rec["hbm_per_device_bytes"] / 2 ** 30,
+        "fits_hbm": rec["hbm_per_device_bytes"] <= HBM_PER_CHIP,
+        "cross_pod_mib": rec["collectives"].get("cross_pod_bytes", 0) / 2**20,
+    }
+
+
+def load(art_dir: str = ART_DIR, mesh: str = None, tag: str = ""):
+    out = []
+    for f in sorted(glob.glob(os.path.join(art_dir, "*.json"))):
+        rec = json.load(open(f))
+        if rec.get("status") != "ok":
+            continue
+        if mesh and rec["mesh"] != mesh:
+            continue
+        # baseline artifacts are named exactly {arch}_{shape}_{mesh}.json;
+        # hillclimb variants carry suffixes (_tdp, _mb16, _ring, ...)
+        base = f"{rec['arch']}_{rec['shape']}_{rec['mesh']}"
+        stem = os.path.basename(f)[:-len(".json")]
+        if not tag and stem != base:
+            continue
+        if tag and not stem.endswith(f"_{tag}"):
+            continue
+        rec["_file"] = os.path.basename(f)
+        out.append(rec)
+    return out
+
+
+def fmt_s(x):
+    if x >= 1.0:
+        return f"{x:7.2f}s"
+    return f"{x*1e3:6.1f}ms"
+
+
+def table(records, markdown=False):
+    rows = []
+    hdr = ["arch", "shape", "mesh", "compute", "memory", "collective",
+           "dominant", "useful", "HBM/dev", "fits"]
+    for rec in records:
+        t = terms(rec)
+        rows.append([
+            rec["arch"], rec["shape"], rec["mesh"],
+            fmt_s(t["compute_s"]), fmt_s(t["memory_s"]),
+            fmt_s(t["collective_s"]), t["dominant"],
+            f"{t['useful_frac']*100:5.1f}%",
+            f"{t['hbm_gib']:8.2f}G", "y" if t["fits_hbm"] else "OVER",
+        ])
+    if markdown:
+        lines = ["| " + " | ".join(hdr) + " |",
+                 "|" + "|".join("---" for _ in hdr) + "|"]
+        lines += ["| " + " | ".join(str(c) for c in r) + " |" for r in rows]
+        return "\n".join(lines)
+    w = [max(len(str(r[i])) for r in rows + [hdr]) for i in range(len(hdr))]
+    lines = ["  ".join(h.ljust(w[i]) for i, h in enumerate(hdr))]
+    lines += ["  ".join(str(c).ljust(w[i]) for i, c in enumerate(r))
+              for r in rows]
+    return "\n".join(lines)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--markdown", action="store_true")
+    ap.add_argument("--mesh", default=None)
+    ap.add_argument("--tag", default="")
+    ap.add_argument("--dir", default=ART_DIR)
+    args = ap.parse_args()
+    recs = load(args.dir, args.mesh, args.tag)
+    print(table(recs, markdown=args.markdown))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,64 @@
+"""Benchmark harness — one module per paper table/figure plus the
+TPU-roofline report.  Prints ``name,us_per_call,derived`` CSV.
+
+    PYTHONPATH=src python -m benchmarks.run [--only NAME] [--fast]
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import traceback
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None)
+    ap.add_argument("--fast", action="store_true",
+                    help="smaller fig4 run (CI-sized)")
+    args = ap.parse_args()
+
+    from benchmarks import (combine_ablation, cut_comm, fig4_accuracy,
+                            kernels_bench, psi_scaling, split_overhead)
+
+    suites = {
+        "psi_scaling": psi_scaling.run,
+        "cut_comm": cut_comm.run,
+        "kernels": kernels_bench.run,
+        "split_overhead": split_overhead.run,
+        "combine_ablation": (lambda: combine_ablation.run(n=1500, epochs=4)
+                             ) if args.fast else combine_ablation.run,
+        "fig4_accuracy": (lambda: fig4_accuracy.run(n=2000, epochs=4))
+                          if args.fast else fig4_accuracy.run,
+    }
+
+    print("name,us_per_call,derived")
+    failures = 0
+    for name, fn in suites.items():
+        if args.only and name != args.only:
+            continue
+        try:
+            for row in fn():
+                print(",".join(str(x) for x in row))
+            sys.stdout.flush()
+        except Exception:                       # noqa: BLE001
+            traceback.print_exc()
+            failures += 1
+
+    # roofline rows (from dry-run artifacts, if present)
+    if not args.only or args.only == "roofline":
+        try:
+            from benchmarks import roofline
+            recs = roofline.load(mesh="16x16")
+            for rec in recs:
+                t = roofline.terms(rec)
+                print(f"roofline_{rec['arch']}_{rec['shape']},"
+                      f"{t['bound_s']*1e6:.1f},{t['dominant']}")
+        except Exception:                       # noqa: BLE001
+            traceback.print_exc()
+            failures += 1
+    if failures:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

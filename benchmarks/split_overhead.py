@@ -1,0 +1,67 @@
+"""Split-vs-monolithic training overhead: the framework-cost question a
+deployer asks.  Trains the paper MLP both ways (identical math, claim C3)
+and a reduced llama split model, reporting wall time per step.
+
+Rows: (name, us_per_call=us per step, derived=loss after warmup).
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config
+from repro.configs.pyvertical_mnist import CONFIG as MNIST_CFG
+from repro.core.splitnn import (MLPSplitNN, make_split_train_step,
+                                train_state_init)
+from repro.data import make_mnist_like, make_token_dataset
+from repro.models.model import SplitModel
+from repro.optim import adam, chain, clip_by_global_norm, multi_segment, sgd
+
+
+def _bench_step(step, params, state, batch, iters=10):
+    params, state, m = step(params, state, batch, 0)      # compile
+    jax.block_until_ready(m["loss"])
+    t0 = time.perf_counter()
+    for i in range(iters):
+        params, state, m = step(params, state, batch, i)
+    jax.block_until_ready(m["loss"])
+    return (time.perf_counter() - t0) / iters, float(m["loss"])
+
+
+def run():
+    rows = []
+    X, y = make_mnist_like(512, 0)
+    xs = jnp.asarray(np.stack(np.split(X[:128], 2, axis=1)))
+    batch = {"x_slices": xs, "labels": jnp.asarray(y[:128])}
+
+    model = MLPSplitNN(MNIST_CFG)
+    params = model.init(jax.random.PRNGKey(0))
+    opt = multi_segment({"heads": sgd(0.01), "trunk": sgd(0.1)})
+    step = make_split_train_step(model.loss_fn, opt, donate=False)
+    dt, loss = _bench_step(step, params, train_state_init(params, opt),
+                           batch)
+    rows.append(("mlp_split_step", 1e6 * dt, round(loss, 4)))
+
+    cfg = get_config("llama3.2-3b", reduced=True)
+    m2 = SplitModel(cfg)
+    p2 = m2.init(jax.random.PRNGKey(0))
+    toks = make_token_dataset(8, 128, cfg.vocab, 0)
+    b2 = {"owner_tokens": jnp.asarray(
+        toks[:, :-1].reshape(8, 2, 64).transpose(1, 0, 2)),
+        "labels": jnp.asarray(toks[:, 1:])}
+    opt2 = multi_segment({
+        "heads": chain(clip_by_global_norm(1.0), adam(1e-3)),
+        "trunk": chain(clip_by_global_norm(1.0), adam(1e-3))})
+    step2 = make_split_train_step(m2.loss_fn, opt2, donate=False)
+    dt, loss = _bench_step(step2, p2, train_state_init(p2, opt2), b2,
+                           iters=3)
+    rows.append(("llama_reduced_split_step", 1e6 * dt, round(loss, 4)))
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(",".join(str(x) for x in r))

@@ -1,0 +1,59 @@
+"""Massively multi-headed VFL (the paper's §5.1 future-work axis):
+accuracy and cut-layer traffic as the number of data owners grows
+2 -> 4 -> 7 -> 14 (divisors of 784 features).
+
+    PYTHONPATH=src python examples/multihead_scaling.py
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import SplitConfig
+from repro.configs.pyvertical_mnist import MLPSplitConfig
+from repro.core.splitnn import (MLPSplitNN, cut_layer_traffic,
+                                make_split_train_step, train_state_init)
+from repro.data import make_mnist_like
+from repro.optim import multi_segment, sgd
+
+
+def train_eval(n_owners, X, y, epochs=6):
+    cfg = MLPSplitConfig(split=SplitConfig(
+        n_owners=n_owners, combine="concat", cut_dim=64,
+        owner_lr=0.01, scientist_lr=0.1))
+    model = MLPSplitNN(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    opt = multi_segment({"heads": sgd(0.01), "trunk": sgd(0.1)})
+    state = train_state_init(params, opt)
+    step = make_split_train_step(model.loss_fn, opt, donate=False)
+    n = len(y)
+    ntr = int(n * 0.85)
+    xs = np.stack(np.split(X, n_owners, axis=1))
+    rng = np.random.default_rng(0)
+    for ep in range(epochs):
+        order = rng.permutation(ntr)
+        for s in range(0, ntr - 128, 128):
+            idx = order[s:s + 128]
+            b = {"x_slices": jnp.asarray(xs[:, idx]),
+                 "labels": jnp.asarray(y[idx])}
+            params, state, _ = step(params, state, b, ep)
+    val = {"x_slices": jnp.asarray(xs[:, ntr:]),
+           "labels": jnp.asarray(y[ntr:])}
+    _, vm = model.loss_fn(params, val)
+    return float(vm["accuracy"])
+
+
+def main():
+    X, y = make_mnist_like(3000, seed=0)
+    print(f"{'owners':>7} {'feat/owner':>11} {'val_acc':>8} "
+          f"{'cut KiB/step':>13}")
+    for p in (2, 4, 7, 14):
+        acc = train_eval(p, X, y)
+        t = cut_layer_traffic(p, 128, 1, 64, 4)
+        print(f"{p:7d} {784 // p:11d} {acc:8.3f} "
+              f"{t['total_per_step_bytes'] / 1024:13.1f}")
+    print("\ncut traffic grows linearly with owners; accuracy degrades "
+          "gracefully as each head sees narrower feature slices")
+
+
+if __name__ == "__main__":
+    main()

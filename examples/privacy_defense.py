@@ -1,0 +1,69 @@
+"""Beyond-paper: the §5.1 privacy-defence sweep (Titcombe et al. 2021).
+
+Trains the paper's SplitNN with increasing Gaussian noise on the cut
+activations and reports the accuracy/leakage trade-off, where leakage is
+the distance correlation between an owner's raw inputs and the cut
+representation the scientist sees.
+
+    PYTHONPATH=src python examples/privacy_defense.py
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.pyvertical_mnist import CONFIG
+from repro.core.privacy import distance_correlation
+from repro.core.splitnn import (MLPSplitNN, make_split_train_step,
+                                train_state_init)
+from repro.data import make_mnist_like
+from repro.optim import multi_segment, sgd
+
+
+def main():
+    X, y = make_mnist_like(2500, seed=0)
+    xs = np.stack(np.split(X, 2, axis=1))
+    n = len(y)
+    ntr = int(n * 0.85)
+    print(f"{'noise_std':>10} {'val_acc':>8} {'leak_dcor':>10}")
+    for std in (0.0, 0.25, 0.5, 1.0, 2.0):
+        cfg = dataclasses.replace(
+            CONFIG, split=dataclasses.replace(CONFIG.split,
+                                              cut_noise_std=std))
+        model = MLPSplitNN(cfg)
+        params = model.init(jax.random.PRNGKey(0))
+        opt = multi_segment({"heads": sgd(0.01), "trunk": sgd(0.1)})
+        state = train_state_init(params, opt)
+
+        def loss_fn(p, b, rng=None):
+            return model.loss_fn(p, b, rng)
+
+        step = make_split_train_step(loss_fn, opt, donate=False)
+        rng = np.random.default_rng(0)
+        key = jax.random.PRNGKey(1)
+        for ep in range(6):
+            order = rng.permutation(ntr)
+            for s in range(0, ntr - 128, 128):
+                idx = order[s:s + 128]
+                key, k = jax.random.split(key)
+                b = {"x_slices": jnp.asarray(xs[:, idx]),
+                     "labels": jnp.asarray(y[idx])}
+                params, state, _ = step(params, state, b, ep, k)
+        val = {"x_slices": jnp.asarray(xs[:, ntr:]),
+               "labels": jnp.asarray(y[ntr:])}
+        _, vm = model.loss_fn(params, val)
+        # leakage: dcor(raw half-images, noisy cut) for owner 0
+        cut = model.heads_forward(params["heads"],
+                                  jnp.asarray(xs[:, ntr:ntr + 256]))
+        key, k = jax.random.split(key)
+        noisy = cut[0] + std * jax.random.normal(k, cut[0].shape)
+        leak = float(distance_correlation(
+            jnp.asarray(xs[0, ntr:ntr + 256]), noisy))
+        print(f"{std:10.2f} {float(vm['accuracy']):8.3f} {leak:10.3f}")
+    print("\nmore cut-layer noise -> lower leakage, modest accuracy cost — "
+          "the defence the paper lists as future work")
+
+
+if __name__ == "__main__":
+    main()

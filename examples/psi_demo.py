@@ -1,0 +1,57 @@
+"""Private Set Intersection walkthrough — every message of the Angelou et
+al. protocol PyVertical uses, with sizes, plus the 3-party resolution of
+paper §3.1.
+
+    PYTHONPATH=src python examples/psi_demo.py
+"""
+import numpy as np
+
+from repro.core.bloom import BloomFilter
+from repro.core.psi import GROUPS, PSIClient, PSIServer
+from repro.core.resolution import VerticalDataset, resolve
+
+GROUP = "modp512"
+
+
+def main():
+    print("=== pairwise DH-PSI, message by message")
+    hospital_a = ["alice", "bob", "carol", "dave"]
+    insurer = ["bob", "dave", "erin", "frank", "grace"]
+    client = PSIClient(insurer, GROUP)              # the data scientist
+    server = PSIServer(hospital_a, fp_rate=1e-9, group=GROUP)
+
+    blinded = client.blind()
+    nb = GROUPS[GROUP][2]
+    print(f"  scientist -> owner: {len(blinded)} blinded ids "
+          f"({len(blinded) * nb} B)")
+    double, bloom = server.respond(blinded)
+    print(f"  owner -> scientist: {len(double)} double-blinded ids "
+          f"({len(double) * nb} B) + bloom filter ({bloom.nbytes()} B, "
+          f"vs {len(hospital_a) * nb} B uncompressed)")
+    inter = client.intersect(double, bloom)
+    print(f"  scientist learns: {sorted(inter)}")
+    print(f"  owner learns: |scientist set| = {len(blinded)} — nothing else")
+
+    print("\n=== 3-party resolution (paper §3.1)")
+    rng = np.random.default_rng(0)
+    sci = VerticalDataset([f"id{i}" for i in range(12)],
+                          rng.integers(0, 10, 12))
+    owners = {
+        "hospital": VerticalDataset([f"id{i}" for i in (0, 2, 3, 5, 7, 8, 11)],
+                                    rng.normal(size=(7, 3))),
+        "pharmacy": VerticalDataset([f"id{i}" for i in (1, 2, 3, 5, 8, 9)],
+                                    rng.normal(size=(6, 2))),
+    }
+    s_al, o_al, stats = resolve(sci, owners, group=GROUP)
+    print(f"  pairwise: " + ", ".join(
+        f"{r['owner']}={r['intersection_size']}" for r in stats["rounds"]))
+    print(f"  global intersection: {s_al.ids}")
+    print("  owners never talked to each other; each sees only the final "
+          "ID list")
+    for name, ds in o_al.items():
+        assert ds.ids == s_al.ids
+    print("  alignment invariant verified: row n == same subject everywhere")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,81 @@
+"""Per-segment checkpointing.
+
+In VFL each party persists ONLY its own model segment (owners must never
+see each other's or the scientist's weights).  ``save_split`` writes one
+npz per party: heads/owner{i}.npz + trunk.npz; ``save``/``restore`` are the
+generic single-tree primitives (flattened path -> array)."""
+from __future__ import annotations
+
+import os
+import re
+from typing import Any, Dict
+
+import jax
+import numpy as np
+
+
+def _flatten(tree, prefix=""):
+    out = {}
+    if isinstance(tree, dict):
+        for k, v in tree.items():
+            out.update(_flatten(v, f"{prefix}{k}/"))
+    elif isinstance(tree, (list, tuple)):
+        for i, v in enumerate(tree):
+            out.update(_flatten(v, f"{prefix}#{i}/"))
+    else:
+        out[prefix[:-1]] = np.asarray(tree)
+    return out
+
+
+def _unflatten(flat: Dict[str, np.ndarray]):
+    root: Any = {}
+    for path, arr in flat.items():
+        keys = path.split("/")
+        node = root
+        for i, k in enumerate(keys):
+            last = i == len(keys) - 1
+            if last:
+                node[k] = arr
+            else:
+                node = node.setdefault(k, {})
+    def fix(node):
+        if isinstance(node, dict) and node and all(
+                re.fullmatch(r"#\d+", k) for k in node):
+            return [fix(node[f"#{i}"]) for i in range(len(node))]
+        if isinstance(node, dict):
+            return {k: fix(v) for k, v in node.items()}
+        return node
+    return fix(root)
+
+
+def save(path: str, tree):
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    np.savez(path, **_flatten(jax.device_get(tree)))
+
+
+def restore(path: str):
+    with np.load(path, allow_pickle=False) as z:
+        return _unflatten({k: z[k] for k in z.files})
+
+
+def save_split(ckpt_dir: str, params, step: int = 0):
+    """One file per party: owners keep their head, scientist the trunk."""
+    d = os.path.join(ckpt_dir, f"step_{step:08d}")
+    os.makedirs(d, exist_ok=True)
+    heads = jax.device_get(params["heads"])
+    n_owners = jax.tree.leaves(heads)[0].shape[0]
+    for p in range(n_owners):
+        owner_tree = jax.tree.map(lambda a: a[p], heads)
+        save(os.path.join(d, f"owner{p}.npz"), owner_tree)
+    save(os.path.join(d, "trunk.npz"), params["trunk"])
+    return d
+
+
+def restore_split(step_dir: str):
+    """Reassemble {"heads": stacked, "trunk": ...} from per-party files."""
+    owners = sorted(f for f in os.listdir(step_dir)
+                    if f.startswith("owner"))
+    head_trees = [restore(os.path.join(step_dir, f)) for f in owners]
+    heads = jax.tree.map(lambda *a: np.stack(a), *head_trees)
+    trunk = restore(os.path.join(step_dir, "trunk.npz"))
+    return {"heads": heads, "trunk": trunk}

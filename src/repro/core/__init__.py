@@ -1,0 +1,7 @@
+# The paper's primary contribution: multi-headed SplitNN + PSI entity
+# resolution, as a composable JAX system.
+from repro.core.splitnn import (MLPSplitNN, make_split_train_step,  # noqa
+                                cut_layer_traffic, train_state_init)
+from repro.core.psi import psi_intersect, PSIClient, PSIServer  # noqa: F401
+from repro.core.bloom import BloomFilter  # noqa: F401
+from repro.core.resolution import VerticalDataset, resolve  # noqa: F401

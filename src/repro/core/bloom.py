@@ -1,0 +1,59 @@
+"""Bloom filter used to compress the PSI server's response
+(Angelou et al. 2020: DDH-PSI with Bloom-filter compression).
+
+numpy bitset, k independent hashes derived from sha256(elem || i).
+No false negatives; false-positive rate ~ (1 - e^{-kn/m})^k.
+"""
+from __future__ import annotations
+
+import hashlib
+import math
+from typing import Iterable
+
+import numpy as np
+
+
+class BloomFilter:
+    def __init__(self, n_bits: int, n_hashes: int):
+        if n_bits <= 0 or n_hashes <= 0:
+            raise ValueError("n_bits and n_hashes must be positive")
+        self.m = int(n_bits)
+        self.k = int(n_hashes)
+        self.bits = np.zeros((self.m + 7) // 8, dtype=np.uint8)
+
+    @classmethod
+    def for_capacity(cls, n_items: int, fp_rate: float = 1e-6):
+        """Size the filter for ``n_items`` at the target false-positive rate."""
+        n_items = max(n_items, 1)
+        m = int(-n_items * math.log(max(fp_rate, 1e-12)) / (math.log(2) ** 2))
+        k = max(1, round(m / n_items * math.log(2)))
+        return cls(max(m, 8), k)
+
+    def _indices(self, item: bytes):
+        for i in range(self.k):
+            h = hashlib.sha256(item + i.to_bytes(4, "big")).digest()
+            yield int.from_bytes(h[:8], "big") % self.m
+
+    def add(self, item: bytes):
+        for idx in self._indices(item):
+            self.bits[idx >> 3] |= 1 << (idx & 7)
+
+    def add_all(self, items: Iterable[bytes]):
+        for it in items:
+            self.add(it)
+
+    def __contains__(self, item: bytes) -> bool:
+        return all(self.bits[i >> 3] >> (i & 7) & 1 for i in self._indices(item))
+
+    def nbytes(self) -> int:
+        """Wire size — what the PSI server actually transmits."""
+        return self.bits.nbytes
+
+    def to_bytes(self) -> bytes:
+        return self.bits.tobytes()
+
+    @classmethod
+    def from_bytes(cls, data: bytes, n_bits: int, n_hashes: int):
+        bf = cls(n_bits, n_hashes)
+        bf.bits = np.frombuffer(data, dtype=np.uint8).copy()
+        return bf

@@ -1,0 +1,55 @@
+"""Beyond-paper privacy hooks (the paper's §5.1 future-work items).
+
+* Gaussian noise on cut-layer activations (Titcombe et al. 2021 — basic
+  defence against model-inversion on the intermediate representation).
+  Wired into ``SplitConfig.cut_noise_std``.
+* NoPeek-style distance-correlation regularizer: penalize statistical
+  dependence between an owner's raw inputs and its cut activations.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def _pairwise_dist(x):
+    """Euclidean distance matrix of rows of x: (B, F) -> (B, B), fp32."""
+    x = x.reshape(x.shape[0], -1).astype(jnp.float32)
+    sq = jnp.sum(x * x, axis=1)
+    d2 = sq[:, None] + sq[None, :] - 2.0 * (x @ x.T)
+    return jnp.sqrt(jnp.maximum(d2, 1e-12))
+
+
+def _center(d):
+    return (d - jnp.mean(d, 0, keepdims=True) - jnp.mean(d, 1, keepdims=True)
+            + jnp.mean(d))
+
+
+def distance_correlation(x, z) -> jnp.ndarray:
+    """Székely distance correlation between batches x (B, ...) and z (B, ...).
+
+    0 = independent; 1 = strongly dependent.  Used both as the NoPeek
+    regularizer and as a leakage *metric* in the privacy benchmark."""
+    a = _center(_pairwise_dist(x))
+    b = _center(_pairwise_dist(z))
+    dcov = jnp.sqrt(jnp.maximum(jnp.mean(a * b), 0.0))
+    dvar_x = jnp.sqrt(jnp.maximum(jnp.mean(a * a), 0.0))
+    dvar_z = jnp.sqrt(jnp.maximum(jnp.mean(b * b), 0.0))
+    return dcov / jnp.maximum(jnp.sqrt(dvar_x * dvar_z), 1e-9)
+
+
+def nopeek_penalty(raw_inputs, cut_activations, weight: float):
+    """NoPeek loss term: weight * dcor(raw, cut) per owner, summed."""
+    if weight <= 0.0:
+        return jnp.zeros((), jnp.float32)
+    if raw_inputs.ndim == cut_activations.ndim:  # stacked owner dim
+        per_owner = jax.vmap(distance_correlation)(raw_inputs,
+                                                   cut_activations)
+        return weight * jnp.sum(per_owner)
+    return weight * distance_correlation(raw_inputs, cut_activations)
+
+
+def gaussian_cut_noise(rng, cut, std: float):
+    if std <= 0.0:
+        return cut
+    return cut + std * jax.random.normal(rng, cut.shape, cut.dtype)

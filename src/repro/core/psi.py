@@ -1,0 +1,138 @@
+"""Diffie–Hellman Private Set Intersection with Bloom-filter compression.
+
+The protocol of Angelou et al. 2020 (the PSI library PyVertical uses),
+re-implemented over the 2048-bit MODP group (RFC 3526 §3):
+
+  * safe prime p = 2q + 1; all elements live in the subgroup QR_p of
+    quadratic residues (prime order q), via H(x) = sha256^*(x)^2 mod p.
+  * client (the data scientist) holds X, secret α; server (a data owner)
+    holds Y, secret β.
+  * client -> server:  A_i = H(x_i)^α                (blinded)
+  * server -> client:  B_i = A_i^β = H(x_i)^{αβ}     (double-blinded, ordered)
+                       BF  = BloomFilter{ H(y_j)^β } (compressed server set)
+  * client: H(x_i)^β = B_i^{α^{-1} mod q}; x_i in the intersection iff
+    H(x_i)^β ∈ BF.
+
+Only the client learns the intersection; the server learns only |X|.
+False positives are bounded by the Bloom parameters (default 1e-9 — the
+asymmetric regime of the paper: small client set, large compressed server
+response).
+"""
+from __future__ import annotations
+
+import hashlib
+import secrets
+from dataclasses import dataclass, field
+from typing import List, Sequence
+
+from repro.core.bloom import BloomFilter
+
+# RFC 3526, 2048-bit MODP group: p is a safe prime (p = 2q + 1).
+P_HEX = (
+    "FFFFFFFFFFFFFFFFC90FDAA22168C234C4C6628B80DC1CD129024E088A67CC74"
+    "020BBEA63B139B22514A08798E3404DDEF9519B3CD3A431B302B0A6DF25F1437"
+    "4FE1356D6D51C245E485B576625E7EC6F44C42E9A637ED6B0BFF5CB6F406B7ED"
+    "EE386BFB5A899FA5AE9F24117C4B1FE649286651ECE45B3DC2007CB8A163BF05"
+    "98DA48361C55D39A69163FA8FD24CF5F83655D23DCA3AD961C62F356208552BB"
+    "9ED529077096966D670C354E4ABC9804F1746C08CA18217C32905E462E36CE3B"
+    "E39E772C180E86039B2783A2EC07A28FB5C55DF06F4C52C9DE2BCBF695581718"
+    "3995497CEA956AE515D2261898FA051015728E5A8AACAA68FFFFFFFFFFFFFFFF"
+)
+PRIME = int(P_HEX, 16)
+Q = (PRIME - 1) // 2
+
+# 512-bit safe prime (locally generated, Miller-Rabin verified).  NOT for
+# production use — selectable via group="modp512" to keep CI/test/demo
+# wall-time sane on hosts where a 2048-bit modexp costs ~30 ms.
+P512 = int(
+    "fb8def3a572e8dc20670083d0a2a21dd4499d394148beb09ecd2f93a018018d0"
+    "af9a57a96a9172dc5baba339cccd0f6fccb7fdc53fb67c330afe160326d4cd17", 16)
+
+GROUPS = {
+    "modp2048": (PRIME, (PRIME - 1) // 2, 256),
+    "modp512": (P512, (P512 - 1) // 2, 64),
+}
+
+
+def hash_to_group(item: bytes, prime: int = PRIME, nbytes: int = 256) -> int:
+    """H(x) = (sha256-derived integer mod p)^2 — lands in QR_p (order q)."""
+    h = b""
+    ctr = 0
+    while len(h) < nbytes + 16:  # modulus size + slack for uniformity
+        h += hashlib.sha256(item + ctr.to_bytes(4, "big")).digest()
+        ctr += 1
+    v = int.from_bytes(h, "big") % prime
+    return pow(v, 2, prime)
+
+
+def _enc(x: int, nbytes: int = 256) -> bytes:
+    return x.to_bytes(nbytes, "big")
+
+
+@dataclass
+class PSIClient:
+    """The data scientist's side."""
+
+    items: Sequence[str]
+    group: str = "modp2048"
+    _alpha: int = field(default=0, repr=False)
+
+    def __post_init__(self):
+        self._p, self._q, self._nb = GROUPS[self.group]
+        self._alpha = secrets.randbelow(self._q - 2) + 2
+
+    def blind(self) -> List[int]:
+        return [pow(hash_to_group(x.encode(), self._p, self._nb),
+                    self._alpha, self._p) for x in self.items]
+
+    def intersect(self, double_blinded: Sequence[int],
+                  server_bloom: BloomFilter) -> List[str]:
+        """Recover the intersection from the server's response."""
+        a_inv = pow(self._alpha, -1, self._q)
+        out = []
+        for x, db in zip(self.items, double_blinded):
+            unblinded = pow(db, a_inv, self._p)   # = H(x)^beta
+            if _enc(unblinded, self._nb) in server_bloom:
+                out.append(x)
+        return out
+
+
+@dataclass
+class PSIServer:
+    """A data owner's side."""
+
+    items: Sequence[str]
+    fp_rate: float = 1e-9
+    group: str = "modp2048"
+    _beta: int = field(default=0, repr=False)
+
+    def __post_init__(self):
+        self._p, self._q, self._nb = GROUPS[self.group]
+        self._beta = secrets.randbelow(self._q - 2) + 2
+
+    def respond(self, blinded: Sequence[int]):
+        """Returns (double-blinded client set [ordered], bloom of own set)."""
+        double = [pow(a, self._beta, self._p) for a in blinded]
+        bf = BloomFilter.for_capacity(len(self.items), self.fp_rate)
+        for y in self.items:
+            bf.add(_enc(pow(hash_to_group(y.encode(), self._p, self._nb),
+                            self._beta, self._p), self._nb))
+        return double, bf
+
+
+def psi_intersect(client_items: Sequence[str], server_items: Sequence[str],
+                  fp_rate: float = 1e-9, group: str = "modp2048"):
+    """One full PSI round.  Returns (intersection_as_client_sees_it, stats)."""
+    client = PSIClient(client_items, group)
+    server = PSIServer(server_items, fp_rate, group)
+    blinded = client.blind()
+    double, bf = server.respond(blinded)
+    inter = client.intersect(double, bf)
+    nb = GROUPS[group][2]
+    stats = {
+        "client_upload_bytes": nb * len(blinded),
+        "server_response_bytes": nb * len(double) + bf.nbytes(),
+        "bloom_bytes": bf.nbytes(),
+        "uncompressed_server_set_bytes": nb * len(server_items),
+    }
+    return inter, stats

@@ -1,0 +1,80 @@
+"""The paper's §3.1 data-resolution protocol for 2+ data owners.
+
+The data scientist runs PSI *independently* with each data owner (as the
+PSI client, so only the scientist learns each pairwise intersection),
+computes the global intersection, and broadcasts it.  Data owners never
+communicate and never learn of each other.  Each party then discards
+non-shared rows and sorts by ID so element n of every vertical dataset
+corresponds to the same data subject.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict, List, Sequence
+
+import numpy as np
+
+from repro.core.psi import GROUPS, PSIClient, PSIServer
+
+
+@dataclass
+class VerticalDataset:
+    """One party's vertically-partitioned data: rows keyed by unique IDs."""
+
+    ids: List[str]
+    data: np.ndarray          # (n_rows, ...) — features, labels, or tokens
+
+    def __post_init__(self):
+        if len(self.ids) != len(self.data):
+            raise ValueError("ids/data length mismatch")
+        if len(set(self.ids)) != len(self.ids):
+            raise ValueError("IDs must be unique")
+
+    def filter_and_sort(self, keep_ids: Sequence[str]) -> "VerticalDataset":
+        """Discard non-shared rows; sort by ID (the paper's alignment)."""
+        keep = set(keep_ids)
+        order = sorted(i for i, d in enumerate(self.ids) if d in keep)
+        order.sort(key=lambda i: self.ids[i])
+        return VerticalDataset([self.ids[i] for i in order],
+                               self.data[order])
+
+
+def resolve(scientist: VerticalDataset,
+            owners: Dict[str, VerticalDataset],
+            fp_rate: float = 1e-9, group: str = "modp2048"):
+    """Run the full protocol.  Returns (aligned_scientist,
+    {owner: aligned_dataset}, stats).
+
+    After resolution every returned dataset has identical ``ids`` in
+    identical order — the invariant SplitNN training relies on.
+    """
+    pairwise = {}
+    stats = {"rounds": [], "global_intersection": 0}
+    nb = GROUPS[group][2]
+    for name, ds in owners.items():
+        client = PSIClient(scientist.ids, group)   # scientist is the client
+        server = PSIServer(ds.ids, fp_rate, group)  # each owner is a server
+        blinded = client.blind()
+        double, bf = server.respond(blinded)
+        inter = client.intersect(double, bf)
+        pairwise[name] = set(inter)
+        stats["rounds"].append({
+            "owner": name,
+            "intersection_size": len(inter),
+            "client_upload_bytes": nb * len(blinded),
+            "server_response_bytes": nb * len(double) + bf.nbytes(),
+        })
+
+    global_ids = set(scientist.ids)
+    for s in pairwise.values():
+        global_ids &= s
+    stats["global_intersection"] = len(global_ids)
+
+    aligned_scientist = scientist.filter_and_sort(global_ids)
+    aligned_owners = {name: ds.filter_and_sort(global_ids)
+                      for name, ds in owners.items()}
+
+    # invariant: identical ID order everywhere
+    for name, ds in aligned_owners.items():
+        assert ds.ids == aligned_scientist.ids, f"misaligned owner {name}"
+    return aligned_scientist, aligned_owners, stats

@@ -1,0 +1,174 @@
+"""The multi-headed SplitNN engine.
+
+Two layers live here:
+
+1. ``MLPSplitNN`` — the paper's exact Appendix-B model (dual-headed MLP for
+   vertically-partitioned MNIST: 392 -> 64 ReLU heads, concat -> 500 -> 10
+   trunk).  Used by the paper-repro experiment and the gradient-equivalence
+   property tests.
+
+2. ``make_split_train_step`` — the generic training step shared by the MLP
+   and the large ``SplitModel`` architectures: joint forward through
+   heads + combine + trunk, single backward pass (autodiff carries the
+   cut-layer gradient back to the owners — the paper's protocol, expressed
+   as program structure), then *per-segment* optimizer updates
+   (owners lr != scientist lr).
+
+``cut_layer_traffic`` accounts the bytes that cross party (pod) boundaries
+per step — claim C4: only cut activations (fwd) and cut gradients (bwd)
+ever leave an owner.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable, Dict
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.pyvertical_mnist import MLPSplitConfig
+from repro.optim import apply_updates
+
+
+# ---------------------------------------------------------------------------
+# The paper's MLP SplitNN (Appendix B)
+# ---------------------------------------------------------------------------
+
+
+class MLPSplitNN:
+    def __init__(self, cfg: MLPSplitConfig):
+        self.cfg = cfg
+        self.P = cfg.split.n_owners
+        self.splits = (tuple(getattr(cfg, "feature_splits", None) or ())
+                       or (cfg.n_features // self.P,) * self.P)
+        if len(self.splits) != self.P or sum(self.splits) != cfg.n_features:
+            raise ValueError(f"feature_splits {self.splits} inconsistent")
+        self.symmetric = len(set(self.splits)) == 1
+        self.f_p = self.splits[0]                  # 392 per owner (paper)
+        self.k = cfg.head_layers[-1]               # 64
+        if cfg.split.combine == "concat":
+            self.trunk_in = self.P * self.k        # 128
+        else:
+            self.trunk_in = self.k
+
+    def _mlp_init(self, key, dims):
+        params = []
+        for i, (a, b) in enumerate(zip(dims[:-1], dims[1:])):
+            key, k1 = jax.random.split(key)
+            w = jax.random.normal(k1, (a, b), jnp.float32) * np.sqrt(2.0 / a)
+            params.append({"w": w, "b": jnp.zeros((b,), jnp.float32)})
+        return params
+
+    def init(self, key):
+        kh, kt = jax.random.split(key)
+        if self.symmetric:
+            head_dims = (self.f_p,) + self.cfg.head_layers
+            heads = jax.vmap(lambda k: self._mlp_init(k, head_dims))(
+                jax.random.split(kh, self.P))
+        else:
+            # imbalanced vertical datasets (paper §5.1): per-owner input
+            # widths -> list of asymmetric head segments
+            heads = [self._mlp_init(k, (f,) + self.cfg.head_layers)
+                     for k, f in zip(jax.random.split(kh, self.P),
+                                     self.splits)]
+        trunk = self._mlp_init(kt, (self.trunk_in,) + self.cfg.trunk_layers)
+        return {"heads": heads, "trunk": trunk}
+
+    @staticmethod
+    def _mlp_apply(params, x, final_linear=True):
+        for i, layer in enumerate(params):
+            x = x @ layer["w"] + layer["b"]
+            if i < len(params) - 1 or not final_linear:
+                x = jax.nn.relu(x)
+        return x
+
+    def heads_forward(self, heads, x_slices):
+        """x_slices: (P, B, f_p) stacked — or a list of (B, f_i) slices for
+        imbalanced owners.  The paper's head: Linear(392->64) + ReLU."""
+        if self.symmetric and not isinstance(x_slices, (list, tuple)):
+            return jax.vmap(
+                lambda hp, x: jax.nn.relu(self._mlp_apply(hp, x)))(
+                    heads, x_slices)
+        return jnp.stack([jax.nn.relu(self._mlp_apply(hp, x))
+                          for hp, x in zip(heads, x_slices)])
+
+    def combine(self, cut, rng=None):
+        sp = self.cfg.split
+        if sp.cut_noise_std > 0.0 and rng is not None:
+            cut = cut + sp.cut_noise_std * jax.random.normal(
+                rng, cut.shape, cut.dtype)
+        if sp.combine == "concat":
+            P, B, k = cut.shape
+            return cut.transpose(1, 0, 2).reshape(B, P * k)
+        if sp.combine == "sum":
+            return cut.sum(0)
+        if sp.combine == "mean":
+            return cut.mean(0)
+        if sp.combine == "max":
+            return cut.max(0)
+        raise ValueError(sp.combine)
+
+    def forward(self, params, x_slices, rng=None):
+        cut = self.heads_forward(params["heads"], x_slices)
+        z = self.combine(cut, rng)
+        return self._mlp_apply(params["trunk"], z)   # logits (B, 10)
+
+    def loss_fn(self, params, batch, rng=None):
+        logits = self.forward(params, batch["x_slices"], rng)
+        labels = batch["labels"]
+        logp = jax.nn.log_softmax(logits)
+        loss = -jnp.mean(jnp.take_along_axis(logp, labels[:, None], 1))
+        acc = jnp.mean(jnp.argmax(logits, -1) == labels)
+        return loss, {"loss": loss, "accuracy": acc}
+
+
+# ---------------------------------------------------------------------------
+# Generic split training step
+# ---------------------------------------------------------------------------
+
+
+def make_split_train_step(loss_fn: Callable, optimizer,
+                          donate: bool = True) -> Callable:
+    """Build the jitted SplitNN train step.
+
+    ``loss_fn(params, batch, rng) -> (loss, metrics)``.
+    ``optimizer``: a ``multi_segment`` optimizer — heads and trunk get their
+    own update rules, mirroring the paper's independent per-party updates.
+    """
+
+    def step(params, opt_state, batch, step_idx, rng=None):
+        (loss, metrics), grads = jax.value_and_grad(
+            loss_fn, has_aux=True)(params, batch, rng=rng)
+        updates, opt_state = optimizer.update(grads, opt_state, params,
+                                              step_idx)
+        params = apply_updates(params, updates)
+        return params, opt_state, metrics
+
+    return jax.jit(step, donate_argnums=(0, 1) if donate else ())
+
+
+def train_state_init(params, optimizer):
+    return optimizer.init(params)
+
+
+# ---------------------------------------------------------------------------
+# Communication accounting (claim C4)
+# ---------------------------------------------------------------------------
+
+
+def cut_layer_traffic(n_owners: int, batch: int, tokens_per_owner: int,
+                      cut_dim: int, bytes_per_el: int = 2) -> Dict[str, int]:
+    """Bytes crossing each owner<->scientist boundary per training step.
+
+    forward: the cut activation (B, S_p, k); backward: its gradient.
+    This is the ONLY cross-party traffic in SplitNN (raw data and head
+    params never move) — and the quantity the multi-pod roofline's
+    cross-pod collective term measures.
+    """
+    one_way = batch * tokens_per_owner * cut_dim * bytes_per_el
+    return {
+        "per_owner_forward_bytes": one_way,
+        "per_owner_backward_bytes": one_way,
+        "total_per_step_bytes": 2 * one_way * n_owners,
+    }

@@ -1,0 +1,55 @@
+"""Vertical partitioning of datasets across data owners.
+
+The paper's MNIST experiment splits each image into a left and a right
+half; generally, each data owner holds a disjoint vertical slice of every
+data subject's features.  For sequence models the slice is a contiguous
+sequence segment (DESIGN.md §2); for the VLM/audio archs the slice is a
+modality.
+"""
+from __future__ import annotations
+
+from typing import List, Tuple
+
+import numpy as np
+
+
+def partition_features(x: np.ndarray, n_owners: int) -> List[np.ndarray]:
+    """Split feature columns (axis -1) into n contiguous owner slices.
+    The paper's MNIST split (left/right halves) is
+    ``partition_features(images.reshape(n, 28, 28), 2)`` on axis -1 —
+    equivalently on the flattened 784 vector split at 392."""
+    if x.shape[-1] % n_owners:
+        raise ValueError(f"features {x.shape[-1]} not divisible by {n_owners}")
+    return list(np.split(x, n_owners, axis=-1))
+
+
+def partition_sequence(tokens: np.ndarray, n_owners: int) -> List[np.ndarray]:
+    """Split the sequence dim (axis 1) into contiguous owner slices."""
+    if tokens.shape[1] % n_owners:
+        raise ValueError(f"seq {tokens.shape[1]} not divisible by {n_owners}")
+    return list(np.split(tokens, n_owners, axis=1))
+
+
+def unpartition(slices: List[np.ndarray], axis: int = -1) -> np.ndarray:
+    """Inverse of the partitioners (property-tested)."""
+    return np.concatenate(slices, axis=axis)
+
+
+def make_ids(n: int, prefix: str = "subject") -> List[str]:
+    return [f"{prefix}-{i:08d}" for i in range(n)]
+
+
+def scatter_to_owners(ids: List[str], slices: List[np.ndarray],
+                      rng: np.random.Generator,
+                      keep_frac: float = 0.9) -> List[Tuple[List[str], np.ndarray]]:
+    """Simulate real-world silos: each owner independently holds a random
+    subset of the subjects (so PSI has actual work to do) and stores rows
+    in its own random order."""
+    out = []
+    n = len(ids)
+    for sl in slices:
+        keep = rng.random(n) < keep_frac
+        idx = np.flatnonzero(keep)
+        rng.shuffle(idx)
+        out.append(([ids[i] for i in idx], sl[idx]))
+    return out

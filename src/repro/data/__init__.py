@@ -1,0 +1,2 @@
+from repro.data.synthetic import (make_mnist_like, make_token_dataset,  # noqa
+                                  batches, make_vertical_mnist_parties)

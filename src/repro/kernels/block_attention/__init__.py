@@ -1,0 +1,1 @@
+from repro.kernels.block_attention.ops import block_attention  # noqa: F401

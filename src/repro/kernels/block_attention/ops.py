@@ -1,0 +1,30 @@
+"""jit'd wrapper: model-layout (B, S, H, hd) GQA attention on the Pallas
+flash kernel.  ``interpret=True`` executes the kernel body on CPU (how the
+tests validate it); on TPU the same call lowers to Mosaic."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.block_attention.kernel import flash_attention_flat
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "kind", "window", "softcap", "block_q", "block_k", "interpret"))
+def block_attention(q, k, v, *, kind: str = "causal", window: int = 0,
+                    softcap: float = 0.0, block_q: int = 128,
+                    block_k: int = 128, interpret: bool = False):
+    """q: (B, Sq, nh, hd); k, v: (B, Skv, nkv, hd) -> (B, Sq, nh, hd)."""
+    B, Sq, nh, hd = q.shape
+    Skv, nkv = k.shape[1], k.shape[2]
+    group = nh // nkv
+    qf = q.transpose(0, 2, 1, 3).reshape(B * nh, Sq, hd)
+    kf = k.transpose(0, 2, 1, 3).reshape(B * nkv, Skv, hd)
+    vf = v.transpose(0, 2, 1, 3).reshape(B * nkv, Skv, hd)
+    out = flash_attention_flat(qf, kf, vf, kind=kind, window=window,
+                               softcap=softcap, group=group,
+                               block_q=block_q, block_k=block_k,
+                               interpret=interpret)
+    return out.reshape(B, nh, Sq, hd).transpose(0, 2, 1, 3)

@@ -1,0 +1,13 @@
+"""Pure-jnp oracle for the block_attention kernel: the model's own
+chunked-softmax attention (repro.models.attention.attention), which every
+architecture's forward pass uses on CPU and which the Pallas kernel must
+match to float tolerance."""
+from __future__ import annotations
+
+from repro.models.attention import attention
+
+
+def attention_ref(q, k, v, *, kind: str = "causal", window: int = 0,
+                  softcap: float = 0.0):
+    """q: (B, Sq, nh, hd); k, v: (B, Skv, nkv, hd)."""
+    return attention(q, k, v, kind=kind, window=window, softcap=softcap)

@@ -1,0 +1,1 @@
+from repro.kernels.cut_fusion.ops import cut_fusion  # noqa: F401

@@ -1,0 +1,20 @@
+"""jit'd wrapper for the fused cut-layer combine+projection."""
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from repro.kernels.cut_fusion.kernel import cut_fusion_raw
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "combine", "block_m", "block_n", "block_k", "interpret"))
+def cut_fusion(z, w, *, combine: str = "concat", block_m: int = 128,
+               block_n: int = 128, block_k: int = 128,
+               interpret: bool = False):
+    """z: (P, T, k) owner cut activations; w: (P, k, d) trunk projection
+    block-rows.  Returns combine(z) @ W: (T, d)."""
+    return cut_fusion_raw(z, w, combine=combine, block_m=block_m,
+                          block_n=block_n, block_k=block_k,
+                          interpret=interpret)

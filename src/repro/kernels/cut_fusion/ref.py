@@ -1,0 +1,21 @@
+"""Pure-jnp oracle: materialize the combine, then matmul."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def cut_fusion_ref(z, w, *, combine: str = "concat"):
+    """z: (P, T, k); w: (P, k, d).  Returns (T, d)."""
+    P = z.shape[0]
+    zf = z.astype(jnp.float32)
+    wf = w.astype(jnp.float32)
+    if combine == "concat":
+        # concat over features == sum of per-owner block-row matmuls
+        out = sum(zf[p] @ wf[p] for p in range(P))
+    elif combine == "sum":
+        out = zf.sum(0) @ wf[0]
+    elif combine == "mean":
+        out = zf.mean(0) @ wf[0]
+    else:
+        raise ValueError(combine)
+    return out.astype(z.dtype)

@@ -1,0 +1,10 @@
+"""Pure-jnp oracle: the model's own chunked SSD implementation."""
+from __future__ import annotations
+
+from repro.models.ssm import ssd_chunked
+
+
+def ssd_ref(x, dt, A, B_in, C_in, chunk: int = 128):
+    """Model layout: x (B, S, H, P), dt (B, S, H), A (H,),
+    B_in/C_in (B, S, G, N).  Returns (y, final_state (B, H, N, P))."""
+    return ssd_chunked(x, dt, A, B_in, C_in, chunk)

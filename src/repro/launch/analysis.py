@@ -1,0 +1,144 @@
+"""Compiled-HLO analysis: collective traffic + roofline inputs.
+
+``cost_analysis()`` gives HLO FLOPs / bytes, but NOT collective bytes —
+those are recovered by parsing the post-SPMD compiled module text, where
+shapes are already per-device: the result shape of each all-gather /
+all-reduce / reduce-scatter / all-to-all / collective-permute is (a good
+proxy for) the bytes that land on each device.
+
+Cross-pod detection: on the (pod, data, model) mesh device ids are
+pod-major (id // 256 = pod), so any replica group or source-target pair
+mixing id//256 values crosses the pod boundary — the PyVertical party
+boundary.  C4 requires those to be cut-layer (or scientist-internal
+trunk-DP) collectives only.
+"""
+from __future__ import annotations
+
+import re
+from typing import Dict, List
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+_SHAPE_RE = re.compile(r"(" + "|".join(_DTYPE_BYTES) + r")\[([0-9,]*)\]")
+_OP_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?[\w.\-]+\s*=\s*(?P<result>[^=]*?)\s+"
+    r"(?P<op>all-gather|all-reduce|reduce-scatter|all-to-all|"
+    r"collective-permute)(?:-start|-done)?\(",
+    re.M)
+_GROUPS_RE = re.compile(r"replica_groups=\{(\{[0-9,{} ]*\})\}")
+# iota form: replica_groups=[G,N]<=[512] or <=[2,16,16]T(1,0,2)
+_IOTA_RE = re.compile(
+    r"replica_groups=\[(\d+(?:,\d+)*)\]<=\[(\d+(?:,\d+)*)\]"
+    r"(?:T\((\d+(?:,\d+)*)\))?")
+_PAIRS_RE = re.compile(r"source_target_pairs=\{((?:\{\d+,\d+\},?)*)\}")
+
+
+def _iota_groups(groups_shape, src_shape, perm):
+    """Materialize device-id groups from the iota replica-group form."""
+    import numpy as np
+    ids = np.arange(int(np.prod(src_shape))).reshape(src_shape)
+    if perm is not None:
+        ids = ids.transpose(perm)
+    return ids.reshape(groups_shape)
+
+
+def shape_bytes(type_str: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def collective_stats(hlo_text: str, devices_per_pod: int = 0) -> Dict:
+    """Sum per-device collective bytes by op kind; flag cross-pod ops."""
+    by_kind: Dict[str, int] = {k: 0 for k in _COLLECTIVES}
+    cross_pod_bytes = 0
+    cross_pod_ops: List[str] = []
+    n_ops = 0
+    for line in hlo_text.splitlines():
+        m = _OP_RE.match(line)
+        if not m:
+            continue
+        if "-done(" in line:        # async pair: count only the start
+            continue
+        op, result = m.group("op"), m.group("result")
+        b = shape_bytes(result)
+        by_kind[op] += b
+        n_ops += 1
+        if devices_per_pod:
+            crosses = False
+            g = _GROUPS_RE.search(line)
+            if g:
+                for grp in re.findall(r"\{([0-9, ]+)\}", g.group(0)):
+                    pods = {int(x) // devices_per_pod
+                            for x in grp.replace(" ", "").split(",") if x}
+                    if len(pods) > 1:
+                        crosses = True
+                        break
+            gi = _IOTA_RE.search(line)
+            if gi and not crosses:
+                gshape = [int(x) for x in gi.group(1).split(",")]
+                sshape = [int(x) for x in gi.group(2).split(",")]
+                perm = ([int(x) for x in gi.group(3).split(",")]
+                        if gi.group(3) else None)
+                try:
+                    groups = _iota_groups(gshape, sshape, perm)
+                    pods = groups // devices_per_pod
+                    if (pods.min(axis=-1) != pods.max(axis=-1)).any():
+                        crosses = True
+                except Exception:   # noqa: BLE001 — malformed: be loud
+                    crosses = True
+            p = _PAIRS_RE.search(line)
+            if p:
+                for a, bb in re.findall(r"\{(\d+),(\d+)\}", p.group(0)):
+                    if int(a) // devices_per_pod != int(bb) // devices_per_pod:
+                        crosses = True
+                        break
+            if crosses:
+                cross_pod_bytes += b
+                cross_pod_ops.append(line.strip()[:160])
+    total = sum(by_kind.values())
+    return {"per_kind_bytes": by_kind, "total_bytes": total,
+            "n_ops": n_ops, "cross_pod_bytes": cross_pod_bytes,
+            "cross_pod_ops": cross_pod_ops}
+
+
+def extract_cost(compiled) -> Dict:
+    ca = compiled.cost_analysis() or {}
+    # jax cost_analysis returns a dict (sometimes list of dicts)
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0] if ca else {}
+    return {"flops": float(ca.get("flops", 0.0)),
+            "bytes_accessed": float(ca.get("bytes accessed", 0.0))}
+
+
+def extract_memory(compiled) -> Dict:
+    ms = compiled.memory_analysis()
+    if ms is None:
+        return {}
+    return {
+        "argument_bytes": ms.argument_size_in_bytes,
+        "output_bytes": ms.output_size_in_bytes,
+        "temp_bytes": ms.temp_size_in_bytes,
+        "alias_bytes": ms.alias_size_in_bytes,
+        "code_bytes": ms.generated_code_size_in_bytes,
+    }
+
+
+def hbm_per_device(mem: Dict) -> int:
+    """Live bytes per device: args + temps + outputs - donated aliases."""
+    if not mem:
+        return 0
+    return (mem["argument_bytes"] + mem["temp_bytes"]
+            + mem["output_bytes"] - mem["alias_bytes"])

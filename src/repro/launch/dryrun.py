@@ -1,0 +1,158 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+"""Multi-pod dry-run: lower + compile every (architecture x input shape)
+for the production meshes, with NO array allocation (ShapeDtypeStruct
+stand-ins for params, optimizer state, caches and batches).
+
+    PYTHONPATH=src python -m repro.launch.dryrun --arch llama3.2-3b \
+        --shape train_4k [--multi-pod] [--trunk-dp-pod]
+    PYTHONPATH=src python -m repro.launch.dryrun --all [--multi-pod]
+
+Writes one JSON artifact per combo to experiments/dryrun/ containing
+memory_analysis, cost_analysis and the parsed collective schedule — the
+inputs of the §Roofline analysis.
+"""
+import argparse
+import json
+import time
+import traceback
+
+import jax
+
+from repro.configs import SHAPES, get_config, get_shape, list_archs
+from repro.launch import analysis
+from repro.launch.mesh import make_production_mesh
+from repro.launch.steps import build, shape_supported
+from repro.sharding.specs import make_rules, named
+
+ART_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                       "experiments", "dryrun")
+
+
+def run_one(arch: str, shape_name: str, multi_pod: bool,
+            trunk_dp_over_pod: bool = False, out_dir: str = ART_DIR,
+            tag: str = "", verbose: bool = True, n_microbatches: int = 1,
+            ring_cache: bool = False, moe_groups: int = 0,
+            capacity_factor: float = 0.0, opt_bf16: bool = False,
+            cache_f8: bool = False):
+    import dataclasses
+    cfg = get_config(arch)
+    if cfg.moe is not None and (moe_groups or capacity_factor):
+        kw = {}
+        if moe_groups:
+            kw["dispatch_groups"] = moe_groups
+        if capacity_factor:
+            kw["capacity_factor"] = capacity_factor
+        cfg = cfg.replace(moe=dataclasses.replace(cfg.moe, **kw))
+    shape = get_shape(shape_name)
+    if not shape_supported(cfg, shape):
+        return {"arch": arch, "shape": shape_name, "status": "skipped",
+                "reason": f"long_context={cfg.long_context} (DESIGN.md §3)"}
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    rules = make_rules(mesh, cfg, trunk_dp_over_pod=trunk_dp_over_pod)
+    import jax.numpy as jnp
+    fn, args, specs, donate = build(
+        cfg, shape, mesh, rules, n_microbatches=n_microbatches,
+        ring_cache=ring_cache,
+        opt_state_dtype=jnp.bfloat16 if opt_bf16 else jnp.float32,
+        cache_dtype=jnp.float8_e4m3fn if cache_f8 else None)
+
+    t0 = time.time()
+    lowered = jax.jit(fn, in_shardings=named(mesh, specs),
+                      donate_argnums=donate).lower(*args)
+    t1 = time.time()
+    compiled = lowered.compile()
+    t2 = time.time()
+
+    mem = analysis.extract_memory(compiled)
+    cost = analysis.extract_cost(compiled)
+    txt = compiled.as_text()
+    colls = analysis.collective_stats(
+        txt, devices_per_pod=256 if multi_pod else 0)
+    colls.pop("cross_pod_ops", None) if not multi_pod else None
+
+    rec = {
+        "arch": arch, "shape": shape_name,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "n_devices": mesh.devices.size,
+        "trunk_dp_over_pod": trunk_dp_over_pod,
+        "n_microbatches": n_microbatches,
+        "status": "ok",
+        "lower_s": round(t1 - t0, 2), "compile_s": round(t2 - t1, 2),
+        "memory": mem,
+        "hbm_per_device_bytes": analysis.hbm_per_device(mem),
+        "cost": cost,
+        "collectives": {k: v for k, v in colls.items()
+                        if k != "cross_pod_ops"},
+        "cross_pod_ops_sample": colls.get("cross_pod_ops", [])[:8],
+    }
+    if verbose:
+        print(f"[{rec['mesh']}] {arch} x {shape_name}"
+              f"{' +trunk_dp_pod' if trunk_dp_over_pod else ''}: "
+              f"compile {rec['compile_s']}s, "
+              f"HBM/dev {rec['hbm_per_device_bytes']/2**30:.2f} GiB, "
+              f"flops {cost['flops']:.3e}, "
+              f"coll {colls['total_bytes']/2**20:.1f} MiB"
+              + (f" (cross-pod {colls['cross_pod_bytes']/2**20:.1f} MiB)"
+                 if multi_pod else ""))
+        print("  memory_analysis:", mem)
+        print("  cost_analysis:", cost)
+    if out_dir:
+        os.makedirs(out_dir, exist_ok=True)
+        suffix = "_tdp" if trunk_dp_over_pod else ""
+        tagp = f"_{tag}" if tag else ""
+        fn_out = os.path.join(
+            out_dir, f"{arch}_{shape_name}_{rec['mesh']}{suffix}{tagp}.json")
+        with open(fn_out, "w") as f:
+            json.dump(rec, f, indent=1)
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--trunk-dp-pod", action="store_true")
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--ring-cache", action="store_true")
+    ap.add_argument("--moe-groups", type=int, default=0)
+    ap.add_argument("--capacity-factor", type=float, default=0.0)
+    ap.add_argument("--opt-bf16", action="store_true")
+    ap.add_argument("--cache-f8", action="store_true")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--tag", default="")
+    ap.add_argument("--out", default=ART_DIR)
+    args = ap.parse_args()
+
+    archs = list_archs() if args.all or not args.arch else [args.arch]
+    shapes = list(SHAPES) if args.all or not args.shape else [args.shape]
+    meshes = [False, True] if args.both_meshes else [args.multi_pod]
+
+    failures = []
+    for mp in meshes:
+        for a in archs:
+            for s in shapes:
+                try:
+                    run_one(a, s, mp, args.trunk_dp_pod, args.out,
+                            args.tag, n_microbatches=args.microbatches,
+                            ring_cache=args.ring_cache,
+                            moe_groups=args.moe_groups,
+                            capacity_factor=args.capacity_factor,
+                            opt_bf16=args.opt_bf16,
+                            cache_f8=args.cache_f8)
+                except Exception as e:  # noqa: BLE001 — report, keep going
+                    traceback.print_exc()
+                    failures.append((a, s, mp, str(e)[:200]))
+    if failures:
+        print(f"\n{len(failures)} FAILURES:")
+        for f in failures:
+            print(" ", f)
+        raise SystemExit(1)
+    print("\nall dry-runs passed")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,122 @@
+"""Split-inference serving engine: request queue + wave batching.
+
+A deployer-facing layer over ``SplitModel.prefill``/``decode_step``:
+requests are queued, admitted in waves of ``batch_slots``, prefilled
+together through the owner heads (each owner contributes its vertical
+slice of every request's context), then decoded in lockstep until every
+request in the wave hits ``max_new`` or an EOS token.  Static shapes
+throughout (one compile per engine), per-wave padding, throughput
+accounting.
+
+This is the serving analogue of the paper's training protocol: context
+slices stay with their owners; only cut activations reach the scientist,
+who alone sees the generated text.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.model import SplitModel
+
+
+@dataclass
+class Request:
+    rid: int
+    tokens: np.ndarray            # (ctx,) int32 — the combined context
+    max_new: int = 16
+
+
+@dataclass
+class Result:
+    rid: int
+    generated: List[int] = field(default_factory=list)
+    latency_s: float = 0.0
+
+
+class ServingEngine:
+    def __init__(self, model: SplitModel, params, *, batch_slots: int = 4,
+                 ctx_len: int = 128, max_new: int = 32,
+                 eos_token: Optional[int] = None, ring_cache: bool = False,
+                 pad_token: int = 0):
+        cfg = model.cfg
+        if cfg.modality != "text":
+            raise ValueError("ServingEngine drives text archs")
+        self.model, self.params = model, params
+        self.B, self.S, self.max_new = batch_slots, ctx_len, max_new
+        self.P = cfg.split.n_owners
+        self.eos = eos_token
+        self.pad = pad_token
+        self.ring = ring_cache
+        self._queue: List[Request] = []
+        self._next_rid = 0
+        self._prefill = jax.jit(model.prefill)
+        self._decode = jax.jit(model.decode_step)
+        self.stats = {"waves": 0, "requests": 0, "tokens_generated": 0,
+                      "wall_s": 0.0}
+
+    def submit(self, tokens, max_new: Optional[int] = None) -> int:
+        tokens = np.asarray(tokens, np.int32)
+        if len(tokens) > self.S:
+            raise ValueError(f"context {len(tokens)} > engine ctx {self.S}")
+        rid = self._next_rid
+        self._next_rid += 1
+        self._queue.append(Request(rid, tokens, max_new or self.max_new))
+        return rid
+
+    def _owner_slices(self, batch_tokens: np.ndarray):
+        """(B, S) padded contexts -> (P, B, S_p) owner slices."""
+        B, S = batch_tokens.shape
+        return jnp.asarray(
+            batch_tokens.reshape(B, self.P, S // self.P).transpose(1, 0, 2))
+
+    def _run_wave(self, wave: List[Request]) -> List[Result]:
+        t0 = time.time()
+        B, S = self.B, self.S
+        toks = np.full((B, S), self.pad, np.int32)
+        for i, r in enumerate(wave):
+            toks[i, S - len(r.tokens):] = r.tokens   # left-pad: recency
+        caches = self.model.cache_init(B, S, n_new=self.max_new + 1,
+                                       ring=self.ring)
+        logits, caches = self._prefill(
+            self.params, {"owner_tokens": self._owner_slices(toks)}, caches)
+        tok = jnp.argmax(logits, -1)[:, None].astype(jnp.int32)
+
+        results = [Result(r.rid) for r in wave]
+        done = np.zeros(B, bool)
+        done[len(wave):] = True                      # empty slots
+        for t in range(self.max_new):
+            tk = np.asarray(tok[:, 0])
+            for i, r in enumerate(wave):
+                if not done[i]:
+                    results[i].generated.append(int(tk[i]))
+                    if (self.eos is not None and tk[i] == self.eos) or \
+                            len(results[i].generated) >= r.max_new:
+                        done[i] = True
+            self.stats["tokens_generated"] += int((~done[:len(wave)]).sum())
+            if done.all() or t == self.max_new - 1:
+                break
+            logits, caches = self._decode(self.params, caches, tok,
+                                          S + t, S // self.P + t)
+            tok = jnp.argmax(logits, -1)[:, None].astype(jnp.int32)
+        dt = time.time() - t0
+        for res in results:
+            res.latency_s = dt
+        self.stats["waves"] += 1
+        self.stats["requests"] += len(wave)
+        self.stats["wall_s"] += dt
+        return results
+
+    def run(self) -> Dict[int, Result]:
+        """Drain the queue; returns {request_id: Result}."""
+        out: Dict[int, Result] = {}
+        while self._queue:
+            wave, self._queue = (self._queue[:self.B], self._queue[self.B:])
+            for res in self._run_wave(wave):
+                out[res.rid] = res
+        return out

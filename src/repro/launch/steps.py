@@ -1,0 +1,220 @@
+"""Step builders: the jittable train / prefill / decode functions plus
+their ShapeDtypeStruct input stand-ins and shardings for a given
+(architecture x input-shape x mesh).
+
+Everything here is allocation-free: params/optimizer/caches are
+``jax.eval_shape`` structures, batches are ShapeDtypeStructs — the same
+pattern the multi-pod dry-run lowers.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig, ShapeConfig
+from repro.models.model import SplitModel
+from repro.optim import adam, apply_updates, chain, clip_by_global_norm
+from repro.sharding import (ShardingRules, batch_specs, cache_specs,
+                            param_specs, sharding_context)
+from repro.sharding.specs import make_rules, named
+
+
+def sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def swa_for(cfg: ArchConfig, shape: ShapeConfig) -> Optional[int]:
+    """The explicit sliding-window long-context variant (DESIGN.md §3)."""
+    if shape.name == "long_500k" and cfg.long_context == "swa":
+        return cfg.long_context_window
+    return None
+
+
+def shape_supported(cfg: ArchConfig, shape: ShapeConfig) -> bool:
+    if shape.name == "long_500k" and cfg.long_context == "skip":
+        return False
+    return True
+
+
+# ---------------------------------------------------------------------------
+# Input structs
+# ---------------------------------------------------------------------------
+
+
+def batch_structs(cfg: ArchConfig, shape: ShapeConfig,
+                  with_labels: bool) -> Dict[str, Any]:
+    B, S = shape.global_batch, shape.seq_len
+    half = S // 2
+    if cfg.modality == "text":
+        P = cfg.split.n_owners
+        b = {"owner_tokens": sds((P, B, S // P), jnp.int32)}
+        if with_labels:
+            b["labels"] = sds((B, S), jnp.int32)
+    elif cfg.modality == "vision_text":
+        b = {"patches": sds((B, half, cfg.d_frontend), jnp.bfloat16),
+             "tokens": sds((B, half), jnp.int32)}
+        if with_labels:
+            b["labels"] = sds((B, S), jnp.int32)
+    elif cfg.modality == "audio_text":
+        b = {"frames": sds((B, half, cfg.d_frontend), jnp.bfloat16),
+             "tokens": sds((B, half), jnp.int32)}
+        if with_labels:
+            b["labels"] = sds((B, half), jnp.int32)
+    else:
+        raise ValueError(cfg.modality)
+    return b
+
+
+def make_optimizer(cfg: ArchConfig, opt_state_dtype=jnp.float32):
+    return chain(clip_by_global_norm(1.0),
+                 adam(3e-4, state_dtype=opt_state_dtype))
+
+
+# ---------------------------------------------------------------------------
+# Builders — each returns (fn, args_structs, in_specs, donate_argnums)
+# ---------------------------------------------------------------------------
+
+
+def _split_micro(batch, n: int):
+    """Reshape every batch leaf to (n_micro, micro_batch, ...).  The owner
+    dim of owner_tokens (P, B, S_p) stays outermost within a microbatch."""
+    out = {}
+    for k, v in batch.items():
+        if k == "owner_tokens":
+            P, B, S_p = v.shape
+            out[k] = v.reshape(P, n, B // n, S_p).transpose(1, 0, 2, 3)
+        else:
+            out[k] = v.reshape((n, v.shape[0] // n) + v.shape[1:])
+    return out
+
+
+def build_train(cfg: ArchConfig, shape: ShapeConfig, mesh,
+                rules: ShardingRules, n_microbatches: int = 1,
+                opt_state_dtype=jnp.float32):
+    model = SplitModel(cfg)
+    optimizer = make_optimizer(cfg, opt_state_dtype)
+    swa = swa_for(cfg, shape)
+
+    def train_step(params, opt_state, batch, step):
+        def loss_fn(p, b):
+            return model.loss_fn(p, b, swa_override=swa)
+
+        with sharding_context(mesh, rules):
+            if n_microbatches == 1:
+                (loss, metrics), grads = jax.value_and_grad(
+                    loss_fn, has_aux=True)(params, batch)
+            else:
+                # gradient accumulation: one microbatch forward+backward at
+                # a time — activation live-set shrinks by n_microbatches.
+                micro = _split_micro(batch, n_microbatches)
+
+                def body(acc, mb):
+                    g_acc, l_acc = acc
+                    (l, _), g = jax.value_and_grad(
+                        loss_fn, has_aux=True)(params, mb)
+                    g_acc = jax.tree.map(
+                        lambda a, b: a + b.astype(jnp.float32), g_acc, g)
+                    return (g_acc, l_acc + l), None
+
+                g0 = jax.tree.map(
+                    lambda p: jnp.zeros(p.shape, jnp.float32), params)
+                (grads, loss), _ = jax.lax.scan(
+                    body, (g0, jnp.zeros((), jnp.float32)), micro)
+                inv = 1.0 / n_microbatches
+                grads = jax.tree.map(lambda g: g * inv, grads)
+                loss = loss * inv
+                metrics = {"loss": loss, "aux": jnp.zeros_like(loss)}
+            updates, opt_state_n = optimizer.update(grads, opt_state,
+                                                    params, step)
+            params_n = apply_updates(params, updates)
+        return params_n, opt_state_n, metrics
+
+    p_struct = model.param_specs()
+    o_struct = jax.eval_shape(optimizer.init, p_struct)
+    b_struct = batch_structs(cfg, shape, with_labels=True)
+    s_struct = sds((), jnp.int32)
+
+    p_spec = param_specs(p_struct, cfg, mesh, rules)
+    o_spec = _opt_specs(optimizer, p_struct, p_spec, cfg, mesh, rules)
+    b_spec = batch_specs(b_struct, cfg, mesh, rules)
+
+    args = (p_struct, o_struct, b_struct, s_struct)
+    specs = (p_spec, o_spec, b_spec, None)
+    return train_step, args, specs, (0, 1)
+
+
+def _opt_specs(optimizer, p_struct, p_spec, cfg, mesh, rules):
+    """Optimizer-state specs: same rules applied leaf-by-leaf (m/v mirror
+    params; empty chain states stay empty)."""
+    o_struct = jax.eval_shape(optimizer.init, p_struct)
+    return param_specs(o_struct, cfg, mesh, rules)
+
+
+def build_prefill(cfg: ArchConfig, shape: ShapeConfig, mesh,
+                  rules: ShardingRules, n_new: int = 8):
+    model = SplitModel(cfg)
+    swa = swa_for(cfg, shape)
+    B, S = shape.global_batch, shape.seq_len
+
+    def prefill(params, batch, caches):
+        with sharding_context(mesh, rules):
+            return model.prefill(params, batch, caches, swa_override=swa)
+
+    p_struct = model.param_specs()
+    b_struct = batch_structs(cfg, shape, with_labels=False)
+    c_struct = jax.eval_shape(
+        functools.partial(model.cache_init, B, S, n_new))
+
+    p_spec = param_specs(p_struct, cfg, mesh, rules)
+    b_spec = batch_specs(b_struct, cfg, mesh, rules)
+    c_spec = cache_specs(c_struct, cfg, mesh, rules)
+    args = (p_struct, b_struct, c_struct)
+    specs = (p_spec, b_spec, c_spec)
+    return prefill, args, specs, (2,)
+
+
+def build_decode(cfg: ArchConfig, shape: ShapeConfig, mesh,
+                 rules: ShardingRules, n_new: int = 8,
+                 ring_cache: bool = False, cache_dtype=None):
+    """serve_step: ONE new token against a seq_len-deep cache."""
+    model = SplitModel(cfg)
+    swa = swa_for(cfg, shape)
+    B, S = shape.global_batch, shape.seq_len
+
+    def serve_step(params, caches, token, pos, pos_local):
+        with sharding_context(mesh, rules):
+            return model.decode_step(params, caches, token, pos, pos_local,
+                                     swa_override=swa)
+
+    p_struct = model.param_specs()
+    c_struct = jax.eval_shape(
+        functools.partial(model.cache_init, B, S, n_new, ring=ring_cache,
+                          swa_override=swa or 0, cache_dtype=cache_dtype))
+    t_struct = sds((B, 1), jnp.int32)
+    s_struct = sds((), jnp.int32)
+
+    p_spec = param_specs(p_struct, cfg, mesh, rules)
+    c_spec = cache_specs(c_struct, cfg, mesh, rules)
+    t_spec = batch_specs({"token": t_struct}, cfg, mesh, rules)["token"]
+    args = (p_struct, c_struct, t_struct, s_struct, s_struct)
+    specs = (p_spec, c_spec, t_spec, None, None)
+    return serve_step, args, specs, (1,)
+
+
+def build(cfg: ArchConfig, shape: ShapeConfig, mesh, rules=None,
+          n_microbatches: int = 1, ring_cache: bool = False,
+          opt_state_dtype=jnp.float32, cache_dtype=None, **kw):
+    rules = rules if rules is not None else make_rules(mesh, cfg, **kw)
+    if shape.kind == "train":
+        return build_train(cfg, shape, mesh, rules,
+                           n_microbatches=n_microbatches,
+                           opt_state_dtype=opt_state_dtype)
+    if shape.kind == "prefill":
+        return build_prefill(cfg, shape, mesh, rules)
+    if shape.kind == "decode":
+        return build_decode(cfg, shape, mesh, rules,
+                            ring_cache=ring_cache, cache_dtype=cache_dtype)
+    raise ValueError(shape.kind)

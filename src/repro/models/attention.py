@@ -1,0 +1,220 @@
+"""Attention: GQA, causal/local/bidirectional masks, softcap, KV caches.
+
+The core ``attention`` function is flash-style: it never materializes the
+full (Sq, Skv) score matrix when Skv is large — it scans over KV chunks
+with an online-softmax accumulator.  This is also the jnp oracle for the
+Pallas ``block_attention`` kernel (kernels/block_attention/ref.py wraps it).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers
+
+NEG_INF = -2.0 ** 30  # large-but-finite: keeps padded-row softmax NaN-free
+
+
+def _mask(q_pos, kv_pos, kind: str, window: int, kv_len):
+    """Boolean mask (..., Sq, Skv): True = attend."""
+    pq = q_pos[..., :, None]
+    pk = kv_pos[..., None, :]
+    if kind == "bidir":
+        m = jnp.ones(jnp.broadcast_shapes(pq.shape, pk.shape), bool)
+    elif kind == "causal":
+        m = pk <= pq
+    elif kind == "local":
+        m = (pk <= pq) & (pk > pq - window)
+    else:
+        raise ValueError(kind)
+    if kv_len is not None:
+        m = m & (pk < kv_len)
+    return m
+
+
+def attention(q, k, v, *, kind: str = "causal", window: int = 0,
+              softcap: float = 0.0, q_offset=0, kv_len=None,
+              chunk: int = 1024, scale: Optional[float] = None):
+    """GQA attention.
+
+    q: (B, Sq, nh, hd);  k, v: (B, Skv, nkv, hd);  nh % nkv == 0.
+    ``q_offset``: position of q[0] (decode: current length-1).
+    ``kv_len``: number of valid cache entries (decode), None = all valid.
+    """
+    B, Sq, nh, hd = q.shape
+    Skv, nkv = k.shape[1], k.shape[2]
+    g = nh // nkv
+    scale = scale if scale is not None else hd ** -0.5
+    qf = (q.astype(jnp.float32) * scale).reshape(B, Sq, nkv, g, hd)
+    q_pos = q_offset + jnp.arange(Sq)
+
+    def scores_of(k_chunk, kv_pos):
+        s = jnp.einsum("bqkgh,bskh->bkgqs", qf, k_chunk.astype(jnp.float32))
+        if softcap > 0.0:
+            s = softcap_ * jnp.tanh(s / softcap_)
+        m = _mask(q_pos, kv_pos, kind, window, kv_len)     # (Sq, chunk)
+        return jnp.where(m[None, None, None], s, NEG_INF)
+
+    softcap_ = softcap
+
+    # Direct (non-chunked) path: small KV, or decode (Sq == 1, where the
+    # score tensor is linear in Skv and chunking would only force XLA to
+    # gather a sequence-sharded cache — flash-decode stays sharded here).
+    if Skv <= chunk or Sq == 1:
+        s = scores_of(k, jnp.arange(Skv))                  # (B,nkv,g,Sq,Skv)
+        p = jax.nn.softmax(s, axis=-1)
+        o = jnp.einsum("bkgqs,bskh->bqkgh", p, v.astype(jnp.float32))
+        return o.reshape(B, Sq, nh, hd).astype(q.dtype)
+
+    # --- online-softmax scan over KV chunks (flash-style) -----------------
+    n_chunks = -(-Skv // chunk)
+    pad = n_chunks * chunk - Skv
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    kc = k.reshape(B, n_chunks, chunk, nkv, hd).transpose(1, 0, 2, 3, 4)
+    vc = v.reshape(B, n_chunks, chunk, nkv, hd).transpose(1, 0, 2, 3, 4)
+    eff_len = kv_len if kv_len is not None else Skv
+
+    def body(carry, xs):
+        m_prev, l_prev, acc = carry
+        k_i, v_i, idx = xs
+        kv_pos = idx * chunk + jnp.arange(chunk)
+        s = scores_of(k_i, kv_pos)                         # (B,nkv,g,Sq,chunk)
+        m_cur = jnp.maximum(m_prev, jnp.max(s, axis=-1))
+        p = jnp.exp(s - m_cur[..., None])
+        corr = jnp.exp(m_prev - m_cur)
+        l_cur = l_prev * corr + jnp.sum(p, axis=-1)
+        pv = jnp.einsum("bkgqs,bskh->bkgqh", p, v_i.astype(jnp.float32))
+        acc = acc * corr[..., None] + pv
+        return (m_cur, l_cur, acc), None
+
+    init = (jnp.full((B, nkv, g, Sq), NEG_INF, jnp.float32),
+            jnp.zeros((B, nkv, g, Sq), jnp.float32),
+            jnp.zeros((B, nkv, g, Sq, hd), jnp.float32))
+    (m, l, acc), _ = jax.lax.scan(body, init,
+                                  (kc, vc, jnp.arange(n_chunks)))
+    del m, eff_len
+    o = acc / jnp.maximum(l[..., None], 1e-30)
+    o = o.transpose(0, 3, 1, 2, 4).reshape(B, Sq, nh, hd)
+    return o.astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Attention block (projections + rope + GQA) and KV cache
+# ---------------------------------------------------------------------------
+
+
+def attn_init(key, cfg, dtype=jnp.float32):
+    d, qd, kvd = cfg.d_model, cfg.q_dim, cfg.kv_dim
+    ks = jax.random.split(key, 4)
+    return {
+        "wq": layers.dense_init(ks[0], d, qd, dtype),
+        "wk": layers.dense_init(ks[1], d, kvd, dtype),
+        "wv": layers.dense_init(ks[2], d, kvd, dtype),
+        "wo": layers.dense_init(ks[3], qd, d, dtype),
+    }
+
+
+def init_kv_cache(batch: int, s_max: int, n_kv: int, head_dim: int,
+                  dtype=jnp.bfloat16):
+    return {"k": jnp.zeros((batch, s_max, n_kv, head_dim), dtype),
+            "v": jnp.zeros((batch, s_max, n_kv, head_dim), dtype)}
+
+
+def update_kv_cache(cache, k_new, v_new, pos):
+    """Write k/v (B, Sq, nkv, hd) at position ``pos`` (scalar)."""
+    idx = (0, pos, 0, 0)
+    return {"k": jax.lax.dynamic_update_slice(cache["k"],
+                                              k_new.astype(cache["k"].dtype), idx),
+            "v": jax.lax.dynamic_update_slice(cache["v"],
+                                              v_new.astype(cache["v"].dtype), idx)}
+
+
+def update_kv_cache_ring(cache, k_new, v_new, pos):
+    """Ring-buffer write for window-trimmed caches (W slots, W = window):
+    slot(p) = p mod W.  Sliding-window layers never need more than the
+    last W tokens, so the cache holds exactly the window — the §Perf
+    memory-term optimization for decode shapes.
+
+    Decode (Sq == 1): write at slot pos %% W.
+    Prefill (Sq >= W, pos == 0): keep only the last W tokens, rolled so
+    element at slot i has position p ≡ i (mod W).
+    """
+    W = cache["k"].shape[1]
+    Sq = k_new.shape[1]
+    if Sq == 1:
+        slot = jnp.asarray(pos) % W
+        idx = (0, slot, 0, 0)
+        return {"k": jax.lax.dynamic_update_slice(
+                    cache["k"], k_new.astype(cache["k"].dtype), idx),
+                "v": jax.lax.dynamic_update_slice(
+                    cache["v"], v_new.astype(cache["v"].dtype), idx)}
+    if Sq >= W:
+        kt = jnp.roll(k_new[:, -W:], Sq % W, axis=1)
+        vt = jnp.roll(v_new[:, -W:], Sq % W, axis=1)
+        return {"k": kt.astype(cache["k"].dtype),
+                "v": vt.astype(cache["v"].dtype)}
+    # short prefill from position `pos` (assumed no wrap)
+    return update_kv_cache(cache, k_new, v_new, pos)
+
+
+def attn_apply(params, x, *, cfg, kind: str, positions=None, window: int = 0,
+               cache=None, pos=None, kv_x=None, chunk: int = 1024):
+    """Full attention sub-layer (no norm/residual — caller owns those).
+
+    x: (B, Sq, d).  ``kv_x``: cross-attention source (B, Skv, d) — when
+    given, k/v come from it and the mask is bidirectional.
+    ``cache``/``pos``: decode-mode KV cache handling.
+    Returns (out, new_cache).
+    """
+    B, Sq, _ = x.shape
+    hd, nh, nkv = cfg.head_dim, cfg.n_heads, cfg.n_kv_heads
+    q = layers.dense_apply(params["wq"], x).reshape(B, Sq, nh, hd)
+    src = kv_x if kv_x is not None else x
+    k = layers.dense_apply(params["wk"], src).reshape(B, src.shape[1], nkv, hd)
+    v = layers.dense_apply(params["wv"], src).reshape(B, src.shape[1], nkv, hd)
+
+    if kv_x is not None:
+        kind = "bidir"
+
+    if positions is not None and cfg.rope != "none" and kv_x is None:
+        if cfg.rope == "mrope":
+            q = layers.apply_mrope(q, positions, cfg.rope_theta)
+            k = layers.apply_mrope(k, positions, cfg.rope_theta)
+        elif cfg.rope == "rope":
+            q = layers.apply_rope(q, positions, cfg.rope_theta)
+            k = layers.apply_rope(k, positions, cfg.rope_theta)
+        # sincos positions are added at the embedding, not rotary.
+
+    q_offset, kv_len = 0, None
+    if cache is not None:
+        # window-trimmed ring cache: a local-attention layer whose cache
+        # holds exactly `window` slots (slot = position mod W)
+        ring = (kind == "local" and window > 0
+                and cache["k"].shape[1] <= window)
+        if ring:
+            W = cache["k"].shape[1]
+            cache = update_kv_cache_ring(cache, k, v, pos)
+            if Sq == 1:
+                # ring slots are an arbitrary permutation of the last
+                # min(pos+1, W) positions — all inside the window, so the
+                # mask is just slot validity (RoPE was applied at write).
+                k, v = cache["k"], cache["v"]
+                kind, window = "bidir", 0
+                kv_len = jnp.minimum(pos + 1, W)
+            # prefill: attend over the in-call k/v with the plain local
+            # mask; the ring cache is storage for later decode steps.
+        else:
+            cache = update_kv_cache(cache, k, v, pos)
+            k, v = cache["k"], cache["v"]
+            q_offset = pos
+            kv_len = pos + Sq
+
+    out = attention(q, k.astype(q.dtype), v.astype(q.dtype), kind=kind,
+                    window=window, softcap=cfg.attn_softcap,
+                    q_offset=q_offset, kv_len=kv_len, chunk=chunk)
+    out = layers.dense_apply(params["wo"], out.reshape(B, Sq, nh * hd))
+    return out, cache

@@ -1,0 +1,33 @@
+"""MLP variants: SwiGLU / GeGLU (gated), GeLU, squared-ReLU (nemotron)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers
+
+
+def mlp_init(key, d: int, d_ff: int, kind: str, dtype=jnp.float32):
+    ks = jax.random.split(key, 3)
+    p = {"w_in": layers.dense_init(ks[0], d, d_ff, dtype),
+         "w_out": layers.dense_init(ks[1], d_ff, d, dtype)}
+    if kind in ("swiglu", "geglu"):
+        p["w_gate"] = layers.dense_init(ks[2], d, d_ff, dtype)
+    return p
+
+
+def mlp_apply(params, x, kind: str):
+    h = layers.dense_apply(params["w_in"], x)
+    if kind == "swiglu":
+        h = jax.nn.silu(layers.dense_apply(params["w_gate"], x)) * h
+    elif kind == "geglu":
+        h = jax.nn.gelu(layers.dense_apply(params["w_gate"], x),
+                        approximate=True) * h
+    elif kind == "gelu":
+        h = jax.nn.gelu(h, approximate=True)
+    elif kind == "relu2":
+        r = jax.nn.relu(h)
+        h = r * r
+    else:
+        raise ValueError(kind)
+    return layers.dense_apply(params["w_out"], h)

@@ -1,0 +1,190 @@
+"""Mixture-of-experts FFN with capacity-based token dispatch.
+
+GShard/Switch-style routing adapted for TPU: top-k routing, per-expert
+capacity ``C = ceil(T * k / E * capacity_factor)``, scatter dispatch to an
+(E, C, d) buffer, batched expert matmuls (einsum over the expert dim — this
+is what expert-parallel sharding over the "model" axis partitions), gather
+combine.  Overflowing tokens are dropped (their choice contributes zero),
+the standard capacity trade-off.
+
+Also returns the load-balance auxiliary loss (Switch-style f_e * P_e * E).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers, mlp as mlp_mod
+from repro.sharding.specs import constrain
+
+
+def moe_init(key, d: int, moe_cfg, mlp_kind: str, dtype=jnp.float32):
+    ks = jax.random.split(key, 5)
+    e, de = moe_cfg.n_experts, moe_cfg.d_expert
+    import numpy as np
+    s_in = 1.0 / np.sqrt(d)
+    s_out = 1.0 / np.sqrt(de)
+    p = {
+        "router": layers.dense_init(ks[0], d, e, dtype, scale=0.02),
+        "w_in": jax.random.normal(ks[1], (e, d, de), dtype) * s_in,
+        "w_out": jax.random.normal(ks[2], (e, de, d), dtype) * s_out,
+    }
+    if mlp_kind in ("swiglu", "geglu"):
+        p["w_gate"] = jax.random.normal(ks[3], (e, d, de), dtype) * s_in
+    if moe_cfg.n_shared:
+        d_sh = moe_cfg.n_shared * moe_cfg.d_shared
+        p["shared"] = mlp_mod.mlp_init(ks[4], d, d_sh, mlp_kind, dtype)
+    return p
+
+
+def capacity(n_tokens: int, moe_cfg) -> int:
+    c = int(n_tokens * moe_cfg.top_k / moe_cfg.n_experts
+            * moe_cfg.capacity_factor)
+    # large capacities round to 2048 so the capacity dim shards cleanly
+    # over the 16-way data axis (expert-parallel x capacity-parallel)
+    if c > 2048:
+        return -(-c // 2048) * 2048
+    return max(8, -(-c // 8) * 8)
+
+
+def moe_apply(params, x, moe_cfg, mlp_kind: str):
+    """x: (B, S, d) -> (out (B, S, d), aux_loss scalar)."""
+    if moe_cfg.dispatch_groups > 1:
+        return _moe_apply_grouped(params, x, moe_cfg, mlp_kind)
+    B, S, d = x.shape
+    T = B * S
+    E, K = moe_cfg.n_experts, moe_cfg.top_k
+    C = capacity(T, moe_cfg)
+    xf = x.reshape(T, d)
+
+    logits = (xf @ layers.cast(params["router"]["w"], xf.dtype)
+              ).astype(jnp.float32)                     # (T, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    top_w, top_e = jax.lax.top_k(probs, K)              # (T, K)
+    top_w = top_w / jnp.maximum(jnp.sum(top_w, -1, keepdims=True), 1e-9)
+
+    # -- position of each (choice, token) within its expert ----------------
+    # choice-major order: all first choices, then all second choices, ...
+    e_flat = top_e.T.reshape(T * K)                     # (T*K,)
+    onehot = jax.nn.one_hot(e_flat, E, dtype=jnp.int32)  # (T*K, E)
+    pos_in_e = jnp.cumsum(onehot, axis=0) - onehot
+    pos = jnp.sum(pos_in_e * onehot, axis=-1)           # (T*K,)
+    keep = pos < C
+    pos_safe = jnp.where(keep, pos, C)                  # overflow slot C
+
+    # -- dispatch: (E, C+1, d) scatter-add ---------------------------------
+    tok = jnp.tile(jnp.arange(T), K)
+    buf = jnp.zeros((E, C + 1, d), xf.dtype)
+    buf = buf.at[e_flat, pos_safe].add(xf[tok])
+    buf = buf[:, :C]                                    # drop overflow slot
+    buf = constrain(buf, "moe_buffer")                  # (E/mdl, C/data, d)
+
+    # -- expert compute (the expert-parallel einsums) -----------------------
+    h = jnp.einsum("ecd,edf->ecf", buf,
+                   layers.cast(params["w_in"], buf.dtype))
+    if mlp_kind in ("swiglu", "geglu"):
+        g = jnp.einsum("ecd,edf->ecf", buf,
+                       layers.cast(params["w_gate"], buf.dtype))
+        g = jax.nn.silu(g) if mlp_kind == "swiglu" else jax.nn.gelu(
+            g, approximate=True)
+        h = g * h
+    elif mlp_kind == "gelu":
+        h = jax.nn.gelu(h, approximate=True)
+    elif mlp_kind == "relu2":
+        r = jax.nn.relu(h)
+        h = r * r
+    out_buf = jnp.einsum("ecf,efd->ecd", h,
+                         layers.cast(params["w_out"], h.dtype))
+    out_buf = constrain(out_buf, "moe_buffer")
+
+    # -- combine: gather each kept choice back to its token -----------------
+    pos_g = jnp.where(keep, pos, 0)
+    gathered = out_buf[e_flat, pos_g]                   # (T*K, d)
+    w_flat = (top_w.T.reshape(T * K, 1) * keep[:, None]).astype(gathered.dtype)
+    contrib = (gathered * w_flat).reshape(K, T, d).sum(0)
+    out = contrib.reshape(B, S, d)
+
+    if moe_cfg.n_shared:
+        out = out + mlp_mod.mlp_apply(params["shared"], x, mlp_kind)
+
+    # -- Switch-style load-balance loss -------------------------------------
+    f_e = jnp.mean(jax.nn.one_hot(top_e[:, 0], E, dtype=jnp.float32), axis=0)
+    p_e = jnp.mean(probs, axis=0)
+    aux = E * jnp.sum(f_e * p_e) * moe_cfg.aux_loss_weight
+    return out, aux
+
+
+# ---------------------------------------------------------------------------
+# Group-local dispatch (§Perf): tokens are dispatched WITHIN G groups that
+# align with the data-axis shards, so the (G, E, C_g, d) buffer is sharded
+# on G and the scatter never crosses token shards — removing the giant
+# cross-shard all-reduce the global scatter induces (the dominant term of
+# the baseline MoE roofline).  Capacity is per-group (same drop trade-off
+# structure, granularity G-times finer).
+# ---------------------------------------------------------------------------
+
+
+def _moe_apply_grouped(params, x, moe_cfg, mlp_kind: str):
+    B, S, d = x.shape
+    T = B * S
+    G = moe_cfg.dispatch_groups
+    E, K = moe_cfg.n_experts, moe_cfg.top_k
+    Tg = T // G
+    Cg = capacity(Tg, moe_cfg)
+    xg = x.reshape(G, Tg, d)
+
+    router_w = layers.cast(params["router"]["w"], x.dtype)
+
+    def route_one(xt):
+        """xt: (Tg, d) -> (buf (E, Cg, d), combine metadata)."""
+        logits = (xt @ router_w).astype(jnp.float32)          # (Tg, E)
+        probs = jax.nn.softmax(logits, axis=-1)
+        top_w, top_e = jax.lax.top_k(probs, K)
+        top_w = top_w / jnp.maximum(jnp.sum(top_w, -1, keepdims=True), 1e-9)
+        e_flat = top_e.T.reshape(Tg * K)
+        onehot = jax.nn.one_hot(e_flat, E, dtype=jnp.int32)
+        pos = jnp.sum((jnp.cumsum(onehot, axis=0) - onehot) * onehot, -1)
+        keep = pos < Cg
+        pos_safe = jnp.where(keep, pos, Cg)
+        tok = jnp.tile(jnp.arange(Tg), K)
+        buf = jnp.zeros((E, Cg + 1, d), xt.dtype)
+        buf = buf.at[e_flat, pos_safe].add(xt[tok])
+        return (buf[:, :Cg], e_flat, jnp.where(keep, pos, 0),
+                (top_w.T.reshape(Tg * K, 1) * keep[:, None]), probs, top_e)
+
+    buf, e_flat, pos_g, w_flat, probs, top_e = jax.vmap(route_one)(xg)
+    buf = constrain(buf, "moe_buffer_grouped")            # (G, E, Cg, d)
+
+    h = jnp.einsum("gecd,edf->gecf", buf,
+                   layers.cast(params["w_in"], buf.dtype))
+    if mlp_kind in ("swiglu", "geglu"):
+        g = jnp.einsum("gecd,edf->gecf", buf,
+                       layers.cast(params["w_gate"], buf.dtype))
+        g = jax.nn.silu(g) if mlp_kind == "swiglu" else jax.nn.gelu(
+            g, approximate=True)
+        h = g * h
+    elif mlp_kind == "gelu":
+        h = jax.nn.gelu(h, approximate=True)
+    elif mlp_kind == "relu2":
+        r = jax.nn.relu(h)
+        h = r * r
+    out_buf = jnp.einsum("gecf,efd->gecd", h,
+                         layers.cast(params["w_out"], h.dtype))
+    out_buf = constrain(out_buf, "moe_buffer_grouped")
+
+    def combine_one(ob, ef, pg, wf):
+        gathered = ob[ef, pg]                             # (Tg*K, d)
+        return (gathered * wf.astype(gathered.dtype)).reshape(
+            K, Tg, d).sum(0)
+
+    out = jax.vmap(combine_one)(out_buf, e_flat, pos_g, w_flat)
+    out = out.reshape(B, S, d)
+
+    if moe_cfg.n_shared:
+        out = out + mlp_mod.mlp_apply(params["shared"], x, mlp_kind)
+
+    f_e = jnp.mean(jax.nn.one_hot(top_e[..., 0].reshape(-1), E,
+                                  dtype=jnp.float32), axis=0)
+    p_e = jnp.mean(probs.reshape(-1, E), axis=0)
+    aux = E * jnp.sum(f_e * p_e) * moe_cfg.aux_loss_weight
+    return out, aux

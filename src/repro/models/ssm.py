@@ -1,0 +1,201 @@
+"""Mamba2 (SSD) block — chunked state-space-dual algorithm in pure JAX.
+
+This is the jnp oracle for the ``mamba2_scan`` Pallas kernel.  The chunked
+SSD computation (Dao & Gu 2024): within-chunk quadratic term + inter-chunk
+state recurrence carried by a ``lax.scan``, so compiled HLO size is
+independent of sequence length.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import layers
+
+
+# ---------------------------------------------------------------------------
+# Causal depthwise conv1d (with decode state)
+# ---------------------------------------------------------------------------
+
+
+def conv1d_apply(w, x, state=None):
+    """Depthwise causal conv.  w: (W, C); x: (B, S, C).
+
+    ``state``: (B, W-1, C) previous inputs for decode.  Returns (y, new_state).
+    """
+    W = w.shape[0]
+    if state is None:
+        x_pad = jnp.pad(x, ((0, 0), (W - 1, 0), (0, 0)))
+    else:
+        x_pad = jnp.concatenate([state.astype(x.dtype), x], axis=1)
+    y = sum(x_pad[:, i:i + x.shape[1]] * layers.cast(w[i], x.dtype)
+            for i in range(W))
+    new_state = x_pad[:, -(W - 1):] if W > 1 else state
+    return y, new_state
+
+
+# ---------------------------------------------------------------------------
+# SSD core
+# ---------------------------------------------------------------------------
+
+
+def ssd_chunked(x, dt, A, B_in, C_in, chunk: int, initial_state=None):
+    """Chunked SSD scan.
+
+    x: (B, S, H, P)   per-head inputs
+    dt: (B, S, H)     positive step sizes
+    A: (H,)           negative per-head decay rates
+    B_in, C_in: (B, S, G, N)   input/output projections (G groups, H%G==0)
+    Returns (y (B,S,H,P), final_state (B,H,N,P)).
+    """
+    Bb, S, H, P = x.shape
+    G, N = B_in.shape[2], B_in.shape[3]
+    rep = H // G
+    L = min(chunk, S)
+    nc = -(-S // L)
+    pad = nc * L - S
+    f32 = jnp.float32
+
+    def padded(a):
+        if pad:
+            a = jnp.pad(a, [(0, 0), (0, pad)] + [(0, 0)] * (a.ndim - 2))
+        return a.astype(f32)
+
+    xc = padded(x).reshape(Bb, nc, L, H, P)
+    dtc = padded(dt).reshape(Bb, nc, L, H)
+    Bc = padded(B_in).reshape(Bb, nc, L, G, N)
+    Cc = padded(C_in).reshape(Bb, nc, L, G, N)
+    Bh = jnp.repeat(Bc, rep, axis=3)                      # (B,nc,L,H,N)
+    Ch = jnp.repeat(Cc, rep, axis=3)
+
+    if initial_state is None:
+        s0 = jnp.zeros((Bb, H, N, P), f32)
+    else:
+        s0 = initial_state.astype(f32)
+
+    mask = jnp.tril(jnp.ones((L, L), bool))
+    Af = A.astype(f32)
+
+    # One chunk per scan step: bounds live memory to a single chunk — the
+    # same structure the Pallas kernel uses (sequential grid + VMEM carry).
+    def body(s_prev, xs):
+        xk, dtk, Bk, Ck = xs        # (B,L,H,P) (B,L,H) (B,L,H,N) (B,L,H,N)
+        a = dtk * Af                                      # (B,L,H) ≤ 0
+        cum = jnp.cumsum(a, axis=1)                       # inclusive
+        total = cum[:, -1]                                # (B,H)
+        # within-chunk quadratic term: L_ij = exp(cum_i - cum_j), j ≤ i.
+        # Mask BEFORE the exp: the j > i entries are positive and overflow
+        # to inf, which would poison the backward pass through `where`.
+        diff = cum[:, :, None, :] - cum[:, None, :, :]    # (B,i,j,H)
+        Ldec = jnp.exp(jnp.where(mask[None, :, :, None], diff, -jnp.inf))
+        scores = jnp.einsum("blhn,bmhn->blmh", Ck, Bk)    # (B,i,j,H)
+        M = scores * Ldec * dtk[:, None, :, :]            # weight dt_j
+        y_intra = jnp.einsum("blmh,bmhp->blhp", M, xk)
+        # inter-chunk term from carried state
+        y_inter = jnp.einsum("blhn,bhnp->blhp",
+                             Ck * jnp.exp(cum)[..., None], s_prev)
+        # chunk state contribution + recurrence
+        w = jnp.exp(total[:, None] - cum) * dtk           # (B,L,H)
+        state_c = jnp.einsum("blh,blhn,blhp->bhnp", w, Bk, xk)
+        s_next = jnp.exp(total)[..., None, None] * s_prev + state_c
+        return s_next, y_intra + y_inter
+
+    xs = (xc.transpose(1, 0, 2, 3, 4), dtc.transpose(1, 0, 2, 3),
+          Bh.transpose(1, 0, 2, 3, 4), Ch.transpose(1, 0, 2, 3, 4))
+    s_fin, yc = jax.lax.scan(body, s0, xs)                # yc: (nc,B,L,H,P)
+    y = yc.transpose(1, 0, 2, 3, 4).reshape(Bb, nc * L, H, P)[:, :S]
+    return y.astype(x.dtype), s_fin
+
+
+def ssd_step(x, dt, A, B_in, C_in, state):
+    """Single decode step.  x: (B,1,H,P); state: (B,H,N,P)."""
+    f32 = jnp.float32
+    H = x.shape[2]
+    G = B_in.shape[2]
+    rep = H // G
+    xf = x[:, 0].astype(f32)                              # (B,H,P)
+    dtf = dt[:, 0].astype(f32)                            # (B,H)
+    Bh = jnp.repeat(B_in[:, 0].astype(f32), rep, axis=1)  # (B,H,N)
+    Ch = jnp.repeat(C_in[:, 0].astype(f32), rep, axis=1)
+    decay = jnp.exp(dtf * A.astype(f32))                  # (B,H)
+    upd = jnp.einsum("bh,bhn,bhp->bhnp", dtf, Bh, xf)
+    new_state = decay[..., None, None] * state.astype(f32) + upd
+    y = jnp.einsum("bhn,bhnp->bhp", Ch, new_state)
+    return y[:, None].astype(x.dtype), new_state
+
+
+# ---------------------------------------------------------------------------
+# Mamba2 block
+# ---------------------------------------------------------------------------
+
+
+def mamba2_init(key, cfg, dtype=jnp.float32):
+    s = cfg.ssm
+    d = cfg.d_model
+    d_in = s.expand * d
+    H = d_in // s.head_dim
+    conv_ch = d_in + 2 * s.n_groups * s.d_state
+    ks = jax.random.split(key, 6)
+    return {
+        # fused input projection: [z, x, B, C, dt]
+        "in_proj": layers.dense_init(
+            ks[0], d, 2 * d_in + 2 * s.n_groups * s.d_state + H, dtype),
+        "conv_w": jax.random.normal(ks[1], (s.d_conv, conv_ch), dtype) * 0.2,
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, H).astype(dtype)),
+        "dt_bias": jnp.zeros((H,), dtype),
+        "D": jnp.ones((H,), dtype),
+        "gate_norm": layers.norm_init(d_in, "rmsnorm", dtype),
+        "out_proj": layers.dense_init(ks[2], d_in, d, dtype),
+    }
+
+
+def mamba2_cache_init(batch: int, cfg, dtype=jnp.float32):
+    s = cfg.ssm
+    d_in = s.expand * cfg.d_model
+    H = d_in // s.head_dim
+    conv_ch = d_in + 2 * s.n_groups * s.d_state
+    return {"conv": jnp.zeros((batch, s.d_conv - 1, conv_ch), dtype),
+            "state": jnp.zeros((batch, H, s.d_state, s.head_dim), dtype)}
+
+
+def mamba2_apply(params, x, cfg, cache=None):
+    """x: (B, S, d) -> (y (B, S, d), new_cache)."""
+    s = cfg.ssm
+    Bb, S, d = x.shape
+    d_in = s.expand * d
+    H = d_in // s.head_dim
+    gn = s.n_groups * s.d_state
+
+    zxbcdt = layers.dense_apply(params["in_proj"], x)
+    z, xin, Bm, Cm, dt = jnp.split(
+        zxbcdt, [d_in, 2 * d_in, 2 * d_in + gn, 2 * d_in + 2 * gn], axis=-1)
+
+    conv_in = jnp.concatenate([xin, Bm, Cm], axis=-1)
+    conv_state = cache["conv"] if cache is not None else None
+    conv_out, new_conv = conv1d_apply(params["conv_w"], conv_in, conv_state)
+    conv_out = jax.nn.silu(conv_out)
+    xin, Bm, Cm = jnp.split(conv_out, [d_in, d_in + gn], axis=-1)
+
+    dt = jax.nn.softplus(dt.astype(jnp.float32)
+                         + params["dt_bias"].astype(jnp.float32))
+    A = -jnp.exp(params["A_log"].astype(jnp.float32))
+    xh = xin.reshape(Bb, S, H, s.head_dim)
+    Bm = Bm.reshape(Bb, S, s.n_groups, s.d_state)
+    Cm = Cm.reshape(Bb, S, s.n_groups, s.d_state)
+
+    if cache is not None and S == 1:          # decode: single-step recurrence
+        y, new_state = ssd_step(xh, dt, A, Bm, Cm, cache["state"])
+    else:                                     # train / prefill: chunked scan
+        init = cache["state"] if cache is not None else None
+        y, new_state = ssd_chunked(xh, dt, A, Bm, Cm, s.chunk_size,
+                                   initial_state=init)
+
+    y = y + params["D"].astype(jnp.float32)[None, None, :, None] \
+        * xh.astype(jnp.float32)
+    y = y.reshape(Bb, S, d_in).astype(x.dtype)
+    y = layers.norm_apply(params["gate_norm"], y * jax.nn.silu(z), "rmsnorm")
+    out = layers.dense_apply(params["out_proj"], y)
+    new_cache = ({"conv": new_conv, "state": new_state.astype(
+        cache["state"].dtype)} if cache is not None else None)
+    return out, new_cache

@@ -1,0 +1,293 @@
+"""xLSTM blocks: mLSTM (chunked parallel, matrix memory) and sLSTM
+(sequential scan, scalar memory with exponential gating) [arXiv:2405.04517].
+
+Both use max-state stabilization of the exponential gates.  The mLSTM is a
+gated linear-attention recurrence and is computed chunkwise (one chunk per
+scan step), so HLO size and live memory are sequence-length independent.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import layers
+from repro.models.ssm import conv1d_apply
+
+NEG = -2.0 ** 30
+
+
+# ---------------------------------------------------------------------------
+# mLSTM core (chunkwise parallel with (C, n, m) carry)
+# ---------------------------------------------------------------------------
+
+
+def mlstm_chunked(q, k, v, i_raw, f_raw, chunk: int, carry=None):
+    """q,k,v: (B, S, H, D); i_raw, f_raw: (B, S, H).
+
+    Returns (y (B,S,H,D), carry=(C (B,H,D,D), n (B,H,D), m (B,H))).
+    """
+    Bb, S, H, D = q.shape
+    f32 = jnp.float32
+    L = min(chunk, S)
+    nc = -(-S // L)
+    pad = nc * L - S
+
+    def padded(a, fill=0.0):
+        if pad:
+            a = jnp.pad(a, [(0, 0), (0, pad)] + [(0, 0)] * (a.ndim - 2),
+                        constant_values=fill)
+        return a.astype(f32)
+
+    qc = padded(q).reshape(Bb, nc, L, H, D).transpose(1, 0, 2, 3, 4)
+    kc = padded(k).reshape(Bb, nc, L, H, D).transpose(1, 0, 2, 3, 4)
+    vc = padded(v).reshape(Bb, nc, L, H, D).transpose(1, 0, 2, 3, 4)
+    # pad f with 0 raw -> logsigmoid(0) ≈ -0.69 decay; pad i with NEG (no input)
+    ic = padded(i_raw, NEG).reshape(Bb, nc, L, H).transpose(1, 0, 2, 3)
+    fc = padded(f_raw).reshape(Bb, nc, L, H).transpose(1, 0, 2, 3)
+
+    if carry is None:
+        C0 = jnp.zeros((Bb, H, D, D), f32)
+        n0 = jnp.zeros((Bb, H, D), f32)
+        m0 = jnp.full((Bb, H), NEG, f32)
+    else:
+        C0, n0, m0 = (c.astype(f32) for c in carry)
+
+    scale = D ** -0.5
+    tri = jnp.tril(jnp.ones((L, L), bool))
+
+    def body(c, xs):
+        Cp, np_, mp = c
+        qk_, kk, vk, ik, fk = xs
+        logf = jax.nn.log_sigmoid(fk)                    # (B,L,H)
+        b = jnp.cumsum(logf, axis=1)                     # inclusive
+        # intra log-weights w_ij = b_i - logf_i? standard: decay from j+1..i
+        # state after step j carries to i via sum_{t=j+1..i} logf_t = b_i - b_j
+        wij = b[:, :, None, :] - b[:, None, :, :] \
+            + ik[:, None, :, :]                          # (B,i,j,H)
+        wij = jnp.where(tri[None, :, :, None], wij, NEG)
+        u = b + mp[:, None, :]                           # (B,L,H) inter weight
+        m_new = jnp.maximum(jnp.max(wij, axis=2), u)     # (B,L,H)
+        m_new = jnp.maximum(m_new, -m_new * 0 + NEG / 2)  # clamp
+        w = jnp.exp(wij - m_new[:, :, None, :])          # (B,i,j,H)
+        inter = jnp.exp(u - m_new)                       # (B,L,H)
+
+        s = jnp.einsum("blhd,bmhd->blmh", qk_ * scale, kk)  # (B,i,j,H)
+        num = jnp.einsum("blmh,blmh,bmhd->blhd", s, w, vk) \
+            + inter[..., None] * jnp.einsum("blhd,bhde->blhe", qk_ * scale, Cp)
+        den = jnp.einsum("blmh,blmh->blh", s, w) \
+            + inter * jnp.einsum("blhd,bhd->blh", qk_ * scale, np_)
+        y = num / jnp.maximum(jnp.abs(den), jnp.exp(-m_new))[..., None]
+
+        # carry update
+        btot = b[:, -1]                                  # (B,H)
+        wlast = btot[:, None, :] - b + ik                # (B,L,H)
+        m_next = jnp.maximum(btot + mp, jnp.max(wlast, axis=1))
+        wl = jnp.exp(wlast - m_next[:, None, :])
+        Cn = jnp.exp(btot + mp - m_next)[..., None, None] * Cp \
+            + jnp.einsum("blh,blhd,blhe->bhde", wl, kk, vk)
+        nn = jnp.exp(btot + mp - m_next)[..., None] * np_ \
+            + jnp.einsum("blh,blhd->bhd", wl, kk)
+        return (Cn, nn, m_next), y
+
+    (Cf, nf, mf), yc = jax.lax.scan(body, (C0, n0, m0), (qc, kc, vc, ic, fc))
+    y = yc.transpose(1, 0, 2, 3, 4).reshape(Bb, nc * L, H, D)[:, :S]
+    return y.astype(q.dtype), (Cf, nf, mf)
+
+
+def mlstm_step(q, k, v, i_raw, f_raw, carry):
+    """Single decode step.  q,k,v: (B,1,H,D); carry=(C,n,m)."""
+    f32 = jnp.float32
+    D = q.shape[-1]
+    Cp, np_, mp = (c.astype(f32) for c in carry)
+    qf = q[:, 0].astype(f32) * (D ** -0.5)
+    kf, vf = k[:, 0].astype(f32), v[:, 0].astype(f32)
+    ik, fk = i_raw[:, 0].astype(f32), f_raw[:, 0].astype(f32)
+    logf = jax.nn.log_sigmoid(fk)
+    m_new = jnp.maximum(logf + mp, ik)
+    fdec = jnp.exp(logf + mp - m_new)
+    iin = jnp.exp(ik - m_new)
+    Cn = fdec[..., None, None] * Cp + iin[..., None, None] \
+        * jnp.einsum("bhd,bhe->bhde", kf, vf)
+    nn = fdec[..., None] * np_ + iin[..., None] * kf
+    num = jnp.einsum("bhd,bhde->bhe", qf, Cn)
+    den = jnp.einsum("bhd,bhd->bh", qf, nn)
+    y = num / jnp.maximum(jnp.abs(den), jnp.exp(-m_new))[..., None]
+    return y[:, None].astype(q.dtype), (Cn, nn, m_new)
+
+
+# ---------------------------------------------------------------------------
+# mLSTM block
+# ---------------------------------------------------------------------------
+
+
+def mlstm_init(key, cfg, dtype=jnp.float32):
+    x = cfg.xlstm
+    d = cfg.d_model
+    d_in = int(x.m_proj_factor * d)
+    ks = jax.random.split(key, 8)
+    return {
+        "up_x": layers.dense_init(ks[0], d, d_in, dtype),
+        "up_z": layers.dense_init(ks[1], d, d_in, dtype),
+        "conv_w": jax.random.normal(ks[2], (x.conv_width, d_in), dtype) * 0.2,
+        "wq": layers.dense_init(ks[3], d_in, d_in, dtype),
+        "wk": layers.dense_init(ks[4], d_in, d_in, dtype),
+        "wv": layers.dense_init(ks[5], d_in, d_in, dtype),
+        "w_if": layers.dense_init(ks[6], d_in, 2 * cfg.n_heads, dtype,
+                                  scale=0.02),
+        "if_bias": jnp.concatenate([jnp.zeros((cfg.n_heads,), dtype),
+                                    jnp.ones((cfg.n_heads,), dtype) * 3.0]),
+        "out_norm": layers.norm_init(d_in, "rmsnorm", dtype),
+        "down": layers.dense_init(ks[7], d_in, d, dtype),
+    }
+
+
+def mlstm_cache_init(batch: int, cfg, dtype=jnp.float32):
+    x = cfg.xlstm
+    d_in = int(x.m_proj_factor * cfg.d_model)
+    H = cfg.n_heads
+    D = d_in // H
+    return {"conv": jnp.zeros((batch, x.conv_width - 1, d_in), dtype),
+            "C": jnp.zeros((batch, H, D, D), dtype),
+            "n": jnp.zeros((batch, H, D), dtype),
+            "m": jnp.full((batch, H), NEG, dtype)}
+
+
+def mlstm_apply(params, x, cfg, cache=None):
+    xc = cfg.xlstm
+    Bb, S, d = x.shape
+    H = cfg.n_heads
+    d_in = int(xc.m_proj_factor * d)
+    D = d_in // H
+    xi = layers.dense_apply(params["up_x"], x)
+    z = layers.dense_apply(params["up_z"], x)
+    conv_state = cache["conv"] if cache is not None else None
+    xconv, new_conv = conv1d_apply(params["conv_w"], xi, conv_state)
+    xconv = jax.nn.silu(xconv)
+    q = layers.dense_apply(params["wq"], xconv).reshape(Bb, S, H, D)
+    k = layers.dense_apply(params["wk"], xconv).reshape(Bb, S, H, D)
+    v = layers.dense_apply(params["wv"], xi).reshape(Bb, S, H, D)
+    gates = layers.dense_apply(params["w_if"], xconv) \
+        + layers.cast(params["if_bias"], x.dtype)
+    i_raw, f_raw = jnp.split(gates, 2, axis=-1)           # (B,S,H)
+
+    if cache is not None and S == 1:          # decode
+        carry = (cache["C"], cache["n"], cache["m"])
+        y, (Cf, nf, mf) = mlstm_step(q, k, v, i_raw, f_raw, carry)
+    else:                                     # train / prefill
+        carry = ((cache["C"], cache["n"], cache["m"])
+                 if cache is not None else None)
+        y, (Cf, nf, mf) = mlstm_chunked(q, k, v, i_raw, f_raw, xc.chunk_size,
+                                        carry=carry)
+
+    y = y.reshape(Bb, S, d_in)
+    y = layers.norm_apply(params["out_norm"], y, "rmsnorm")
+    y = y * jax.nn.silu(z)
+    out = layers.dense_apply(params["down"], y)
+    new_cache = None
+    if cache is not None:
+        new_cache = {"conv": new_conv,
+                     "C": Cf.astype(cache["C"].dtype),
+                     "n": nf.astype(cache["n"].dtype),
+                     "m": mf.astype(cache["m"].dtype)}
+    return out, new_cache
+
+
+# ---------------------------------------------------------------------------
+# sLSTM block (true sequential recurrence)
+# ---------------------------------------------------------------------------
+
+
+def slstm_init(key, cfg, dtype=jnp.float32):
+    x = cfg.xlstm
+    d = cfg.d_model
+    H = cfg.n_heads
+    hd = d // H
+    d_ff = int(x.s_proj_factor * d)
+    ks = jax.random.split(key, 4)
+    return {
+        # 4 gates (i, f, z, o) from input ...
+        "w_gates": layers.dense_init(ks[0], d, 4 * d, dtype),
+        # ... and per-head recurrent connections from h_{t-1}
+        "r_gates": jax.random.normal(ks[1], (H, hd, 4 * hd), dtype)
+        / np.sqrt(hd),
+        "gate_bias": jnp.zeros((4 * d,), dtype),
+        "up": layers.dense_init(ks[2], d, d_ff, dtype),
+        "down": layers.dense_init(ks[3], d_ff, d, dtype),
+    }
+
+
+def slstm_cache_init(batch: int, cfg, dtype=jnp.float32):
+    d = cfg.d_model
+    H = cfg.n_heads
+    hd = d // H
+    z = jnp.zeros((batch, H, hd), dtype)
+    return {"c": z, "n": z, "h": z,
+            "m": jnp.full((batch, H, hd), NEG, dtype)}
+
+
+def _slstm_cell(gx, state, r_gates):
+    """One recurrence step.  gx: (B, H, 4*hd) input-side gate preacts."""
+    c, n, h, m = state
+    f32 = jnp.float32
+    hd = h.shape[-1]
+    gr = jnp.einsum("bhd,hde->bhe", h, r_gates)           # (B,H,4*hd)
+    g = (gx + gr).astype(f32)
+    gi, gf, gz, go = jnp.split(g, 4, axis=-1)             # (B,H,hd) each
+    m_new = jnp.maximum(gf + m, gi)                       # exp-gate stabilizer
+    i = jnp.exp(gi - m_new)
+    f = jnp.exp(gf + m - m_new)
+    z = jnp.tanh(gz)
+    o = jax.nn.sigmoid(go)
+    c_new = f * c + i * z
+    n_new = f * n + i
+    h_new = o * c_new / jnp.maximum(n_new, 1.0)
+    return (c_new, n_new, h_new.astype(h.dtype), m_new)
+
+
+def slstm_apply(params, x, cfg, cache=None):
+    Bb, S, d = x.shape
+    H = cfg.n_heads
+    hd = d // H
+    gx = layers.dense_apply(params["w_gates"], x) \
+        + layers.cast(params["gate_bias"], x.dtype)
+    gx = gx.reshape(Bb, S, H, 4 * hd)
+    r = layers.cast(params["r_gates"], jnp.float32)
+
+    if cache is not None and S == 1:          # decode
+        st = (cache["c"].astype(jnp.float32), cache["n"].astype(jnp.float32),
+              cache["h"], cache["m"].astype(jnp.float32))
+        st = _slstm_cell(gx[:, 0], st, r)
+        y = st[2][:, None]                                # (B,1,H,hd)
+        new_cache = {"c": st[0].astype(cache["c"].dtype),
+                     "n": st[1].astype(cache["n"].dtype),
+                     "h": st[2],
+                     "m": st[3].astype(cache["m"].dtype)}
+    else:                                     # train / prefill
+        if cache is not None:
+            st0 = (cache["c"].astype(jnp.float32),
+                   cache["n"].astype(jnp.float32), cache["h"],
+                   cache["m"].astype(jnp.float32))
+        else:
+            z = jnp.zeros((Bb, H, hd), jnp.float32)
+            st0 = (z, z, z.astype(x.dtype),
+                   jnp.full((Bb, H, hd), NEG, jnp.float32))
+
+        def body(st, gxt):
+            st = _slstm_cell(gxt, st, r)
+            return st, st[2]
+
+        stf, ys = jax.lax.scan(body, st0, gx.transpose(1, 0, 2, 3))
+        y = ys.transpose(1, 0, 2, 3)                      # (B,S,H,hd)
+        new_cache = None
+        if cache is not None:
+            new_cache = {"c": stf[0].astype(cache["c"].dtype),
+                         "n": stf[1].astype(cache["n"].dtype),
+                         "h": stf[2],
+                         "m": stf[3].astype(cache["m"].dtype)}
+
+    y = y.reshape(Bb, -1, d)
+    h = layers.dense_apply(params["up"], y)
+    h = jax.nn.gelu(h, approximate=True)
+    out = layers.dense_apply(params["down"], h)
+    return out, new_cache

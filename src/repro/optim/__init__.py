@@ -1,0 +1,3 @@
+from repro.optim.optimizers import (adam, adamw, sgd, chain,  # noqa: F401
+                                    clip_by_global_norm, apply_updates,
+                                    multi_segment, warmup_cosine, constant)

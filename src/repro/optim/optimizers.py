@@ -1,0 +1,174 @@
+"""Minimal optax-style optimizers built on pure JAX.
+
+An optimizer is ``(init, update)``: ``state = init(params)``;
+``updates, state = update(grads, state, params, step)``; apply with
+``params = apply_updates(params, updates)``.
+
+``multi_segment`` is the PyVertical-specific piece: the paper trains the
+data-owner head segments and the data-scientist trunk segment with
+*different* optimizers/learning rates (Appendix B: owners 0.01, scientist
+0.1), each party updating its own segment independently after receiving
+the cut-layer gradient.
+"""
+from __future__ import annotations
+
+from typing import Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class Optimizer(NamedTuple):
+    init: Callable
+    update: Callable          # (grads, state, params, step) -> (updates, state)
+
+
+def _tmap(f, *trees):
+    return jax.tree.map(f, *trees)
+
+
+# ---------------------------------------------------------------------------
+# Schedules
+# ---------------------------------------------------------------------------
+
+
+def constant(lr: float):
+    return lambda step: jnp.asarray(lr, jnp.float32)
+
+
+def warmup_cosine(peak_lr: float, warmup_steps: int, total_steps: int,
+                  final_frac: float = 0.1):
+    def sched(step):
+        step = jnp.asarray(step, jnp.float32)
+        warm = peak_lr * step / max(warmup_steps, 1)
+        t = jnp.clip((step - warmup_steps)
+                     / max(total_steps - warmup_steps, 1), 0.0, 1.0)
+        cos = peak_lr * (final_frac + (1 - final_frac)
+                         * 0.5 * (1 + jnp.cos(jnp.pi * t)))
+        return jnp.where(step < warmup_steps, warm, cos)
+    return sched
+
+
+def _as_sched(lr):
+    return lr if callable(lr) else constant(lr)
+
+
+# ---------------------------------------------------------------------------
+# Optimizers
+# ---------------------------------------------------------------------------
+
+
+def sgd(lr, momentum: float = 0.0) -> Optimizer:
+    sched = _as_sched(lr)
+
+    def init(params):
+        if momentum == 0.0:
+            return ()
+        return _tmap(jnp.zeros_like, params)
+
+    def update(grads, state, params, step):
+        lr_t = sched(step)
+        if momentum == 0.0:
+            return _tmap(lambda g: -lr_t * g, grads), state
+        new_m = _tmap(lambda m, g: momentum * m + g, state, grads)
+        return _tmap(lambda m: -lr_t * m, new_m), new_m
+
+    return Optimizer(init, update)
+
+
+def adam(lr, b1: float = 0.9, b2: float = 0.999, eps: float = 1e-8,
+         weight_decay: float = 0.0, state_dtype=jnp.float32) -> Optimizer:
+    """``state_dtype=jnp.bfloat16`` halves m/v HBM (the §Perf memory-term
+    lever for optimizer state); the update math stays fp32."""
+    sched = _as_sched(lr)
+
+    def init(params):
+        z = _tmap(lambda p: jnp.zeros_like(p, dtype=state_dtype), params)
+        return {"m": z, "v": jax.tree.map(jnp.copy, z)}
+
+    def update(grads, state, params, step):
+        step = jnp.asarray(step, jnp.float32) + 1.0
+        lr_t = sched(step - 1.0)
+        m = _tmap(lambda m_, g: b1 * m_.astype(jnp.float32)
+                  + (1 - b1) * g.astype(jnp.float32), state["m"], grads)
+        v = _tmap(lambda v_, g: b2 * v_.astype(jnp.float32)
+                  + (1 - b2) * jnp.square(g.astype(jnp.float32)),
+                  state["v"], grads)
+        bc1 = 1 - b1 ** step
+        bc2 = 1 - b2 ** step
+
+        def upd(m_, v_, p):
+            u = -lr_t * (m_ / bc1) / (jnp.sqrt(v_ / bc2) + eps)
+            if weight_decay:
+                u = u - lr_t * weight_decay * p.astype(jnp.float32)
+            return u.astype(p.dtype)
+
+        new_state = {"m": _tmap(lambda a: a.astype(state_dtype), m),
+                     "v": _tmap(lambda a: a.astype(state_dtype), v)}
+        return _tmap(upd, m, v, params), new_state
+
+    return Optimizer(init, update)
+
+
+def adamw(lr, weight_decay: float = 0.01, **kw) -> Optimizer:
+    return adam(lr, weight_decay=weight_decay, **kw)
+
+
+# ---------------------------------------------------------------------------
+# Transforms / composition
+# ---------------------------------------------------------------------------
+
+
+def clip_by_global_norm(max_norm: float) -> Optimizer:
+    def init(params):
+        return ()
+
+    def update(grads, state, params, step):
+        sq = sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                 for g in jax.tree.leaves(grads))
+        gnorm = jnp.sqrt(sq)
+        scale = jnp.minimum(1.0, max_norm / jnp.maximum(gnorm, 1e-9))
+        return _tmap(lambda g: g * scale.astype(g.dtype), grads), state
+
+    return Optimizer(init, update)
+
+
+def chain(*opts: Optimizer) -> Optimizer:
+    """Compose transforms left-to-right; the last one produces updates."""
+
+    def init(params):
+        return tuple(o.init(params) for o in opts)
+
+    def update(grads, state, params, step):
+        new_state = []
+        for o, s in zip(opts, state):
+            grads, s = o.update(grads, s, params, step)
+            new_state.append(s)
+        return grads, tuple(new_state)
+
+    return Optimizer(init, update)
+
+
+def multi_segment(segment_opts) -> Optimizer:
+    """Per-segment optimizers keyed by the top-level param-tree key.
+
+    PyVertical: ``multi_segment({"heads": sgd(0.01), "trunk": sgd(0.1)})`` —
+    each data owner updates its head with its own optimizer; the data
+    scientist updates the trunk with another.  Missing keys raise.
+    """
+
+    def init(params):
+        return {k: segment_opts[k].init(params[k]) for k in params}
+
+    def update(grads, state, params, step):
+        updates, new_state = {}, {}
+        for k in grads:
+            u, s = segment_opts[k].update(grads[k], state[k], params[k], step)
+            updates[k], new_state[k] = u, s
+        return updates, new_state
+
+    return Optimizer(init, update)
+
+
+def apply_updates(params, updates):
+    return _tmap(lambda p, u: p + u.astype(p.dtype), params, updates)

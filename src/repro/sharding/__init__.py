@@ -1,0 +1,3 @@
+from repro.sharding.specs import (ShardingRules, param_specs, batch_specs,  # noqa
+                                  cache_specs, named, constrain,
+                                  sharding_context)

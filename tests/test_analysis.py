@@ -1,0 +1,69 @@
+"""HLO-analysis parser: shape-byte parsing, collective detection, and
+cross-pod replica-group logic (both explicit and iota forms)."""
+import numpy as np
+
+from repro.launch.analysis import (_iota_groups, collective_stats,
+                                   shape_bytes)
+
+
+def test_shape_bytes():
+    assert shape_bytes("bf16[2048,16384]{1,0}") == 2048 * 16384 * 2
+    assert shape_bytes("f32[16]{0}") == 64
+    assert shape_bytes("(bf16[8,8]{1,0}, f32[4]{0})") == 128 + 16
+    assert shape_bytes("pred[]") == 1  # scalar: one element
+
+
+def test_collective_stats_counts_ops():
+    hlo = """
+  %add.1 = f32[8]{0} add(%a, %b)
+  %all-reduce.5 = f32[128,256]{1,0} all-reduce(%x), channel_id=1, replica_groups={{0,1},{2,3}}
+  %all-gather.2 = bf16[64,64]{1,0} all-gather(%y), channel_id=2, replica_groups={{0,1,2,3}}
+"""
+    s = collective_stats(hlo)
+    assert s["n_ops"] == 2
+    assert s["per_kind_bytes"]["all-reduce"] == 128 * 256 * 4
+    assert s["per_kind_bytes"]["all-gather"] == 64 * 64 * 2
+
+
+def test_cross_pod_detection_explicit_groups():
+    hlo = ("  %all-reduce.1 = f32[4]{0} all-reduce(%x), channel_id=1, "
+           "replica_groups={{0,1},{2,3}}\n"
+           "  %all-reduce.2 = f32[4]{0} all-reduce(%y), channel_id=2, "
+           "replica_groups={{0,2},{1,3}}\n")
+    s = collective_stats(hlo, devices_per_pod=2)
+    # first op stays within pods {0,1} and {2,3}; second crosses
+    assert s["cross_pod_bytes"] == 16
+    assert len(s["cross_pod_ops"]) == 1
+
+
+def test_iota_groups_plain():
+    g = _iota_groups([2, 4], [8], None)
+    np.testing.assert_array_equal(g, [[0, 1, 2, 3], [4, 5, 6, 7]])
+
+
+def test_iota_groups_transposed():
+    # [4,2]<=[2,4]T(1,0): ids arranged column-major over a (2,4) grid
+    g = _iota_groups([4, 2], [2, 4], [1, 0])
+    np.testing.assert_array_equal(g, [[0, 4], [1, 5], [2, 6], [3, 7]])
+
+
+def test_cross_pod_detection_iota():
+    # groups of 2 pairing device i with i+4 across a 4-per-pod boundary
+    hlo = ("  %all-gather.9 = f32[8]{0} all-gather(%x), channel_id=3, "
+           "replica_groups=[4,2]<=[2,4]T(1,0), dimensions={0}\n")
+    s = collective_stats(hlo, devices_per_pod=4)
+    assert s["cross_pod_bytes"] == 32
+    # same op within one pod: groups [0..3],[4..7]
+    hlo2 = ("  %all-gather.9 = f32[8]{0} all-gather(%x), channel_id=3, "
+            "replica_groups=[2,4]<=[8], dimensions={0}\n")
+    s2 = collective_stats(hlo2, devices_per_pod=4)
+    assert s2["cross_pod_bytes"] == 0
+
+
+def test_async_pairs_counted_once():
+    hlo = ("  %all-gather-start.1 = f32[8]{0} all-gather-start(%x), "
+           "channel_id=1, replica_groups={{0,1}}\n"
+           "  %all-gather-done.1 = f32[8]{0} all-gather-done("
+           "%all-gather-start.1)\n")
+    s = collective_stats(hlo)
+    assert s["n_ops"] == 1

@@ -1,0 +1,64 @@
+"""Sanity properties of the analytic roofline cost model."""
+import pytest
+
+from benchmarks.analytic import fwd_flops, step_costs
+from repro.configs import SHAPES, get_config, list_archs
+
+
+def test_train_flops_close_to_6nd_for_dense():
+    """Dense train FLOPs must be ~(4/3)x the 6ND convention (our model
+    includes the remat recompute) plus an attention term."""
+    cfg = get_config("llama3.2-3b")
+    c = step_costs("llama3.2-3b", "train_4k")
+    six_nd = 6.0 * cfg.param_count() * 4096 * 256
+    assert 1.2 * six_nd < c.flops < 2.2 * six_nd
+
+
+def test_moe_uses_active_params():
+    c_moe = step_costs("mixtral-8x7b", "train_4k")
+    cfg = get_config("mixtral-8x7b")
+    full = 8.0 * cfg.param_count(active_only=False) * 4096 * 256
+    active = 8.0 * cfg.param_count(active_only=True) * 4096 * 256
+    assert c_moe.flops < 0.6 * full
+    assert c_moe.flops > 0.8 * active
+
+
+def test_decode_flops_linear_in_batch():
+    c = step_costs("llama3.2-3b", "decode_32k")
+    cfg = get_config("llama3.2-3b")
+    # ~2*N per token x 128 requests, plus attention over the 32k cache
+    assert c.flops > 2.0 * cfg.param_count() * 128
+    assert c.flops < 10.0 * cfg.param_count() * 128
+
+
+def test_swa_decode_cheaper_than_full():
+    full = fwd_flops(get_config("llama3.2-3b"), SHAPES["decode_32k"])
+    swa = fwd_flops(get_config("llama3.2-3b"), SHAPES["decode_32k"],
+                    swa_override=4096)
+    assert swa < full
+
+
+def test_decode_memory_dominated_by_params_and_cache():
+    cfg = get_config("gemma2-9b")
+    c = step_costs("gemma2-9b", "decode_32k")
+    params_bytes = cfg.param_count() * 4.0
+    assert c.hbm_bytes > params_bytes          # params + cache
+    assert c.hbm_bytes < 60 * params_bytes
+
+
+@pytest.mark.parametrize("arch", list_archs())
+def test_all_costs_positive(arch):
+    cfg = get_config(arch)
+    for shape in SHAPES.values():
+        if shape.name == "long_500k" and cfg.long_context == "skip":
+            continue
+        c = step_costs(arch, shape.name)
+        assert c.flops > 0 and c.hbm_bytes > 0 and c.coll_bytes_dev >= 0
+
+
+def test_train_heavier_than_prefill_heavier_than_decode():
+    for arch in ("llama3.2-3b", "zamba2-2.7b", "mixtral-8x7b"):
+        t = step_costs(arch, "train_4k").flops
+        p = step_costs(arch, "prefill_32k").flops
+        d = step_costs(arch, "decode_32k").flops
+        assert t > d and p > d

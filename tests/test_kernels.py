@@ -1,0 +1,129 @@
+"""Pallas kernels vs their pure-jnp oracles: shape/dtype sweeps in
+interpret mode (deliverable c)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.block_attention.ops import block_attention
+from repro.kernels.block_attention.ref import attention_ref
+from repro.kernels.cut_fusion.ops import cut_fusion
+from repro.kernels.cut_fusion.ref import cut_fusion_ref
+from repro.kernels.mamba2_scan.ops import mamba2_scan
+from repro.kernels.mamba2_scan.ref import ssd_ref
+
+RNG = np.random.default_rng(0)
+
+
+def _tol(dtype):
+    return dict(atol=2e-2, rtol=2e-2) if dtype == jnp.bfloat16 \
+        else dict(atol=2e-4, rtol=2e-4)
+
+
+# ---------------------------------------------------------------------------
+# block_attention
+# ---------------------------------------------------------------------------
+
+ATTN_CASES = [
+    # B, Sq, Skv, nh, nkv, hd, kind, window, softcap
+    (2, 128, 128, 4, 4, 64, "causal", 0, 0.0),
+    (2, 256, 256, 8, 2, 64, "causal", 0, 0.0),      # GQA group 4
+    (1, 192, 192, 4, 2, 128, "local", 64, 0.0),     # SWA
+    (1, 128, 128, 2, 2, 64, "bidir", 0, 0.0),       # whisper encoder
+    (1, 256, 256, 4, 2, 64, "causal", 0, 50.0),     # gemma2 softcap
+    (2, 100, 100, 4, 4, 32, "causal", 0, 0.0),      # ragged (padding path)
+]
+
+
+@pytest.mark.parametrize("case", ATTN_CASES)
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_block_attention_matches_oracle(case, dtype):
+    B, Sq, Skv, nh, nkv, hd, kind, window, cap = case
+    q = jnp.asarray(RNG.normal(size=(B, Sq, nh, hd)), dtype)
+    k = jnp.asarray(RNG.normal(size=(B, Skv, nkv, hd)), dtype)
+    v = jnp.asarray(RNG.normal(size=(B, Skv, nkv, hd)), dtype)
+    out = block_attention(q, k, v, kind=kind, window=window, softcap=cap,
+                          block_q=64, block_k=64, interpret=True)
+    ref = attention_ref(q, k, v, kind=kind, window=window, softcap=cap)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32), **_tol(dtype))
+
+
+def test_block_attention_block_shape_independence():
+    """Result must not depend on the BlockSpec tiling."""
+    q = jnp.asarray(RNG.normal(size=(1, 256, 4, 64)), jnp.float32)
+    k = jnp.asarray(RNG.normal(size=(1, 256, 2, 64)), jnp.float32)
+    v = jnp.asarray(RNG.normal(size=(1, 256, 2, 64)), jnp.float32)
+    outs = [block_attention(q, k, v, block_q=bq, block_k=bk, interpret=True)
+            for bq, bk in [(64, 64), (128, 64), (64, 128), (256, 256)]]
+    for o in outs[1:]:
+        np.testing.assert_allclose(o, outs[0], atol=1e-5, rtol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# cut_fusion
+# ---------------------------------------------------------------------------
+
+CUT_CASES = [
+    (2, 128, 64, 128, "concat"),
+    (4, 256, 64, 96, "concat"),
+    (2, 100, 60, 70, "concat"),       # ragged
+    (2, 128, 64, 128, "sum"),
+    (3, 128, 64, 128, "mean"),
+]
+
+
+@pytest.mark.parametrize("case", CUT_CASES)
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_cut_fusion_matches_oracle(case, dtype):
+    P, T, K, D, combine = case
+    z = jnp.asarray(RNG.normal(size=(P, T, K)), dtype)
+    w = jnp.asarray(RNG.normal(size=(P, K, D)), dtype)
+    out = cut_fusion(z, w, combine=combine, block_m=64, block_n=64,
+                     block_k=32, interpret=True)
+    ref = cut_fusion_ref(z, w, combine=combine)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32), **_tol(dtype))
+
+
+# ---------------------------------------------------------------------------
+# mamba2_scan
+# ---------------------------------------------------------------------------
+
+SSD_CASES = [
+    # B, S, H, P, G, N, chunk
+    (2, 128, 4, 32, 1, 16, 32),
+    (1, 96, 4, 32, 2, 16, 32),       # grouped B/C + ragged seq
+    (2, 256, 8, 64, 1, 64, 64),      # zamba2-like dims
+    (1, 64, 2, 16, 1, 8, 64),        # single chunk
+]
+
+
+@pytest.mark.parametrize("case", SSD_CASES)
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_mamba2_scan_matches_oracle(case, dtype):
+    B, S, H, P, G, N, chunk = case
+    x = jnp.asarray(RNG.normal(size=(B, S, H, P)), dtype)
+    dt = jnp.asarray(RNG.uniform(0.001, 0.1, size=(B, S, H)), jnp.float32)
+    A = -jnp.asarray(RNG.uniform(0.5, 2.0, size=(H,)), jnp.float32)
+    Bi = jnp.asarray(RNG.normal(size=(B, S, G, N)), dtype)
+    Ci = jnp.asarray(RNG.normal(size=(B, S, G, N)), dtype)
+    y, st = mamba2_scan(x, dt, A, Bi, Ci, chunk=chunk, interpret=True)
+    yr, sr = ssd_ref(x, dt, A, Bi, Ci, chunk=chunk)
+    np.testing.assert_allclose(np.asarray(y, np.float32),
+                               np.asarray(yr, np.float32), **_tol(dtype))
+    np.testing.assert_allclose(st, sr, **_tol(dtype))
+
+
+def test_mamba2_scan_chunk_independence():
+    """The chunked recurrence must be exact: chunk size cannot change y."""
+    B, S, H, P, G, N = 1, 128, 2, 16, 1, 8
+    x = jnp.asarray(RNG.normal(size=(B, S, H, P)), jnp.float32)
+    dt = jnp.asarray(RNG.uniform(0.001, 0.1, size=(B, S, H)), jnp.float32)
+    A = -jnp.ones((H,), jnp.float32)
+    Bi = jnp.asarray(RNG.normal(size=(B, S, G, N)), jnp.float32)
+    Ci = jnp.asarray(RNG.normal(size=(B, S, G, N)), jnp.float32)
+    ys = [mamba2_scan(x, dt, A, Bi, Ci, chunk=c, interpret=True)[0]
+          for c in (16, 32, 128)]
+    for y in ys[1:]:
+        np.testing.assert_allclose(y, ys[0], atol=1e-4, rtol=1e-4)

@@ -1,0 +1,68 @@
+"""Privacy hooks: distance correlation properties, cut noise, NoPeek."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.privacy import (distance_correlation, gaussian_cut_noise,
+                                nopeek_penalty)
+
+
+def test_dcor_of_identical_is_one():
+    x = jnp.asarray(np.random.default_rng(0).normal(size=(64, 8)))
+    d = float(distance_correlation(x, x))
+    np.testing.assert_allclose(d, 1.0, atol=1e-5)
+
+
+def test_dcor_linear_transform_high():
+    rng = np.random.default_rng(1)
+    x = jnp.asarray(rng.normal(size=(64, 8)))
+    z = x @ jnp.asarray(rng.normal(size=(8, 4)))
+    assert float(distance_correlation(x, z)) > 0.5
+
+
+def test_dcor_independent_below_dependent():
+    """Small-sample dcor has positive bias, so test the ORDERING: an
+    independent z scores well below a linear transform of x."""
+    rng = np.random.default_rng(2)
+    x = jnp.asarray(rng.normal(size=(128, 8)))
+    z_ind = jnp.asarray(rng.normal(size=(128, 8)))
+    z_dep = x @ jnp.asarray(rng.normal(size=(8, 8)))
+    d_ind = float(distance_correlation(x, z_ind))
+    d_dep = float(distance_correlation(x, z_dep))
+    assert d_ind < 0.6 and d_ind < d_dep - 0.2
+
+
+def test_dcor_bounded():
+    rng = np.random.default_rng(3)
+    for i in range(3):
+        x = jnp.asarray(rng.normal(size=(32, 4)))
+        z = jnp.asarray(rng.normal(size=(32, 6))) * (10.0 ** i)
+        d = float(distance_correlation(x, z))
+        assert -1e-6 <= d <= 1.0 + 1e-6
+
+
+def test_gaussian_noise_changes_cut_but_preserves_shape():
+    x = jnp.ones((4, 8))
+    y = gaussian_cut_noise(jax.random.PRNGKey(0), x, 0.5)
+    assert y.shape == x.shape and not np.allclose(y, x)
+    y0 = gaussian_cut_noise(jax.random.PRNGKey(0), x, 0.0)
+    np.testing.assert_array_equal(y0, x)
+
+
+def test_nopeek_penalty_zero_weight():
+    x = jnp.ones((8, 4))
+    assert float(nopeek_penalty(x, x, 0.0)) == 0.0
+
+
+def test_nopeek_reduces_under_noise():
+    """Noisier cut representations leak less (lower dcor with raw input) —
+    the Titcombe et al. defence direction."""
+    rng = np.random.default_rng(4)
+    x = jnp.asarray(rng.normal(size=(96, 16)))
+    w = jnp.asarray(rng.normal(size=(16, 8)))
+    clean = x @ w
+    key = jax.random.PRNGKey(0)
+    noisy = gaussian_cut_noise(key, clean, 25.0)
+    d_clean = float(distance_correlation(x, clean))
+    d_noisy = float(distance_correlation(x, noisy))
+    assert d_noisy < d_clean

@@ -1,0 +1,91 @@
+"""Sharding rules: divisibility guards, owner-axis placement, MoE
+expert-parallel fallback — pure spec-level tests (no devices needed)."""
+import jax
+import jax.numpy as jnp
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import get_config
+from repro.models.model import SplitModel
+from repro.sharding.specs import ShardingRules, make_rules, param_specs
+
+
+@pytest.fixture(scope="module")
+def mesh16():
+    # spec construction only consults mesh.shape / axis_names
+    return jax.sharding.AbstractMesh((16, 16), ("data", "model"))
+
+
+@pytest.fixture(scope="module")
+def mesh_pod():
+    return jax.sharding.AbstractMesh((2, 16, 16), ("pod", "data", "model"))
+
+
+def _specs(arch, mesh, **kw):
+    cfg = get_config(arch)
+    model = SplitModel(cfg)
+    rules = make_rules(mesh, cfg, **kw)
+    return cfg, param_specs(model.param_specs(), cfg, mesh, rules)
+
+
+def test_attention_weights_tensor_parallel(mesh16):
+    cfg, specs = _specs("llama3.2-3b", mesh16)
+    wq = specs["trunk"]["blocks"]["units"]["b0"]["attn"]["wq"]["w"]
+    assert wq == P(None, None, "model")          # (units, d, qd)
+    wo = specs["trunk"]["blocks"]["units"]["b0"]["attn"]["wo"]["w"]
+    assert wo == P(None, "model", None)
+
+
+def test_owner_dim_sharded_over_pod(mesh_pod):
+    cfg, specs = _specs("llama3.2-3b", mesh_pod)
+    embed = specs["heads"]["embed"]["table"]     # (P, vocab, d)
+    assert embed[0] == "pod"
+    wq = specs["heads"]["blocks"]["units"]["b0"]["attn"]["wq"]["w"]
+    assert wq[0] == "pod"
+    # trunk never carries the pod axis (scientist-owned, pod-replicated)
+    for leaf in jax.tree.leaves(
+            specs["trunk"], is_leaf=lambda s: isinstance(s, P)):
+        assert "pod" not in tuple(leaf)
+
+
+def test_whisper_single_owner_not_sharded_over_pod(mesh_pod):
+    cfg, specs = _specs("whisper-tiny", mesh_pod)
+    # P=1 cannot shard over a 2-pod axis: divisibility guard replicates
+    fp = specs["heads"]["front_proj"]["w"]
+    assert fp[0] is None
+
+
+def test_moe_expert_parallel_when_divisible(mesh16):
+    cfg, specs = _specs("deepseek-moe-16b", mesh16)   # 64 experts % 16 == 0
+    w_in = specs["trunk"]["blocks"]["units"]["b0"]["ffn"]["w_in"]
+    assert w_in == P(None, "model", None, None)       # (units, E, d, d_e)
+
+
+def test_moe_tensor_parallel_fallback(mesh16):
+    cfg, specs = _specs("mixtral-8x7b", mesh16)       # 8 experts % 16 != 0
+    w_in = specs["trunk"]["blocks"]["units"]["b0"]["ffn"]["w_in"]
+    assert w_in == P(None, None, None, "model")       # shard d_expert
+    w_out = specs["trunk"]["blocks"]["units"]["b0"]["ffn"]["w_out"]
+    assert w_out == P(None, None, "model", None)
+
+
+def test_fsdp_only_when_zero_sharding(mesh16):
+    _, specs = _specs("llama3-405b", mesh16)          # zero_sharding=True
+    wq = specs["trunk"]["blocks"]["units"]["b0"]["attn"]["wq"]["w"]
+    assert wq == P(None, "data", "model")
+    _, specs = _specs("llama3.2-3b", mesh16)          # zero_sharding=False
+    wq = specs["trunk"]["blocks"]["units"]["b0"]["attn"]["wq"]["w"]
+    assert wq == P(None, None, "model")
+
+
+def test_indivisible_vocab_replicated(mesh16):
+    # whisper vocab 51865 is not divisible by 16: guard must replicate
+    cfg, specs = _specs("whisper-tiny", mesh16)
+    emb = specs["trunk"]["embed"]["table"]
+    assert emb == P(None, None)
+
+
+def test_norm_scales_replicated(mesh16):
+    _, specs = _specs("gemma2-9b", mesh16)
+    s = specs["trunk"]["out_norm"]["scale"]
+    assert s == P(None)
