@@ -1,0 +1,17 @@
+# Developer entrypoints.  `make verify` is the tier-1 gate (ROADMAP.md).
+PY := python
+export PYTHONPATH := src
+
+.PHONY: verify test fast quickstart
+
+verify:
+	$(PY) -m pytest -x -q
+
+test:
+	$(PY) -m pytest -q --continue-on-collection-errors
+
+fast:
+	$(PY) -m pytest -q -m "not slow"
+
+quickstart:
+	$(PY) examples/quickstart.py

@@ -1,70 +1,35 @@
 """PyVertical quickstart — the paper's Figure 2 pipeline, end to end.
 
 Two data owners each hold one half of every image; the data scientist
-holds the labels.  The parties PSI-resolve their shared subjects, align
-by ID, and train the dual-headed SplitNN of Appendix B.
+holds the labels.  ``VerticalSession`` runs the whole protocol: DH-PSI
+entity resolution, ID alignment, and dual-headed SplitNN training with
+per-party learning rates (Appendix B).
 
     PYTHONPATH=src python examples/quickstart.py
 """
-import time
-
-import jax
-import jax.numpy as jnp
-import numpy as np
-
 from repro.configs.pyvertical_mnist import CONFIG
-from repro.core import MLPSplitNN, make_split_train_step, resolve
-from repro.core.splitnn import cut_layer_traffic, train_state_init
 from repro.data import make_vertical_mnist_parties
-from repro.optim import multi_segment, sgd
+from repro.federation import VerticalSession, feature_parties
 
 
 def main():
-    print("=== 1. vertical data: 2 owners x half-images + scientist labels")
     sci, owners = make_vertical_mnist_parties(2000, seed=0, keep_frac=0.9)
-    for name, ds in owners.items():
-        print(f"  {name}: {len(ds.ids)} subjects, {ds.data.shape[1]} features")
+    session = VerticalSession(*feature_parties(sci, owners))
 
-    print("=== 2. PSI resolution (DH-PSI + Bloom compression)")
-    t0 = time.time()
-    s_al, o_al, stats = resolve(sci, owners, group="modp512")
-    print(f"  global intersection: {stats['global_intersection']} subjects "
-          f"({time.time()-t0:.1f}s)")
-    for r in stats["rounds"]:
-        print(f"  {r['owner']}: pairwise {r['intersection_size']}, "
-              f"server response {r['server_response_bytes']/1024:.1f} KiB")
+    stats = session.resolve(group="modp512")
+    print(f"PSI: {stats['global_intersection']} shared subjects "
+          + " ".join(f"[{r['owner']}: {r['intersection_size']} pairwise, "
+                     f"{r['server_response_bytes'] / 1024:.1f} KiB]"
+                     for r in stats["rounds"]))
 
-    print("=== 3. dual-headed SplitNN training (Appendix B hyperparams)")
-    model = MLPSplitNN(CONFIG)
-    params = model.init(jax.random.PRNGKey(0))
-    opt = multi_segment({"heads": sgd(CONFIG.split.owner_lr),
-                         "trunk": sgd(CONFIG.split.scientist_lr)})
-    state = train_state_init(params, opt)
-    step = make_split_train_step(model.loss_fn, opt, donate=False)
+    session.build(CONFIG)
+    history = session.fit(epochs=10, batch_size=128, eval_frac=0.15)
 
-    xs = np.stack([o_al["owner0"].data, o_al["owner1"].data])
-    ys = s_al.data.astype(np.int32)
-    n = len(ys)
-    ntr = int(n * 0.85)
-    rng = np.random.default_rng(0)
-    for ep in range(10):
-        order = rng.permutation(ntr)
-        for s in range(0, ntr - 128, 128):
-            idx = order[s:s + 128]
-            b = {"x_slices": jnp.asarray(xs[:, idx]),
-                 "labels": jnp.asarray(ys[idx])}
-            params, state, m = step(params, state, b, ep)
-        val = {"x_slices": jnp.asarray(xs[:, ntr:]),
-               "labels": jnp.asarray(ys[ntr:])}
-        _, vm = model.loss_fn(params, val)
-        print(f"  epoch {ep}: train_acc={float(m['accuracy']):.3f} "
-              f"val_acc={float(vm['accuracy']):.3f}")
-
-    t = cut_layer_traffic(2, 128, 1, 64, 4)
-    print("=== 4. what crossed party boundaries per step:")
-    print(f"  {t['per_owner_forward_bytes']} B fwd + "
-          f"{t['per_owner_backward_bytes']} B bwd per owner "
-          f"(raw pixels: ZERO)")
+    traffic = session.cut_traffic(batch_size=128)
+    print(f"final val_acc={history['final']['val_accuracy']:.3f}; "
+          f"per step each owner sent {traffic['per_owner_forward_bytes']} B "
+          f"of cut activations (raw pixels: ZERO)")
+    return history["final"]["val_accuracy"]
 
 
 if __name__ == "__main__":

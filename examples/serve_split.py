@@ -1,21 +1,17 @@
-"""Split-inference serving demo: batched requests flow through the
-vertically-partitioned stack — owner heads prefill their private context
-slices, the scientist's trunk decodes the continuation.  Multiple request
-batches are served against one resident model (the serving loop a deployer
-would run).
+"""Split-inference serving demo, as a thin client of ``VerticalSession``:
+owners hold each request's private context slices, the scientist's trunk
+decodes the continuation.  The session merges owner slices (owner-side),
+queues every aligned request, and the engine serves them in waves against
+one resident model.
 
     PYTHONPATH=src python examples/serve_split.py [--arch llama3.2-3b]
 """
 import argparse
 import time
 
-import jax
-import jax.numpy as jnp
-import numpy as np
-
 from repro.configs import get_config
 from repro.data import make_token_dataset
-from repro.models.model import SplitModel
+from repro.federation import VerticalSession, sequence_parties
 
 
 def main(argv=None):
@@ -28,41 +24,27 @@ def main(argv=None):
     args = ap.parse_args(argv)
 
     cfg = get_config(args.arch, reduced=True)
-    model = SplitModel(cfg)
-    params = model.init(jax.random.PRNGKey(0))
-    P = cfg.split.n_owners
-    B, S = args.batch, args.ctx
+    n_requests = args.batch * args.n_batches
+    contexts = make_token_dataset(n_requests, args.ctx, cfg.vocab,
+                                  0)[:, :args.ctx]
+    session = VerticalSession(*sequence_parties(
+        contexts, cfg.split.n_owners, with_labels=False))
+    session.resolve(group="modp512")
+    session.build(cfg)
 
-    prefill = jax.jit(model.prefill)
-    decode = jax.jit(model.decode_step)
-
-    print(f"serving {cfg.name} (reduced): {P} owner heads + trunk, "
-          f"ctx {S}, {args.new} new tokens/request")
-    all_toks = make_token_dataset(B * args.n_batches, S, cfg.vocab, 0)
-    total_tok = 0
-    t_start = time.time()
-    for r in range(args.n_batches):
-        toks = all_toks[r * B:(r + 1) * B, :S]
-        owner_tokens = toks.reshape(B, P, S // P).transpose(1, 0, 2)
-        caches = model.cache_init(B, S, n_new=args.new)
-        t0 = time.time()
-        logits, caches = prefill(
-            params, {"owner_tokens": jnp.asarray(owner_tokens)}, caches)
-        tok = jnp.argmax(logits, -1)[:, None].astype(jnp.int32)
-        out = [np.asarray(tok)]
-        for t in range(args.new - 1):
-            logits, caches = decode(params, caches, tok, S + t,
-                                    S // P + t)
-            tok = jnp.argmax(logits, -1)[:, None].astype(jnp.int32)
-            out.append(np.asarray(tok))
-        dt = time.time() - t0
-        total_tok += (args.new) * B
-        gen = np.concatenate(out, axis=1)
-        print(f"  batch {r}: {B} requests, {dt:.2f}s "
-              f"({args.new * B / dt:.1f} tok/s)  "
-              f"sample: {gen[0][:10].tolist()}")
-    print(f"served {args.n_batches * B} requests, {total_tok} tokens "
-          f"in {time.time()-t_start:.1f}s")
+    print(f"serving {cfg.name} (reduced): {cfg.split.n_owners} owner heads "
+          f"+ trunk, ctx {args.ctx}, {args.new} new tokens/request")
+    t0 = time.time()
+    results, engine = session.serve_dataset(max_new=args.new,
+                                            batch_slots=args.batch)
+    dt = time.time() - t0
+    st = engine.stats
+    for rid in sorted(results)[:3]:
+        print(f"  request {rid}: sample {results[rid].generated[:10]}")
+    print(f"served {st['requests']} requests in {st['waves']} waves, "
+          f"{st['tokens_generated']} tokens in {dt:.1f}s "
+          f"({st['tokens_generated'] / dt:.1f} tok/s)")
+    return results
 
 
 if __name__ == "__main__":

@@ -1,25 +1,19 @@
 """End-to-end driver (deliverable b): split-train a ~100M-parameter
-llama-family model on vertically-partitioned token streams for a few
-hundred steps, demonstrating the SplitNN machinery at LM scale: two
-sequence-slice owners + a label-holding scientist, per-segment optimizers,
-per-party checkpointing.
+llama-family model on vertically-partitioned token streams, as a thin
+client of ``VerticalSession``: two sequence-slice owners + a
+label-holding scientist, PSI resolution, per-segment adam, per-party
+checkpointing.
 
     PYTHONPATH=src python examples/train_vertical_llm.py \
         [--steps 300] [--batch 4] [--seq 256]
 """
 import argparse
-import time
 
-import jax
-import jax.numpy as jnp
 import numpy as np
 
-from repro import checkpoint as ckpt
 from repro.configs import get_config
-from repro.core.splitnn import make_split_train_step, train_state_init
-from repro.data import make_token_dataset, batches
-from repro.models.model import SplitModel
-from repro.optim import adam, chain, clip_by_global_norm, multi_segment
+from repro.data import make_token_dataset
+from repro.federation import VerticalSession, sequence_parties
 
 
 def build_100m():
@@ -42,40 +36,24 @@ def main(argv=None):
     args = ap.parse_args(argv)
 
     cfg = build_100m()
-    model = SplitModel(cfg)
-    params = model.init(jax.random.PRNGKey(0))
-    n_params = sum(int(np.prod(p.shape)) for p in jax.tree.leaves(params))
-    print(f"model: {cfg.name}, {n_params/1e6:.1f}M params, "
-          f"{cfg.split.n_owners} owners, cut after "
-          f"{model.n_head_units}/{cfg.n_superblocks} blocks")
-
-    opt = multi_segment({
-        "heads": chain(clip_by_global_norm(1.0), adam(args.lr)),
-        "trunk": chain(clip_by_global_norm(1.0), adam(args.lr))})
-    state = train_state_init(params, opt)
-    step = make_split_train_step(model.loss_fn, opt)
-
-    # generate over a 2048-token effective vocabulary (of the model's
-    # 16384): the support + markov structure give a visible loss descent
-    # within a couple hundred steps
+    # a 2048-token effective vocabulary (of the model's 16384): the
+    # support + markov structure give a visible loss descent quickly
     toks = make_token_dataset(256, args.seq, 2048, seed=0)
-    it = batches({"t": toks}, args.batch, epochs=10_000)
-    P = cfg.split.n_owners
-    t0 = time.time()
-    losses = []
-    for i in range(args.steps):
-        t = next(it)["t"]
-        inp, lab = t[:, :-1], t[:, 1:]
-        b = {"owner_tokens": jnp.asarray(
-                inp.reshape(args.batch, P, args.seq // P).transpose(1, 0, 2)),
-             "labels": jnp.asarray(lab)}
-        params, state, m = step(params, state, b, i)
-        losses.append(float(m["loss"]))
-        if i % 20 == 0 or i == args.steps - 1:
-            print(f"step {i:4d}  loss {losses[-1]:.4f}  "
-                  f"({time.time()-t0:.0f}s)")
-    d = ckpt.save_split(args.ckpt_dir, params, args.steps)
+    session = VerticalSession(
+        *sequence_parties(toks, cfg.split.n_owners))
+    session.resolve(group="modp512")
+    session.build(cfg)
+    print(f"model: {cfg.name}, {session.adapter.model.n_head_units} head "
+          f"blocks x {cfg.split.n_owners} owners; "
+          f"{session.resolve_stats['global_intersection']} aligned docs")
+
+    history = session.fit(steps=args.steps, batch_size=args.batch,
+                          owner_lr=args.lr, scientist_lr=args.lr,
+                          log_every=20)
+    d = session.checkpoint(args.ckpt_dir, args.steps)
     print(f"per-party checkpoints -> {d}")
+
+    losses = [r["loss"] for r in history["train"]]
     print(f"loss: {losses[0]:.3f} -> {min(losses[-20:]):.3f} "
           f"(uniform = {np.log(cfg.vocab):.3f})")
     assert losses[-1] < losses[0], "no learning"

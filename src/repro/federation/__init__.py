@@ -1,0 +1,11 @@
+# The paper's party-centric API: DataOwner / DataScientist objects with a
+# structural visibility contract, and the VerticalSession facade unifying
+# PSI resolution, SplitNN training, evaluation, and split-inference
+# serving.  Every workflow (examples/, launch/) is a thin client of this
+# package; batch partitioning lives exclusively in federation.batching.
+from repro.federation.parties import (DataOwner, DataScientist,  # noqa
+                                      PrivacyError, feature_parties,
+                                      sequence_parties)
+from repro.federation.registry import build_adapter, register_model  # noqa
+from repro.federation.session import VerticalSession  # noqa: F401
+from repro.federation import batching  # noqa: F401

@@ -1,0 +1,133 @@
+"""Every batch-partitioning layout of the SplitNN system, in one place.
+
+Before this module existed, three mutually-incompatible copies of the
+vertical-partition-to-batch logic lived in ``examples/quickstart.py``
+(feature slices stacked to ``x_slices``), ``launch/train.py`` /
+``examples/train_vertical_llm.py`` (token reshapes to ``owner_tokens``)
+and ``launch/engine.py`` (padded serving contexts).  They are now three
+*layouts* of one module, each the batch-level counterpart of a
+``core/vertical.py`` partitioner and property-tested to round-trip
+against it:
+
+  feature layout    ``x_slices``     (P, B, f_p)   <-> partition_features
+  sequence layout   ``owner_tokens`` (P, B, S_p)   <-> partition_sequence
+  serving layout    left-padded contexts -> sequence layout
+
+All functions are pure numpy/jnp shape plumbing; nothing here looks at
+labels (this is owner-side code under the party-visibility contract —
+see ``federation/parties.py``).
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Optional, Sequence, Union
+
+import jax.numpy as jnp
+import numpy as np
+
+Array = np.ndarray
+Slices = Union[Array, List[Array]]
+
+
+# ---------------------------------------------------------------------------
+# feature layout (the paper's MNIST experiment: MLPSplitNN ``x_slices``)
+# ---------------------------------------------------------------------------
+
+
+def stack_feature_slices(slices: Sequence[Array]) -> Slices:
+    """Per-owner feature slices [(B, f_i), ...] -> stacked (P, B, f) when the
+    owners are symmetric, else the list unchanged (imbalanced vertical
+    datasets, paper §5.1)."""
+    widths = {s.shape[-1] for s in slices}
+    if len(widths) == 1:
+        return np.stack([np.asarray(s) for s in slices])
+    return [np.asarray(s) for s in slices]
+
+
+def unstack_feature_slices(stacked: Slices) -> List[Array]:
+    """Inverse of :func:`stack_feature_slices`."""
+    if isinstance(stacked, list):
+        return stacked
+    return [stacked[p] for p in range(stacked.shape[0])]
+
+
+def feature_batch(owner_slices: Sequence[Array], labels: Optional[Array],
+                  idx: Optional[Array] = None) -> Dict[str, jnp.ndarray]:
+    """Assemble an ``MLPSplitNN`` training batch from per-owner feature
+    matrices [(N, f_i), ...] + scientist labels (N,), optionally gathering
+    rows ``idx`` (ID-aligned across all parties after resolution)."""
+    sel = (lambda a: a if idx is None else a[idx])
+    xs = stack_feature_slices([sel(np.asarray(s)) for s in owner_slices])
+    batch = {"x_slices": ([jnp.asarray(x) for x in xs]
+                          if isinstance(xs, list) else jnp.asarray(xs))}
+    if labels is not None:
+        batch["labels"] = jnp.asarray(sel(np.asarray(labels)))
+    return batch
+
+
+# ---------------------------------------------------------------------------
+# sequence layout (split LMs: ``owner_tokens``)
+# ---------------------------------------------------------------------------
+
+
+def sequence_owner_slices(tokens: Array, n_owners: int) -> Array:
+    """(B, S) combined sequences -> (P, B, S_p) contiguous owner slices.
+
+    Identical partition to ``core.vertical.partition_sequence`` (owner p
+    holds [p*S/P, (p+1)*S/P)), stacked on a leading owner dim so the head
+    pass can vmap over owners."""
+    B, S = tokens.shape
+    if S % n_owners:
+        raise ValueError(f"seq {S} not divisible by {n_owners} owners")
+    return np.asarray(tokens).reshape(
+        B, n_owners, S // n_owners).transpose(1, 0, 2)
+
+
+def merge_sequence_slices(owner_tokens: Array) -> Array:
+    """Inverse of :func:`sequence_owner_slices`: (P, B, S_p) -> (B, S)."""
+    P, B, S_p = owner_tokens.shape
+    return np.asarray(owner_tokens).transpose(1, 0, 2).reshape(B, P * S_p)
+
+
+def sequence_batch(owner_slices: Sequence[Array], labels: Optional[Array],
+                   idx: Optional[Array] = None) -> Dict[str, jnp.ndarray]:
+    """Assemble a ``SplitModel`` training batch from per-owner token slices
+    [(N, S_p), ...] + scientist next-token labels (N, S)."""
+    sel = (lambda a: a if idx is None else a[idx])
+    ot = np.stack([sel(np.asarray(s)) for s in owner_slices])
+    batch = {"owner_tokens": jnp.asarray(ot)}
+    if labels is not None:
+        batch["labels"] = jnp.asarray(sel(np.asarray(labels)))
+    return batch
+
+
+# ---------------------------------------------------------------------------
+# serving layout (padded request waves -> sequence layout)
+# ---------------------------------------------------------------------------
+
+
+def pad_contexts(contexts: Sequence[Array], n_slots: int, length: int,
+                 pad: int = 0, pad_side: str = "left") -> Array:
+    """Ragged request contexts -> a full (n_slots, length) int32 wave.
+
+    ``pad_side="left"`` right-aligns each context (recency next to the
+    decode position — what the serving engine wants); unused slots stay
+    all-pad."""
+    if len(contexts) > n_slots:
+        raise ValueError(f"{len(contexts)} contexts > {n_slots} slots")
+    out = np.full((n_slots, length), pad, np.int32)
+    for i, c in enumerate(contexts):
+        c = np.asarray(c, np.int32)
+        if len(c) > length:
+            raise ValueError(f"context {len(c)} > wave length {length}")
+        if pad_side == "left":
+            out[i, length - len(c):] = c
+        elif pad_side == "right":
+            out[i, :len(c)] = c
+        else:
+            raise ValueError(pad_side)
+    return out
+
+
+def serving_owner_slices(batch_tokens: Array, n_owners: int) -> jnp.ndarray:
+    """Padded (B, S) wave -> (P, B, S_p) device-ready owner slices."""
+    return jnp.asarray(sequence_owner_slices(batch_tokens, n_owners))

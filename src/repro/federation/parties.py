@@ -1,0 +1,143 @@
+"""Party abstractions — the paper's cast of characters as objects.
+
+PyVertical's contribution is an *API*: a data scientist trains on features
+vertically partitioned across data owners **without ever touching raw
+features**, and owners never see labels.  These classes make that
+visibility contract structural:
+
+  * :class:`DataOwner` holds ``(ids, features)``.  It has **no** label
+    attribute of any kind, and its ``features`` property raises
+    :class:`PrivacyError` — raw features are reachable only through the
+    owner-side accessor ``_features`` used by ``federation/batching.py``
+    and the session's owner-side assembly (the simulation analogue of code
+    running on the owner's device).
+  * :class:`DataScientist` holds ``(ids, labels)`` and nothing else: no
+    feature array ever lands on the object.
+  * Cross-party flows go through :class:`~repro.federation.session.
+    VerticalSession`, which records every owner->scientist message in its
+    ``transcript`` — tests assert the only payloads are PSI responses and
+    cut-layer activations (claim C4).
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.core.resolution import VerticalDataset
+from repro.core.vertical import make_ids, partition_sequence
+
+
+class PrivacyError(RuntimeError):
+    """Raised when code crosses the party-visibility boundary."""
+
+
+class DataOwner:
+    """A data owner: a vertical slice of every shared subject's features.
+
+    The owner participates in training by running its head segment and
+    shipping only cut-layer activations; raw rows never leave.  ``ids``
+    are public to the session for PSI (the protocol itself only reveals
+    the intersection to the scientist)."""
+
+    def __init__(self, name: str, ids: Sequence[str], features: np.ndarray):
+        self.name = name
+        self._vd = VerticalDataset(list(ids), np.asarray(features))
+
+    # -- public (scientist-visible) surface --------------------------------
+    @property
+    def ids(self) -> List[str]:
+        return self._vd.ids
+
+    @property
+    def n_rows(self) -> int:
+        return len(self._vd.ids)
+
+    @property
+    def feature_shape(self) -> Tuple[int, ...]:
+        """Per-row feature shape — metadata, not data."""
+        return tuple(self._vd.data.shape[1:])
+
+    @property
+    def features(self):
+        raise PrivacyError(
+            f"raw features of {self.name!r} are private to the owner; "
+            "only cut-layer activations cross the party boundary")
+
+    def __repr__(self):
+        return (f"DataOwner({self.name!r}, rows={self.n_rows}, "
+                f"feature_shape={self.feature_shape})")
+
+    # -- owner-side surface (runs 'on the owner's device') -----------------
+    @property
+    def _features(self) -> np.ndarray:
+        return self._vd.data
+
+    def _align(self, keep_ids: Sequence[str]) -> None:
+        """Discard non-shared rows and sort by ID (paper §3.1)."""
+        self._vd = self._vd.filter_and_sort(keep_ids)
+
+
+class DataScientist:
+    """The data scientist: subject ids + labels (``None`` for label-free
+    workflows such as serving).  Holds no features, ever."""
+
+    def __init__(self, ids: Sequence[str], labels: Optional[np.ndarray]):
+        self._vd = VerticalDataset(
+            list(ids),
+            np.asarray(labels) if labels is not None
+            else np.zeros(len(list(ids)), np.int32))
+        self.has_labels = labels is not None
+
+    @property
+    def ids(self) -> List[str]:
+        return self._vd.ids
+
+    @property
+    def labels(self) -> Optional[np.ndarray]:
+        return self._vd.data if self.has_labels else None
+
+    def __repr__(self):
+        return (f"DataScientist(rows={len(self._vd.ids)}, "
+                f"labels={self.has_labels})")
+
+    def _align(self, keep_ids: Sequence[str]) -> None:
+        self._vd = self._vd.filter_and_sort(keep_ids)
+
+
+# ---------------------------------------------------------------------------
+# Party constructors for the two standard vertical layouts
+# ---------------------------------------------------------------------------
+
+
+def feature_parties(scientist_ds: VerticalDataset,
+                    owner_ds: Dict[str, VerticalDataset]
+                    ) -> Tuple[DataScientist, List[DataOwner]]:
+    """Wrap ``make_vertical_mnist_parties``-style datasets (scientist
+    labels + per-owner feature slices) as party objects."""
+    sci = DataScientist(scientist_ds.ids, scientist_ds.data)
+    owners = [DataOwner(name, ds.ids, ds.data)
+              for name, ds in owner_ds.items()]
+    return sci, owners
+
+
+def sequence_parties(tokens: np.ndarray, n_owners: int,
+                     ids: Optional[Sequence[str]] = None,
+                     with_labels: bool = True
+                     ) -> Tuple[DataScientist, List[DataOwner]]:
+    """Vertically partition token streams across sequence-slice owners.
+
+    ``tokens``: (N, S+1) when ``with_labels`` (inputs ``[:, :-1]``, the
+    scientist keeps next-token labels ``[:, 1:]``), else (N, S) raw
+    contexts (serving: the scientist holds no labels).  Owner p receives
+    the contiguous sequence slice [p*S/P, (p+1)*S/P) of every document."""
+    tokens = np.asarray(tokens)
+    if with_labels:
+        inputs, labels = tokens[:, :-1], tokens[:, 1:]
+    else:
+        inputs, labels = tokens, None
+    ids = list(ids) if ids is not None else make_ids(len(tokens), "doc")
+    slices = partition_sequence(inputs, n_owners)
+    owners = [DataOwner(f"owner{p}", ids, slices[p])
+              for p in range(n_owners)]
+    return DataScientist(ids, labels), owners

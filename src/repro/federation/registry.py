@@ -1,0 +1,123 @@
+"""Model registry: one ``session.build(config)`` for every split model.
+
+A config object (``MLPSplitConfig``, ``ArchConfig``, or anything a later
+PR registers) dispatches to an *adapter* that gives the session a uniform
+surface: ``init``, ``loss_fn``, batch assembly in the right layout
+(``federation/batching.py``), default per-segment optimizers, and —
+where supported — the serving engine.  New architectures and combine
+strategies land as a registry entry + config, not a new training script.
+"""
+from __future__ import annotations
+
+from typing import Callable, Dict, Optional, Sequence, Tuple, Type
+
+import numpy as np
+
+from repro.federation import batching
+from repro.optim import adam, chain, clip_by_global_norm, multi_segment, sgd
+
+_BUILDERS: Dict[type, Callable] = {}
+
+
+def register_model(*cfg_types: type):
+    """Class decorator: dispatch ``session.build(cfg)`` on ``type(cfg)``
+    (subclasses included) to the decorated adapter."""
+    def deco(adapter_cls):
+        for t in cfg_types:
+            _BUILDERS[t] = adapter_cls
+        return adapter_cls
+    return deco
+
+
+def build_adapter(cfg):
+    for t in type(cfg).__mro__:
+        if t in _BUILDERS:
+            return _BUILDERS[t](cfg)
+    raise TypeError(
+        f"no split-model adapter registered for {type(cfg).__name__}; "
+        f"known: {[t.__name__ for t in _BUILDERS]}")
+
+
+# ---------------------------------------------------------------------------
+# Adapters
+# ---------------------------------------------------------------------------
+
+from repro.configs.base import ArchConfig
+from repro.configs.pyvertical_mnist import MLPSplitConfig
+from repro.core.splitnn import MLPSplitNN
+from repro.models.model import SplitModel
+
+
+@register_model(MLPSplitConfig)
+class MLPAdapter:
+    """The paper's Appendix-B dual-headed MLP on feature-split data."""
+
+    layout = "feature"
+    supports_serving = False
+
+    def __init__(self, cfg: MLPSplitConfig):
+        self.cfg = cfg
+        self.model = MLPSplitNN(cfg)
+        self.loss_fn = self.model.loss_fn
+
+    def init(self, key):
+        return self.model.init(key)
+
+    def make_batch(self, owner_arrays: Sequence[np.ndarray],
+                   labels: Optional[np.ndarray], idx=None):
+        return batching.feature_batch(owner_arrays, labels, idx)
+
+    def default_optimizer(self, owner_lr: Optional[float] = None,
+                          scientist_lr: Optional[float] = None):
+        sp = self.cfg.split
+        return multi_segment({
+            "heads": sgd(owner_lr if owner_lr is not None else sp.owner_lr),
+            "trunk": sgd(scientist_lr if scientist_lr is not None
+                         else sp.scientist_lr)})
+
+    def cut_shape(self, batch_size: int,
+                  feature_shape: Tuple[int, ...]) -> Tuple[int, ...]:
+        """Per-owner cut activation shape: (B, k) — NOT the raw width."""
+        return (batch_size, self.model.k)
+
+
+@register_model(ArchConfig)
+class SplitLMAdapter:
+    """Sequence-split language models (`SplitModel`) — text modality."""
+
+    layout = "sequence"
+    supports_serving = True
+
+    def __init__(self, cfg: ArchConfig):
+        if cfg.modality != "text":
+            raise ValueError(
+                f"VerticalSession drives text archs; {cfg.name} is "
+                f"{cfg.modality} (see examples/ for vlm/audio training)")
+        self.cfg = cfg
+        self.model = SplitModel(cfg)
+        self.loss_fn = self.model.loss_fn
+
+    def init(self, key):
+        return self.model.init(key)
+
+    def make_batch(self, owner_arrays: Sequence[np.ndarray],
+                   labels: Optional[np.ndarray], idx=None):
+        return batching.sequence_batch(owner_arrays, labels, idx)
+
+    def default_optimizer(self, owner_lr: Optional[float] = None,
+                          scientist_lr: Optional[float] = None):
+        return multi_segment({
+            "heads": chain(clip_by_global_norm(1.0),
+                           adam(owner_lr if owner_lr is not None else 1e-3)),
+            "trunk": chain(clip_by_global_norm(1.0),
+                           adam(scientist_lr if scientist_lr is not None
+                                else 1e-3))})
+
+    def cut_shape(self, batch_size: int,
+                  feature_shape: Tuple[int, ...]) -> Tuple[int, ...]:
+        """(B, S_p, k): sequence-slice cut activations."""
+        return (batch_size, feature_shape[0], self.model.k)
+
+    def make_engine(self, params, **engine_kw):
+        from repro.launch.engine import ServingEngine   # avoid import cycle
+        return ServingEngine(self.model, params, **engine_kw)

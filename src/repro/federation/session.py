@@ -1,0 +1,318 @@
+"""VerticalSession — the single entrypoint for every PyVertical workflow.
+
+The paper's pipeline (Fig. 2) as a facade over the repo's machinery:
+
+    sci, owners = feature_parties(*make_vertical_mnist_parties(2000))
+    session = VerticalSession(sci, owners)
+    session.resolve(group="modp512")          # DH-PSI + ID alignment
+    session.build(CONFIG)                     # MLPSplitNN | SplitModel
+    history = session.fit(epochs=10, batch_size=128, eval_frac=0.15)
+    engine = session.serve(...)               # split-inference (LM archs)
+
+Party-visibility contract (enforced, see ``tests/test_federation.py``):
+owners never see labels, the scientist never receives raw feature arrays.
+Every cross-party message the session mediates is appended to
+``session.transcript``; during training the only owner->scientist payloads
+are PSI responses and cut-layer activations (claim C4), and the only
+scientist->owner payloads are blinded PSI sets, the resolved-ID broadcast,
+and cut-layer gradients.
+"""
+from __future__ import annotations
+
+import time
+from typing import Dict, List, Optional, Sequence, Union
+
+import jax
+import numpy as np
+
+from repro.core.psi import GROUPS, PSIClient, PSIServer
+from repro.core.splitnn import (cut_layer_traffic, make_split_train_step,
+                                train_state_init)
+from repro.federation import batching
+from repro.federation.parties import DataOwner, DataScientist, PrivacyError
+from repro.federation.registry import build_adapter
+
+
+class VerticalSession:
+    """Orchestrates one scientist + N owners through resolve / build /
+    fit / evaluate / serve.  The session itself is the trusted simulation
+    runtime; party objects keep their raw data private."""
+
+    def __init__(self, scientist: DataScientist,
+                 owners: Union[Sequence[DataOwner], Dict[str, DataOwner]],
+                 *, seed: int = 0):
+        self.scientist = scientist
+        self.owners: List[DataOwner] = (list(owners.values())
+                                        if isinstance(owners, dict)
+                                        else list(owners))
+        if len({o.name for o in self.owners}) != len(self.owners):
+            raise ValueError("owner names must be unique")
+        if not self.owners:
+            raise ValueError("need at least one data owner")
+        self.seed = seed
+        self.transcript: List[dict] = []
+        self.resolve_stats: Optional[dict] = None
+        self.adapter = None
+        self.params = None
+        self.history: Optional[dict] = None
+        self._resolved = False
+        self._eval_idx = np.arange(0)
+        self._train_idx: Optional[np.ndarray] = None
+        self._eval_fn = None
+
+    # ------------------------------------------------------------- plumbing
+
+    def _log(self, frm: str, to: str, kind: str, **payload):
+        self.transcript.append({"from": frm, "to": to, "kind": kind,
+                                **payload})
+
+    def _owner_arrays(self) -> List[np.ndarray]:
+        """Owner-side accessor: aligned per-owner feature matrices.  These
+        arrays feed the jitted joint step (the simulation of owner-local
+        head computation); they are never attached to the scientist."""
+        return [o._features for o in self.owners]
+
+    def _require(self, *, resolved=False, built=False, labels=False):
+        if resolved and not self._resolved:
+            raise RuntimeError("call session.resolve() before training — "
+                               "parties are not ID-aligned yet")
+        if built and self.adapter is None:
+            raise RuntimeError("call session.build(config) first")
+        if labels and not self.scientist.has_labels:
+            raise PrivacyError("the scientist holds no labels; this "
+                               "session supports inference only")
+
+    # ------------------------------------------------------------ 1. resolve
+
+    def resolve(self, *, group: str = "modp2048",
+                fp_rate: float = 1e-9) -> dict:
+        """The paper's §3.1 protocol: the scientist runs DH-PSI pairwise
+        with each owner (scientist = client, so only the scientist learns
+        each intersection), intersects globally, broadcasts the shared IDs,
+        and every party filter-and-sorts.  Returns the stats dict."""
+        nb = GROUPS[group][2]
+        stats: dict = {"rounds": [], "global_intersection": 0}
+        global_ids = set(self.scientist.ids)
+        for owner in self.owners:
+            client = PSIClient(self.scientist.ids, group)
+            server = PSIServer(owner.ids, fp_rate, group)
+            blinded = client.blind()
+            double, bf = server.respond(blinded)
+            inter = client.intersect(double, bf)
+            global_ids &= set(inter)
+            up, down = nb * len(blinded), nb * len(double) + bf.nbytes()
+            self._log("scientist", owner.name, "psi_blinded", bytes=up)
+            self._log(owner.name, "scientist", "psi_response", bytes=down,
+                      width=None)
+            stats["rounds"].append({
+                "owner": owner.name, "intersection_size": len(inter),
+                "client_upload_bytes": up, "server_response_bytes": down,
+                "bloom_bytes": bf.nbytes()})
+        stats["global_intersection"] = len(global_ids)
+        self.scientist._align(global_ids)
+        for owner in self.owners:
+            owner._align(global_ids)
+            self._log("scientist", owner.name, "resolved_ids",
+                      count=len(global_ids))
+            # invariant SplitNN training relies on: identical ID order
+            assert owner.ids == self.scientist.ids, \
+                f"misaligned owner {owner.name}"
+        self._resolved = True
+        self.resolve_stats = stats
+        return stats
+
+    # -------------------------------------------------------------- 2. build
+
+    def build(self, config, *, seed: Optional[int] = None
+              ) -> "VerticalSession":
+        """Instantiate the split model for ``config`` via the registry
+        (``MLPSplitConfig`` -> MLPSplitNN, ``ArchConfig`` -> SplitModel)
+        and initialize per-party parameters."""
+        self.adapter = build_adapter(config)
+        key = jax.random.PRNGKey(self.seed if seed is None else seed)
+        self.params = self.adapter.init(key)
+        self._eval_fn = jax.jit(
+            lambda p, b: self.adapter.loss_fn(p, b)[1])
+        return self
+
+    # ---------------------------------------------------------------- 3. fit
+
+    def fit(self, *, epochs: Optional[int] = None,
+            steps: Optional[int] = None, batch_size: int = 128,
+            eval_frac: float = 0.0, owner_lr: Optional[float] = None,
+            scientist_lr: Optional[float] = None,
+            log_every: Optional[int] = None, ckpt_dir: Optional[str] = None,
+            ckpt_every: int = 0, shuffle_seed: Optional[int] = None,
+            verbose: bool = True) -> dict:
+        """The jitted per-segment-optimizer training loop.
+
+        Exactly one of ``epochs`` (feature workloads) / ``steps`` (LM
+        workloads) must be given.  ``eval_frac`` holds out the last
+        fraction of aligned rows; per-epoch (or final) eval metrics land
+        in ``history["eval"]``.  ``ckpt_dir``+``ckpt_every`` write
+        per-party checkpoints through ``repro.checkpoint.save_split``.
+        Returns ``{"train": [...], "eval": [...], "final": {...}}``."""
+        self._require(resolved=True, built=True, labels=True)
+        if (epochs is None) == (steps is None):
+            raise ValueError("pass exactly one of epochs= or steps=")
+
+        n = len(self.scientist.ids)
+        n_train = n - int(n * eval_frac)
+        if n_train < batch_size:
+            raise ValueError(f"{n_train} train rows < batch {batch_size}")
+        self._train_idx = np.arange(n_train)
+        self._eval_idx = np.arange(n_train, n)
+
+        adapter = self.adapter
+        opt = adapter.default_optimizer(owner_lr, scientist_lr)
+        state = train_state_init(self.params, opt)
+        step_fn = make_split_train_step(adapter.loss_fn, opt, donate=False)
+
+        # the per-step protocol traffic, recorded once (static shapes)
+        for owner in self.owners:
+            shape = adapter.cut_shape(batch_size, owner.feature_shape)
+            self._log(owner.name, "scientist", "cut_activations",
+                      shape=shape, width=shape[-1], per_step=True)
+            self._log("scientist", owner.name, "cut_gradients",
+                      shape=shape, per_step=True)
+
+        owner_arrays = self._owner_arrays()
+        labels = self.scientist.labels
+        rng = np.random.default_rng(self.seed if shuffle_seed is None
+                                    else shuffle_seed)
+        history: dict = {"train": [], "eval": []}
+        t0 = time.time()
+        metrics = {}
+
+        def scalars(m):
+            return {k: float(v) for k, v in m.items()}
+
+        if epochs is not None:
+            global_step = 0
+            for ep in range(epochs):
+                order = rng.permutation(self._train_idx)
+                for s in range(0, n_train - batch_size + 1, batch_size):
+                    batch = adapter.make_batch(
+                        owner_arrays, labels, order[s:s + batch_size])
+                    self.params, state, metrics = step_fn(
+                        self.params, state, batch, global_step)
+                    global_step += 1
+                rec = {"epoch": ep, **scalars(metrics)}
+                history["train"].append(rec)
+                if len(self._eval_idx):
+                    history["eval"].append(
+                        {"epoch": ep, **self.evaluate()})
+                if verbose and (ep % (log_every or 1) == 0
+                                or ep == epochs - 1):
+                    ev = history["eval"][-1] if history["eval"] else {}
+                    extra = "".join(f" val_{k}={v:.4f}"
+                                    for k, v in ev.items() if k != "epoch")
+                    print(f"epoch {ep:3d} " + " ".join(
+                        f"{k}={v:.4f}" for k, v in rec.items()
+                        if k != "epoch") + extra +
+                        f" ({time.time() - t0:.1f}s)")
+                if ckpt_dir and ckpt_every and (ep + 1) % ckpt_every == 0:
+                    self.checkpoint(ckpt_dir, ep + 1)
+        else:
+            order = rng.permutation(self._train_idx)
+            cursor = 0
+            for i in range(steps):
+                if cursor + batch_size > n_train:
+                    order = rng.permutation(self._train_idx)
+                    cursor = 0
+                idx = order[cursor:cursor + batch_size]
+                cursor += batch_size
+                batch = adapter.make_batch(owner_arrays, labels, idx)
+                self.params, state, metrics = step_fn(
+                    self.params, state, batch, i)
+                rec = {"step": i, **scalars(metrics)}
+                history["train"].append(rec)
+                if verbose and log_every and (i % log_every == 0
+                                              or i == steps - 1):
+                    print(f"step {i:5d} " + " ".join(
+                        f"{k}={v:.4f}" for k, v in rec.items()
+                        if k != "step") + f" ({time.time() - t0:.1f}s)")
+                if ckpt_dir and ckpt_every and (i + 1) % ckpt_every == 0:
+                    self.checkpoint(ckpt_dir, i + 1)
+            if len(self._eval_idx):
+                history["eval"].append({"step": steps, **self.evaluate()})
+
+        final = dict(history["train"][-1]) if history["train"] else {}
+        if history["eval"]:
+            final.update({f"val_{k}": v
+                          for k, v in history["eval"][-1].items()
+                          if k not in ("epoch", "step")})
+        history["final"] = final
+        self.history = history
+        return history
+
+    # ------------------------------------------------------------ 4. eval
+
+    def evaluate(self, *, split: str = "eval",
+                 batch_size: int = 512) -> Dict[str, float]:
+        """Metrics on the held-out (or train) rows, batched and
+        length-weighted."""
+        self._require(resolved=True, built=True, labels=True)
+        idx = self._eval_idx if split == "eval" else self._train_idx
+        if idx is None or not len(idx):
+            raise ValueError(f"no rows in split {split!r} — "
+                             "fit with eval_frac > 0 first")
+        owner_arrays = self._owner_arrays()
+        labels = self.scientist.labels
+        totals: Dict[str, float] = {}
+        n_done = 0
+        for s in range(0, len(idx), batch_size):
+            sub = idx[s:s + batch_size]
+            m = self._eval_fn(self.params, self.adapter.make_batch(
+                owner_arrays, labels, sub))
+            for k, v in m.items():
+                totals[k] = totals.get(k, 0.0) + float(v) * len(sub)
+            n_done += len(sub)
+        return {k: v / n_done for k, v in totals.items()}
+
+    # ------------------------------------------------------------ 5. serve
+
+    def serve(self, **engine_kw):
+        """Wrap the resident split model in a ``ServingEngine`` (LM archs).
+        Kwargs are forwarded: ``batch_slots, ctx_len, max_new, eos_token,
+        ring_cache, pad_token``."""
+        self._require(built=True)
+        if not getattr(self.adapter, "supports_serving", False):
+            raise ValueError(
+                f"{type(self.adapter).__name__} does not support serving")
+        return self.adapter.make_engine(self.params, **engine_kw)
+
+    def serve_dataset(self, *, max_new: int = 16, batch_slots: int = 4,
+                      n_requests: Optional[int] = None, **engine_kw):
+        """Serve the session's own aligned contexts: owners' sequence
+        slices are merged (owner-side) into each request's context, queued,
+        and decoded in waves.  Returns ({rid: Result}, engine)."""
+        self._require(resolved=True, built=True)
+        contexts = batching.merge_sequence_slices(
+            np.stack(self._owner_arrays()))
+        if n_requests is not None:
+            contexts = contexts[:n_requests]
+        engine = self.serve(batch_slots=batch_slots,
+                            ctx_len=contexts.shape[1], max_new=max_new,
+                            **engine_kw)
+        for row in contexts:
+            engine.submit(row)
+        return engine.run(), engine
+
+    # ---------------------------------------------------------- accounting
+
+    def checkpoint(self, ckpt_dir: str, step: int = 0) -> str:
+        """Per-party checkpoints: heads/owner{i}.npz + trunk.npz."""
+        self._require(built=True)
+        from repro import checkpoint as ckpt
+        return ckpt.save_split(ckpt_dir, self.params, step)
+
+    def cut_traffic(self, batch_size: int,
+                    bytes_per_el: int = 4) -> Dict[str, int]:
+        """Bytes crossing each owner<->scientist boundary per step (C4)."""
+        self._require(built=True)
+        shape = self.adapter.cut_shape(
+            batch_size, self.owners[0].feature_shape)
+        tokens = shape[1] if len(shape) == 3 else 1
+        return cut_layer_traffic(len(self.owners), batch_size, tokens,
+                                 shape[-1], bytes_per_el)

@@ -1,0 +1,18 @@
+"""Version-compat shims for Pallas TPU API drift.
+
+jax has renamed the TPU compiler-params dataclass across releases
+(``pltpu.CompilerParams`` <-> ``pltpu.TPUCompilerParams``).  All kernels
+construct it through :func:`compiler_params`, which resolves whichever
+name the installed jax ships.
+"""
+from __future__ import annotations
+
+from jax.experimental.pallas import tpu as pltpu
+
+CompilerParams = getattr(pltpu, "CompilerParams", None) \
+    or getattr(pltpu, "TPUCompilerParams")
+
+
+def compiler_params(**kwargs):
+    """Build the TPU compiler-params object for ``pl.pallas_call``."""
+    return CompilerParams(**kwargs)

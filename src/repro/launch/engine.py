@@ -22,6 +22,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.federation import batching
 from repro.models.model import SplitModel
 
 
@@ -69,22 +70,19 @@ class ServingEngine:
         self._queue.append(Request(rid, tokens, max_new or self.max_new))
         return rid
 
-    def _owner_slices(self, batch_tokens: np.ndarray):
-        """(B, S) padded contexts -> (P, B, S_p) owner slices."""
-        B, S = batch_tokens.shape
-        return jnp.asarray(
-            batch_tokens.reshape(B, self.P, S // self.P).transpose(1, 0, 2))
-
     def _run_wave(self, wave: List[Request]) -> List[Result]:
         t0 = time.time()
         B, S = self.B, self.S
-        toks = np.full((B, S), self.pad, np.int32)
-        for i, r in enumerate(wave):
-            toks[i, S - len(r.tokens):] = r.tokens   # left-pad: recency
+        # serving layout (federation/batching.py): left-pad for recency,
+        # then the standard (P, B, S_p) sequence-slice partition
+        toks = batching.pad_contexts([r.tokens for r in wave], B, S,
+                                     pad=self.pad, pad_side="left")
         caches = self.model.cache_init(B, S, n_new=self.max_new + 1,
                                        ring=self.ring)
         logits, caches = self._prefill(
-            self.params, {"owner_tokens": self._owner_slices(toks)}, caches)
+            self.params,
+            {"owner_tokens": batching.serving_owner_slices(toks, self.P)},
+            caches)
         tok = jnp.argmax(logits, -1)[:, None].astype(jnp.int32)
 
         results = [Result(r.rid) for r in wave]
@@ -92,13 +90,15 @@ class ServingEngine:
         done[len(wave):] = True                      # empty slots
         for t in range(self.max_new):
             tk = np.asarray(tok[:, 0])
+            appended = 0
             for i, r in enumerate(wave):
                 if not done[i]:
                     results[i].generated.append(int(tk[i]))
+                    appended += 1
                     if (self.eos is not None and tk[i] == self.eos) or \
                             len(results[i].generated) >= r.max_new:
                         done[i] = True
-            self.stats["tokens_generated"] += int((~done[:len(wave)]).sum())
+            self.stats["tokens_generated"] += appended
             if done.all() or t == self.max_new - 1:
                 break
             logits, caches = self._decode(self.params, caches, tok,

@@ -3,36 +3,22 @@
     PYTHONPATH=src python -m repro.launch.train --arch llama3.2-3b \
         --reduced --steps 50 --batch 8 --seq 256
 
-Builds the vertical data (token streams split across owners), the split
-model, per-segment optimizers (paper: owners and scientist train their own
-segments), and runs jitted train steps with checkpointing.
+A thin client of ``VerticalSession``: token streams are vertically
+partitioned into sequence-slice owners + a label-holding scientist, the
+session resolves/aligns them (DH-PSI), builds the split model through the
+registry, and runs the jitted per-segment-optimizer loop with
+checkpointing.
 """
 from __future__ import annotations
 
 import argparse
-import time
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
-from repro import checkpoint as ckpt
 from repro.configs import get_config
-from repro.core.splitnn import make_split_train_step, train_state_init
-from repro.data import make_token_dataset, batches
-from repro.models.model import SplitModel
-from repro.optim import adam, chain, clip_by_global_norm, multi_segment, sgd
-
-
-def make_batch(cfg, toks):
-    """toks: (B, S+1) -> owner-partitioned training batch."""
-    B, S1 = toks.shape
-    S = S1 - 1
-    P = cfg.split.n_owners
-    inp, lab = toks[:, :-1], toks[:, 1:]
-    owner_tokens = inp.reshape(B, P, S // P).transpose(1, 0, 2)
-    return {"owner_tokens": jnp.asarray(owner_tokens),
-            "labels": jnp.asarray(lab)}
+from repro.data import make_token_dataset
+from repro.federation import VerticalSession, sequence_parties
 
 
 def main(argv=None):
@@ -54,34 +40,26 @@ def main(argv=None):
     if cfg.modality != "text":
         raise SystemExit("train.py drives text archs; see examples/ for "
                          "vlm/audio training")
-    model = SplitModel(cfg)
-    params = model.init(jax.random.PRNGKey(args.seed))
-    n_params = sum(int(np.prod(p.shape)) for p in jax.tree.leaves(params))
+    toks = make_token_dataset(max(args.batch * 8, 64), args.seq,
+                              cfg.vocab, args.seed)
+    session = VerticalSession(
+        *sequence_parties(toks, cfg.split.n_owners), seed=args.seed)
+    session.resolve(group="modp512")
+    session.build(cfg, seed=args.seed)
+
+    model = session.adapter.model
+    n_params = sum(int(np.prod(p.shape))
+                   for p in jax.tree.leaves(session.params))
     print(f"arch={cfg.name} reduced={args.reduced} params={n_params/1e6:.1f}M"
           f" owners={cfg.split.n_owners} cut_layer={model.n_head_units}")
 
-    opt = multi_segment({
-        "heads": chain(clip_by_global_norm(1.0), adam(args.owner_lr)),
-        "trunk": chain(clip_by_global_norm(1.0), adam(args.scientist_lr)),
-    })
-    state = train_state_init(params, opt)
-    step_fn = make_split_train_step(model.loss_fn, opt)
-
-    toks = make_token_dataset(max(args.batch * 8, 64), args.seq,
-                              cfg.vocab, args.seed)
-    it = batches({"toks": toks}, args.batch, seed=args.seed, epochs=10_000)
-
-    t0 = time.time()
-    for i in range(args.steps):
-        batch = make_batch(cfg, next(it)["toks"])
-        params, state, metrics = step_fn(params, state, batch, i)
-        if i % args.log_every == 0 or i == args.steps - 1:
-            print(f"step {i:5d} loss {float(metrics['loss']):.4f} "
-                  f"({(time.time()-t0):.1f}s)")
-        if args.ckpt_every and args.ckpt_dir and (i + 1) % args.ckpt_every == 0:
-            d = ckpt.save_split(args.ckpt_dir, params, i + 1)
-            print(f"  checkpointed (per-party) -> {d}")
-    return float(metrics["loss"])
+    history = session.fit(
+        steps=args.steps, batch_size=args.batch,
+        owner_lr=args.owner_lr, scientist_lr=args.scientist_lr,
+        log_every=args.log_every,
+        ckpt_dir=args.ckpt_dir,
+        ckpt_every=args.ckpt_every if args.ckpt_dir else 0)
+    return history["final"]["loss"]
 
 
 if __name__ == "__main__":

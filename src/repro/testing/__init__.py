@@ -1,0 +1,2 @@
+from repro.testing.hypo import (HAVE_HYPOTHESIS, given,  # noqa: F401
+                                settings, strategies)

@@ -3,7 +3,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from repro.testing.hypo import given, settings, strategies as st
 
 from repro.models.attention import attention, init_kv_cache, update_kv_cache
 

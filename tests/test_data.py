@@ -1,7 +1,7 @@
 """Data pipeline: determinism, alignment, learnable structure."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from repro.testing.hypo import given, settings, strategies as st
 
 from repro.data import (batches, make_mnist_like, make_token_dataset,
                         make_vertical_mnist_parties)

@@ -1,0 +1,204 @@
+"""The party-centric federation API: batching round-trips, the
+party-visibility contract, registry dispatch, and the full
+resolve -> build -> fit session round-trip (claim C2 through the facade).
+"""
+import numpy as np
+import pytest
+
+from repro.testing.hypo import given, settings, strategies as st
+
+from repro.configs import get_config
+from repro.configs.pyvertical_mnist import CONFIG as MNIST_CFG
+from repro.core.vertical import (partition_features, partition_sequence,
+                                 unpartition)
+from repro.data import make_token_dataset, make_vertical_mnist_parties
+from repro.federation import (DataOwner, DataScientist, PrivacyError,
+                              VerticalSession, batching, build_adapter,
+                              feature_parties, sequence_parties)
+
+RNG = np.random.default_rng(0)
+
+
+# ---------------------------------------------------------------------------
+# batching: one module, three layouts, all round-trip against core/vertical
+# ---------------------------------------------------------------------------
+
+
+@given(st.integers(1, 16), st.integers(1, 12), st.sampled_from([1, 2, 4]))
+@settings(max_examples=25, deadline=None)
+def test_feature_layout_round_trips(batch, width_per_owner, n_owners):
+    x = RNG.normal(size=(batch, width_per_owner * n_owners))
+    slices = partition_features(x, n_owners)
+    stacked = batching.stack_feature_slices(slices)
+    assert stacked.shape == (n_owners, batch, width_per_owner)
+    np.testing.assert_array_equal(np.stack(slices), stacked)
+    back = unpartition(batching.unstack_feature_slices(stacked), axis=-1)
+    np.testing.assert_array_equal(back, x)
+
+
+@given(st.integers(1, 8), st.integers(1, 16), st.sampled_from([1, 2, 4]))
+@settings(max_examples=25, deadline=None)
+def test_sequence_layout_round_trips(batch, s_per_owner, n_owners):
+    toks = RNG.integers(0, 1000, (batch, s_per_owner * n_owners))
+    ot = batching.sequence_owner_slices(toks, n_owners)
+    assert ot.shape == (n_owners, batch, s_per_owner)
+    np.testing.assert_array_equal(np.stack(partition_sequence(toks,
+                                                              n_owners)), ot)
+    np.testing.assert_array_equal(batching.merge_sequence_slices(ot), toks)
+
+
+def test_imbalanced_feature_slices_stay_ragged():
+    slices = [RNG.normal(size=(8, 588)), RNG.normal(size=(8, 196))]
+    out = batching.stack_feature_slices(slices)
+    assert isinstance(out, list) and out[0].shape == (8, 588)
+    batch = batching.feature_batch(slices, np.zeros(8, np.int32))
+    assert isinstance(batch["x_slices"], list)
+
+
+def test_pad_contexts_serving_layout():
+    ctxs = [np.arange(3), np.arange(5)]
+    wave = batching.pad_contexts(ctxs, n_slots=4, length=6, pad=-1)
+    assert wave.shape == (4, 6)
+    np.testing.assert_array_equal(wave[0], [-1, -1, -1, 0, 1, 2])  # left pad
+    np.testing.assert_array_equal(wave[1], [-1, 0, 1, 2, 3, 4])
+    assert (wave[2:] == -1).all()                                  # empty slots
+    with pytest.raises(ValueError):
+        batching.pad_contexts([np.arange(9)], 1, 6)
+    with pytest.raises(ValueError):
+        batching.pad_contexts(ctxs, 1, 6)
+
+
+def test_sequence_batch_assembles_owner_tokens():
+    toks = make_token_dataset(6, 8, 50, 0)
+    sci, owners = sequence_parties(toks, 2)
+    batch = batching.sequence_batch([o._features for o in owners],
+                                    sci.labels, idx=np.array([0, 2]))
+    assert batch["owner_tokens"].shape == (2, 2, 4)
+    assert batch["labels"].shape == (2, 8)
+    merged = batching.merge_sequence_slices(np.asarray(batch["owner_tokens"]))
+    np.testing.assert_array_equal(merged, toks[[0, 2], :-1])
+
+
+# ---------------------------------------------------------------------------
+# the party-visibility contract
+# ---------------------------------------------------------------------------
+
+
+def test_owner_exposes_no_labels_and_no_raw_features():
+    owner = DataOwner("o", ["a", "b"], np.zeros((2, 4)))
+    assert not hasattr(owner, "labels")
+    with pytest.raises(PrivacyError):
+        owner.features
+    # metadata is fine; data is not
+    assert owner.feature_shape == (4,) and owner.n_rows == 2
+
+
+def test_scientist_holds_labels_only():
+    sci = DataScientist(["a", "b"], np.array([1, 0]))
+    assert sci.labels.tolist() == [1, 0]
+    held = [v for v in sci.__dict__.values()]
+    # the only array state is the labels dataset — nothing feature-shaped
+    assert sci._vd.data.ndim == 1
+
+
+def _short_session(n=300, epochs=1):
+    sci, owners = make_vertical_mnist_parties(n, seed=0, keep_frac=0.9)
+    session = VerticalSession(*feature_parties(sci, owners))
+    session.resolve(group="modp512")
+    session.build(MNIST_CFG)
+    session.fit(epochs=epochs, batch_size=64, verbose=False)
+    return session
+
+
+def test_scientist_path_receives_only_cut_width_payloads():
+    """Claim C4 through the facade: the transcript of owner->scientist
+    messages contains ONLY PSI responses and cut-layer activations, and
+    every activation payload has the cut width (64) — never the raw
+    per-owner feature width (392)."""
+    session = _short_session()
+    raw_width = session.owners[0].feature_shape[0]
+    to_scientist = [m for m in session.transcript
+                    if m["to"] == "scientist"]
+    assert to_scientist, "transcript must record cross-party traffic"
+    assert {m["kind"] for m in to_scientist} <= {"psi_response",
+                                                 "cut_activations"}
+    cuts = [m for m in to_scientist if m["kind"] == "cut_activations"]
+    assert len(cuts) == len(session.owners)
+    for m in cuts:
+        assert m["width"] == session.adapter.model.k == 64
+        assert m["width"] != raw_width and raw_width == 392
+    # and the reverse direction carries only protocol messages
+    from_scientist = {m["kind"] for m in session.transcript
+                      if m["from"] == "scientist"}
+    assert from_scientist <= {"psi_blinded", "resolved_ids",
+                              "cut_gradients"}
+
+
+def test_session_guardrails():
+    sci, owners = make_vertical_mnist_parties(200, seed=0)
+    session = VerticalSession(*feature_parties(sci, owners))
+    with pytest.raises(RuntimeError, match="resolve"):
+        session.fit(epochs=1)
+    session.resolve(group="modp512")
+    with pytest.raises(RuntimeError, match="build"):
+        session.fit(epochs=1)
+    session.build(MNIST_CFG)
+    with pytest.raises(ValueError, match="exactly one"):
+        session.fit(epochs=1, steps=1)
+    # a label-free (serving) session must refuse to train
+    toks = make_token_dataset(8, 16, 50, 0)[:, :16]
+    s2 = VerticalSession(*sequence_parties(toks, 2, with_labels=False))
+    s2.resolve(group="modp512")
+    s2.build(get_config("llama3.2-3b", reduced=True))
+    with pytest.raises(PrivacyError):
+        s2.fit(steps=1, batch_size=2)
+
+
+# ---------------------------------------------------------------------------
+# registry
+# ---------------------------------------------------------------------------
+
+
+def test_registry_dispatch():
+    assert type(build_adapter(MNIST_CFG)).__name__ == "MLPAdapter"
+    cfg = get_config("llama3.2-3b", reduced=True)
+    assert type(build_adapter(cfg)).__name__ == "SplitLMAdapter"
+    with pytest.raises(TypeError, match="no split-model adapter"):
+        build_adapter(object())
+    with pytest.raises(ValueError, match="text archs"):
+        build_adapter(get_config("whisper-tiny", reduced=True))
+
+
+# ---------------------------------------------------------------------------
+# session round-trips
+# ---------------------------------------------------------------------------
+
+
+def test_session_round_trip_mnist_accuracy():
+    """resolve -> build -> fit on vertical MNIST-like data reaches >85%
+    val accuracy with the paper's Appendix-B hyperparameters."""
+    sci, owners = make_vertical_mnist_parties(4000, seed=0, keep_frac=0.9)
+    session = VerticalSession(*feature_parties(sci, owners))
+    stats = session.resolve(group="modp512")
+    assert stats["global_intersection"] > 3000
+    session.build(MNIST_CFG)
+    history = session.fit(epochs=30, batch_size=128, eval_frac=0.15,
+                          verbose=False)
+    assert history["final"]["val_accuracy"] > 0.85
+
+
+def test_session_sequence_fit_and_serve():
+    """The LM path: sequence-slice owners train through the same facade,
+    and the fitted model serves its aligned contexts."""
+    cfg = get_config("llama3.2-3b", reduced=True)
+    toks = make_token_dataset(16, 32, cfg.vocab, 0)
+    session = VerticalSession(*sequence_parties(toks, cfg.split.n_owners))
+    session.resolve(group="modp512")
+    session.build(cfg)
+    history = session.fit(steps=3, batch_size=4, verbose=False)
+    assert np.isfinite(history["final"]["loss"])
+    results, engine = session.serve_dataset(max_new=3, batch_slots=4,
+                                            n_requests=4)
+    assert len(results) == 4
+    assert all(len(r.generated) == 3 for r in results.values())
+    assert engine.stats["requests"] == 4

@@ -3,7 +3,7 @@ import hashlib
 
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from repro.testing.hypo import given, settings, strategies as st
 
 from repro.core.bloom import BloomFilter
 from repro.core.psi import (GROUPS, PSIClient, PSIServer, hash_to_group,

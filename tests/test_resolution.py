@@ -1,7 +1,7 @@
 """The §3.1 data-resolution protocol: alignment invariants (claim C1)."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from repro.testing.hypo import given, settings, strategies as st
 
 from repro.core.resolution import VerticalDataset, resolve
 from repro.core.vertical import (make_ids, partition_features,

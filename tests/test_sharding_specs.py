@@ -7,18 +7,19 @@ from jax.sharding import PartitionSpec as P
 
 from repro.configs import get_config
 from repro.models.model import SplitModel
-from repro.sharding.specs import ShardingRules, make_rules, param_specs
+from repro.sharding.specs import (ShardingRules, abstract_mesh, make_rules,
+                                  param_specs)
 
 
 @pytest.fixture(scope="module")
 def mesh16():
     # spec construction only consults mesh.shape / axis_names
-    return jax.sharding.AbstractMesh((16, 16), ("data", "model"))
+    return abstract_mesh((16, 16), ("data", "model"))
 
 
 @pytest.fixture(scope="module")
 def mesh_pod():
-    return jax.sharding.AbstractMesh((2, 16, 16), ("pod", "data", "model"))
+    return abstract_mesh((2, 16, 16), ("pod", "data", "model"))
 
 
 def _specs(arch, mesh, **kw):

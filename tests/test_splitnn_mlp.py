@@ -4,7 +4,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from repro.testing.hypo import given, settings, strategies as st
 
 from repro.configs.pyvertical_mnist import CONFIG as MNIST_CFG, MLPSplitConfig
 from repro.core.splitnn import (MLPSplitNN, cut_layer_traffic,
