@@ -2,7 +2,7 @@
 PY := python
 export PYTHONPATH := src
 
-.PHONY: verify test fast quickstart
+.PHONY: verify test fast quickstart bench
 
 verify:
 	$(PY) -m pytest -x -q
@@ -15,3 +15,7 @@ fast:
 
 quickstart:
 	$(PY) examples/quickstart.py
+
+# CI-sized benchmark sweep; transport_bench also writes BENCH_transport.json
+bench:
+	$(PY) -m benchmarks.run --fast

@@ -18,13 +18,16 @@ def main() -> None:
     args = ap.parse_args()
 
     from benchmarks import (combine_ablation, cut_comm, fig4_accuracy,
-                            kernels_bench, psi_scaling, split_overhead)
+                            kernels_bench, psi_scaling, split_overhead,
+                            transport_bench)
 
     suites = {
         "psi_scaling": psi_scaling.run,
         "cut_comm": cut_comm.run,
         "kernels": kernels_bench.run,
         "split_overhead": split_overhead.run,
+        "transport": (lambda: transport_bench.run(n=1200, epochs=2))
+                      if args.fast else transport_bench.run,
         "combine_ablation": (lambda: combine_ablation.run(n=1500, epochs=4)
                              ) if args.fast else combine_ablation.run,
         "fig4_accuracy": (lambda: fig4_accuracy.run(n=2000, epochs=4))

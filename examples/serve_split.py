@@ -4,6 +4,12 @@ decodes the continuation.  The session merges owner slices (owner-side),
 queues every aligned request, and the engine serves them in waves against
 one resident model.
 
+By default the engine serves through a transport-backed boundary
+(``--transport direct|queue``): every cut activation crosses a real
+``federation.transport`` channel, and the cut bytes reported at the end
+are *measured* off that channel — not the analytic ``cut_traffic``
+estimate.  ``--transport none`` restores the fused joint program.
+
     PYTHONPATH=src python examples/serve_split.py [--arch llama3.2-3b]
 """
 import argparse
@@ -21,6 +27,12 @@ def main(argv=None):
     ap.add_argument("--ctx", type=int, default=128)
     ap.add_argument("--new", type=int, default=24)
     ap.add_argument("--n-batches", type=int, default=3)
+    ap.add_argument("--transport", default="direct",
+                    choices=["direct", "queue", "none"],
+                    help="channel backend for the cut boundary "
+                         "(none = fused joint program, no measurement)")
+    ap.add_argument("--latency-ms", type=float, default=0.0,
+                    help="injected per-message channel latency")
     args = ap.parse_args(argv)
 
     cfg = get_config(args.arch, reduced=True)
@@ -34,9 +46,11 @@ def main(argv=None):
 
     print(f"serving {cfg.name} (reduced): {cfg.split.n_owners} owner heads "
           f"+ trunk, ctx {args.ctx}, {args.new} new tokens/request")
+    transport = None if args.transport == "none" else args.transport
     t0 = time.time()
-    results, engine = session.serve_dataset(max_new=args.new,
-                                            batch_slots=args.batch)
+    results, engine = session.serve_dataset(
+        max_new=args.new, batch_slots=args.batch, transport=transport,
+        latency_s=args.latency_ms * 1e-3)
     dt = time.time() - t0
     st = engine.stats
     for rid in sorted(results)[:3]:
@@ -44,6 +58,11 @@ def main(argv=None):
     print(f"served {st['requests']} requests in {st['waves']} waves, "
           f"{st['tokens_generated']} tokens in {dt:.1f}s "
           f"({st['tokens_generated'] / dt:.1f} tok/s)")
+    if transport is not None:
+        print(f"measured cut traffic: {st['cut_payload_bytes']} payload B "
+              f"({st['cut_wire_bytes']} on the wire) across "
+              f"{st['cut_messages']} messages — the only owner->scientist "
+              f"tensors (raw context slices: ZERO)")
     return results
 
 

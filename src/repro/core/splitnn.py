@@ -114,13 +114,16 @@ class MLPSplitNN:
         z = self.combine(cut, rng)
         return self._mlp_apply(params["trunk"], z)   # logits (B, 10)
 
-    def loss_fn(self, params, batch, rng=None):
-        logits = self.forward(params, batch["x_slices"], rng)
-        labels = batch["labels"]
+    @staticmethod
+    def _nll_metrics(logits, labels):
         logp = jax.nn.log_softmax(logits)
         loss = -jnp.mean(jnp.take_along_axis(logp, labels[:, None], 1))
         acc = jnp.mean(jnp.argmax(logits, -1) == labels)
         return loss, {"loss": loss, "accuracy": acc}
+
+    def loss_fn(self, params, batch, rng=None):
+        logits = self.forward(params, batch["x_slices"], rng)
+        return self._nll_metrics(logits, batch["labels"])
 
 
 # ---------------------------------------------------------------------------
@@ -150,6 +153,54 @@ def make_split_train_step(loss_fn: Callable, optimizer,
 
 def train_state_init(params, optimizer):
     return optimizer.init(params)
+
+
+# ---------------------------------------------------------------------------
+# Per-segment programs (true split execution over a transport)
+# ---------------------------------------------------------------------------
+#
+# The joint step above is one autodiff program — the gradient-equivalence
+# oracle.  Split execution runs the same math as *separate* programs per
+# party: each owner jits its own head forward and an explicit-VJP head
+# backward (input: the cut gradient received over the channel); the
+# scientist jits one trunk step producing metrics, trunk grads, and the
+# cut gradients it ships back.  Chain rule guarantees the composition is
+# the joint program exactly (tested bit-for-bit in tests/test_transport).
+
+
+def make_mlp_head_programs(model: MLPSplitNN):
+    """Owner-side segment programs for one MLP head.
+
+    ``head_fwd(head_params, x) -> cut``; ``head_bwd(head_params, x,
+    cut_grad) -> head_grads`` (recompute-forward explicit VJP — the head
+    is cheap, so no residuals cross the step boundary)."""
+
+    def head_apply(hp, x):
+        return jax.nn.relu(model._mlp_apply(hp, x))
+
+    def head_bwd(hp, x, g):
+        _, vjp = jax.vjp(lambda p: head_apply(p, x), hp)
+        return vjp(g)[0]
+
+    return jax.jit(head_apply), jax.jit(head_bwd)
+
+
+def make_mlp_trunk_program(model: MLPSplitNN):
+    """Scientist-side segment program: combine + trunk + loss, forward
+    and backward.  ``trunk_step(trunk_params, cut (P, B, k), labels) ->
+    (metrics, trunk_grads, cut_grads (P, B, k))``."""
+
+    def trunk_step(tp, cut, labels):
+        def f(tp_, cut_):
+            z = model.combine(cut_)
+            logits = model._mlp_apply(tp_, z)
+            return model._nll_metrics(logits, labels)
+
+        (_, metrics), (tg, cg) = jax.value_and_grad(
+            f, argnums=(0, 1), has_aux=True)(tp, cut)
+        return metrics, tg, cg
+
+    return jax.jit(trunk_step)
 
 
 # ---------------------------------------------------------------------------

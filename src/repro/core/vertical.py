@@ -8,26 +8,50 @@ modality.
 """
 from __future__ import annotations
 
-from typing import List, Tuple
+from typing import List, Sequence, Tuple, Union
 
 import numpy as np
 
-
-def partition_features(x: np.ndarray, n_owners: int) -> List[np.ndarray]:
-    """Split feature columns (axis -1) into n contiguous owner slices.
-    The paper's MNIST split (left/right halves) is
-    ``partition_features(images.reshape(n, 28, 28), 2)`` on axis -1 —
-    equivalently on the flattened 784 vector split at 392."""
-    if x.shape[-1] % n_owners:
-        raise ValueError(f"features {x.shape[-1]} not divisible by {n_owners}")
-    return list(np.split(x, n_owners, axis=-1))
+Owners = Union[int, Sequence[int]]
 
 
-def partition_sequence(tokens: np.ndarray, n_owners: int) -> List[np.ndarray]:
-    """Split the sequence dim (axis 1) into contiguous owner slices."""
-    if tokens.shape[1] % n_owners:
-        raise ValueError(f"seq {tokens.shape[1]} not divisible by {n_owners}")
-    return list(np.split(tokens, n_owners, axis=1))
+def _split_points(width: int, owners: Owners, what: str) -> np.ndarray:
+    """Resolve an owner spec (count, or explicit per-owner sizes for
+    imbalanced vertical datasets — paper §5.1, ``MLPSplitNN.
+    feature_splits``) to the interior split offsets for ``np.split``."""
+    if isinstance(owners, (int, np.integer)):
+        if width % owners:
+            raise ValueError(
+                f"{what} {width} not divisible by {owners} owners; pass "
+                f"explicit per-owner sizes instead")
+        sizes: Sequence[int] = (width // owners,) * int(owners)
+    else:
+        sizes = tuple(int(s) for s in owners)
+        if not sizes or any(s <= 0 for s in sizes):
+            raise ValueError(f"owner sizes must be positive: {sizes}")
+        if sum(sizes) != width:
+            raise ValueError(
+                f"owner sizes {sizes} sum to {sum(sizes)} != {what} {width}")
+    return np.cumsum(sizes)[:-1]
+
+
+def partition_features(x: np.ndarray, owners: Owners) -> List[np.ndarray]:
+    """Split feature columns (axis -1) into contiguous owner slices.
+    ``owners``: an owner count (equal widths) or explicit per-owner
+    widths summing to the feature dim.  The paper's MNIST split
+    (left/right halves) is ``partition_features(images.reshape(n, 28,
+    28), 2)`` on axis -1 — equivalently on the flattened 784 vector
+    split at 392."""
+    return list(np.split(x, _split_points(x.shape[-1], owners, "features"),
+                         axis=-1))
+
+
+def partition_sequence(tokens: np.ndarray, owners: Owners
+                       ) -> List[np.ndarray]:
+    """Split the sequence dim (axis 1) into contiguous owner slices.
+    ``owners``: a count or explicit per-owner slice lengths."""
+    return list(np.split(tokens, _split_points(tokens.shape[1], owners,
+                                               "seq"), axis=1))
 
 
 def unpartition(slices: List[np.ndarray], axis: int = -1) -> np.ndarray:

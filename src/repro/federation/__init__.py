@@ -4,8 +4,9 @@
 # serving.  Every workflow (examples/, launch/) is a thin client of this
 # package; batch partitioning lives exclusively in federation.batching.
 from repro.federation.parties import (DataOwner, DataScientist,  # noqa
-                                      PrivacyError, feature_parties,
-                                      sequence_parties)
+                                      OwnerComputeEndpoint, PrivacyError,
+                                      feature_parties, sequence_parties)
 from repro.federation.registry import build_adapter, register_model  # noqa
 from repro.federation.session import VerticalSession  # noqa: F401
 from repro.federation import batching  # noqa: F401
+from repro.federation import transport  # noqa: F401

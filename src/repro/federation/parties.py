@@ -26,6 +26,7 @@ import numpy as np
 
 from repro.core.resolution import VerticalDataset
 from repro.core.vertical import make_ids, partition_sequence
+from repro.optim import apply_updates
 
 
 class PrivacyError(RuntimeError):
@@ -103,6 +104,109 @@ class DataScientist:
 
     def _align(self, keep_ids: Sequence[str]) -> None:
         self._vd = self._vd.filter_and_sort(keep_ids)
+
+
+# ---------------------------------------------------------------------------
+# Owner-side compute endpoint (true split execution)
+# ---------------------------------------------------------------------------
+
+
+class OwnerComputeEndpoint:
+    """The compute that, in a real deployment, runs on the owner's device.
+
+    Holds the owner's private feature slice, its head-segment parameters,
+    and its own optimizer state; everything else arrives as protocol
+    messages on its :class:`~repro.federation.transport.Endpoint`:
+
+      ``head_fwd``       (scientist -> owner): batch row indices, seq t.
+                         The owner gathers ITS OWN rows, runs the jitted
+                         head forward, and ships codec-encoded cut
+                         activations back — the only data that ever
+                         leaves (paper Fig. 2, arrow 5).
+      ``cut_gradients``  (scientist -> owner): the cut gradient for seq t
+                         (arrow 7).  The owner runs its explicit-VJP head
+                         backward against the inputs it cached for t and
+                         applies its own optimizer update (arrow 8).
+      ``barrier``        flush marker; the owner acks once every prior
+                         message is processed.
+      ``stop``           end of training.
+
+    FIFO channel order is the protocol's only synchronization: the
+    gradient for step t always precedes the forward request for step
+    t+1, so pipelined schedules stay mathematically exact.  ``run`` is
+    the thread target; with compute released from the GIL (jitted
+    programs), owner threads genuinely overlap the scientist's trunk.
+    """
+
+    def __init__(self, owner: DataOwner, endpoint, head_fwd, head_bwd, *,
+                 optimizer, params, codec, ack_steps: bool = False):
+        import jax
+
+        self.owner = owner
+        self.endpoint = endpoint
+        self.head_fwd, self.head_bwd = head_fwd, head_bwd
+        self.opt = optimizer
+        self.params = params
+        self.opt_state = optimizer.init(params)
+        self.codec = codec
+        self.ack_steps = ack_steps
+        self.steps_done = 0
+        self.error: Optional[BaseException] = None
+        self._inflight: Dict[int, object] = {}   # seq -> owner-side inputs
+
+        # one jitted program per segment op — update+apply compiled
+        # together, the same fusion granularity as the joint train step
+        # (required for bit-for-bit gradient equivalence)
+        def _update(p, s, g, i):
+            updates, s = optimizer.update(g, s, p, i)
+            return apply_updates(p, updates), s
+
+        self._update = jax.jit(_update)
+
+    # one message ----------------------------------------------------------
+    def handle(self, msg) -> bool:
+        """Process one protocol message; returns False on ``stop``."""
+        if msg.kind == "stop":
+            return False
+        if msg.kind == "barrier":
+            self.endpoint.send("barrier_ack", {}, seq=msg.seq)
+            return True
+        if msg.kind == "head_fwd":
+            import jax.numpy as jnp
+            seq = int(msg.seq)
+            x = jnp.asarray(self.owner._features[msg.payload["idx"]])
+            self._inflight[seq] = x
+            out = self.head_fwd(self.params, x)
+            # segment programs may return (cut, aux): the scalar
+            # owner-local aux loss rides along for metric parity
+            cut, aux = out if isinstance(out, tuple) else (out, None)
+            payload = self.codec.encode(np.asarray(cut))
+            if aux is not None:
+                payload["aux"] = np.float32(np.asarray(aux).sum())
+            self.endpoint.send("cut_activations", payload, seq=seq)
+            return True
+        if msg.kind == "cut_gradients":
+            import jax.numpy as jnp
+            seq = int(msg.seq)
+            g = jnp.asarray(self.codec.decode(msg.payload))
+            x = self._inflight.pop(seq)
+            grads = self.head_bwd(self.params, x, g)
+            self.params, self.opt_state = self._update(
+                self.params, self.opt_state, grads, self.steps_done)
+            self.steps_done += 1
+            if self.ack_steps:
+                self.endpoint.send("step_done", {}, seq=seq)
+            return True
+        raise RuntimeError(
+            f"owner {self.owner.name}: unknown message kind {msg.kind!r}")
+
+    # thread target --------------------------------------------------------
+    def run(self):
+        try:
+            while self.handle(self.endpoint.recv()):
+                pass
+        except BaseException as e:            # noqa: BLE001 — surfaced by
+            self.error = e                    # the session's recv timeout
 
 
 # ---------------------------------------------------------------------------

@@ -6,11 +6,29 @@ surface: ``init``, ``loss_fn``, batch assembly in the right layout
 (``federation/batching.py``), default per-segment optimizers, and —
 where supported — the serving engine.  New architectures and combine
 strategies land as a registry entry + config, not a new training script.
+
+Adapters with ``supports_split = True`` additionally expose the
+per-segment surface that true split execution (``fit(mode="split")``)
+runs over the transport layer:
+
+  ``owner_programs(p)``      -> (head_fwd, head_bwd) jitted owner programs
+  ``trunk_program()``        -> jitted scientist step
+                                 (trunk_params, cut, labels) ->
+                                 (metrics, trunk_grads, cut_grads)
+  ``owner_param_slice`` / ``stack_head_params``
+                             -> move one owner's head segment in/out of
+                                the joint param tree
+  ``owner_optimizer`` / ``trunk_optimizer``
+                             -> the per-party update rules (the joint
+                                ``default_optimizer`` split at the same
+                                boundary)
 """
 from __future__ import annotations
 
 from typing import Callable, Dict, Optional, Sequence, Tuple, Type
 
+import jax
+import jax.numpy as jnp
 import numpy as np
 
 from repro.federation import batching
@@ -67,18 +85,58 @@ class MLPAdapter:
                    labels: Optional[np.ndarray], idx=None):
         return batching.feature_batch(owner_arrays, labels, idx)
 
+    def _segment_opts(self, owner_lr: Optional[float] = None,
+                      scientist_lr: Optional[float] = None):
+        """THE per-segment update rules (Appendix B) — the joint
+        ``default_optimizer`` and the split-mode per-party optimizers
+        are both derived from this one definition."""
+        sp = self.cfg.split
+        return {
+            "heads": sgd(owner_lr if owner_lr is not None
+                         else sp.owner_lr),
+            "trunk": sgd(scientist_lr if scientist_lr is not None
+                         else sp.scientist_lr)}
+
     def default_optimizer(self, owner_lr: Optional[float] = None,
                           scientist_lr: Optional[float] = None):
-        sp = self.cfg.split
-        return multi_segment({
-            "heads": sgd(owner_lr if owner_lr is not None else sp.owner_lr),
-            "trunk": sgd(scientist_lr if scientist_lr is not None
-                         else sp.scientist_lr)})
+        return multi_segment(self._segment_opts(owner_lr, scientist_lr))
 
     def cut_shape(self, batch_size: int,
                   feature_shape: Tuple[int, ...]) -> Tuple[int, ...]:
         """Per-owner cut activation shape: (B, k) — NOT the raw width."""
         return (batch_size, self.model.k)
+
+    # ------------------------------------------------- split execution
+    supports_split = True
+
+    def owner_programs(self, owner_index: int):
+        from repro.core.splitnn import make_mlp_head_programs
+        return make_mlp_head_programs(self.model)
+
+    def trunk_program(self):
+        from repro.core.splitnn import make_mlp_trunk_program
+        return make_mlp_trunk_program(self.model)
+
+    def owner_param_slice(self, params, p: int):
+        if self.model.symmetric:
+            return jax.tree.map(lambda a: a[p], params["heads"])
+        return params["heads"][p]
+
+    def stack_head_params(self, slices: Sequence):
+        if self.model.symmetric:
+            return jax.tree.map(lambda *xs: jnp.stack(xs), *slices)
+        return list(slices)
+
+    def owner_batch(self, owner_array: np.ndarray, idx):
+        return jnp.asarray(owner_array[idx])
+
+    def owner_optimizer(self, owner_lr: Optional[float] = None):
+        # plain SGD is elementwise, so one owner's slice of the joint
+        # stacked-heads update IS this update (bit-for-bit equivalence)
+        return self._segment_opts(owner_lr=owner_lr)["heads"]
+
+    def trunk_optimizer(self, scientist_lr: Optional[float] = None):
+        return self._segment_opts(scientist_lr=scientist_lr)["trunk"]
 
 
 @register_model(ArchConfig)
@@ -104,14 +162,24 @@ class SplitLMAdapter:
                    labels: Optional[np.ndarray], idx=None):
         return batching.sequence_batch(owner_arrays, labels, idx)
 
-    def default_optimizer(self, owner_lr: Optional[float] = None,
-                          scientist_lr: Optional[float] = None):
-        return multi_segment({
+    def _segment_opts(self, owner_lr: Optional[float] = None,
+                      scientist_lr: Optional[float] = None):
+        """THE per-segment update rules, shared by the joint and split
+        paths.  NOTE the clip scope differs by construction: jointly the
+        "heads" rule sees every owner's grads (one global norm), while
+        split mode applies the same rule to one owner's slice — the
+        honest federated analogue (an owner cannot see peers' grads)."""
+        return {
             "heads": chain(clip_by_global_norm(1.0),
-                           adam(owner_lr if owner_lr is not None else 1e-3)),
+                           adam(owner_lr if owner_lr is not None
+                                else 1e-3)),
             "trunk": chain(clip_by_global_norm(1.0),
                            adam(scientist_lr if scientist_lr is not None
-                                else 1e-3))})
+                                else 1e-3))}
+
+    def default_optimizer(self, owner_lr: Optional[float] = None,
+                          scientist_lr: Optional[float] = None):
+        return multi_segment(self._segment_opts(owner_lr, scientist_lr))
 
     def cut_shape(self, batch_size: int,
                   feature_shape: Tuple[int, ...]) -> Tuple[int, ...]:
@@ -121,3 +189,65 @@ class SplitLMAdapter:
     def make_engine(self, params, **engine_kw):
         from repro.launch.engine import ServingEngine   # avoid import cycle
         return ServingEngine(self.model, params, **engine_kw)
+
+    # ------------------------------------------------- split execution
+    supports_split = True
+
+    def owner_programs(self, owner_index: int):
+        """Owner ``owner_index``'s jitted segment programs.  The head
+        forward embeds + runs the head blocks on the owner's sequence
+        slice (global rope positions for that slice), returning ``(cut,
+        aux)`` — the scalar aux rides along so split-mode metrics match
+        the joint path's heads+trunk aux; the backward is an explicit
+        VJP seeded with the received cut gradient plus a unit cotangent
+        on that owner-local aux loss (MoE balance gradients never need
+        to cross the boundary)."""
+        model = self.model
+
+        def head_apply(hp, tokens):
+            S_p = tokens.shape[-1]
+            positions = model._positions(S_p, owner_index)
+            cut, _, aux = model._head_one(hp, tokens, positions, 0)
+            return cut, aux
+
+        def head_fwd(hp, tokens):
+            return head_apply(hp, tokens)
+
+        def head_bwd(hp, tokens, g):
+            (cut, aux), vjp = jax.vjp(lambda q: head_apply(q, tokens), hp)
+            return vjp((g.astype(cut.dtype),
+                        jnp.ones((), aux.dtype)))[0]
+
+        return jax.jit(head_fwd), jax.jit(head_bwd)
+
+    def trunk_program(self):
+        model = self.model
+        cdt = jnp.dtype(model.cfg.compute_dtype)
+
+        def trunk_step(tp, cut, labels):
+            def f(tp_, cut_):
+                z = model.combine(cut_.astype(cdt))
+                logits, _, aux_t = model.trunk_forward(tp_, z)
+                ce = model.ce_loss(logits, labels)
+                return ce + aux_t, {"loss": ce, "aux": aux_t}
+
+            (_, metrics), (tg, cg) = jax.value_and_grad(
+                f, argnums=(0, 1), has_aux=True)(tp, cut)
+            return metrics, tg, cg
+
+        return jax.jit(trunk_step)
+
+    def owner_param_slice(self, params, p: int):
+        return jax.tree.map(lambda a: a[p], params["heads"])
+
+    def stack_head_params(self, slices: Sequence):
+        return jax.tree.map(lambda *xs: jnp.stack(xs), *slices)
+
+    def owner_batch(self, owner_array: np.ndarray, idx):
+        return jnp.asarray(owner_array[idx])
+
+    def owner_optimizer(self, owner_lr: Optional[float] = None):
+        return self._segment_opts(owner_lr=owner_lr)["heads"]
+
+    def trunk_optimizer(self, scientist_lr: Optional[float] = None):
+        return self._segment_opts(scientist_lr=scientist_lr)["trunk"]

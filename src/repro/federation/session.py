@@ -19,18 +19,24 @@ and cut-layer gradients.
 """
 from __future__ import annotations
 
+import queue as _queue
+import threading
 import time
+from collections import deque
 from typing import Dict, List, Optional, Sequence, Union
 
 import jax
+import jax.numpy as jnp
 import numpy as np
 
 from repro.core.psi import GROUPS, PSIClient, PSIServer
 from repro.core.splitnn import (cut_layer_traffic, make_split_train_step,
                                 train_state_init)
-from repro.federation import batching
-from repro.federation.parties import DataOwner, DataScientist, PrivacyError
+from repro.federation import batching, transport
+from repro.federation.parties import (DataOwner, DataScientist,
+                                      OwnerComputeEndpoint, PrivacyError)
 from repro.federation.registry import build_adapter
+from repro.optim import apply_updates
 
 
 class VerticalSession:
@@ -52,6 +58,7 @@ class VerticalSession:
         self.seed = seed
         self.transcript: List[dict] = []
         self.resolve_stats: Optional[dict] = None
+        self.transport_stats: Optional[dict] = None
         self.adapter = None
         self.params = None
         self.history: Optional[dict] = None
@@ -143,18 +150,48 @@ class VerticalSession:
             scientist_lr: Optional[float] = None,
             log_every: Optional[int] = None, ckpt_dir: Optional[str] = None,
             ckpt_every: int = 0, shuffle_seed: Optional[int] = None,
-            verbose: bool = True) -> dict:
-        """The jitted per-segment-optimizer training loop.
+            verbose: bool = True, mode: str = "joint",
+            schedule: str = "pipelined",
+            compression: Optional[str] = None, backend: str = "queue",
+            latency_s: float = 0.0,
+            bandwidth_bps: Optional[float] = None) -> dict:
+        """The SplitNN training loop.
 
         Exactly one of ``epochs`` (feature workloads) / ``steps`` (LM
         workloads) must be given.  ``eval_frac`` holds out the last
         fraction of aligned rows; per-epoch (or final) eval metrics land
         in ``history["eval"]``.  ``ckpt_dir``+``ckpt_every`` write
         per-party checkpoints through ``repro.checkpoint.save_split``.
-        Returns ``{"train": [...], "eval": [...], "final": {...}}``."""
+        Returns ``{"train": [...], "eval": [...], "final": {...}}``.
+
+        ``mode="joint"`` (default) runs the single jitted autodiff
+        program — the gradient-equivalence oracle.  ``mode="split"``
+        runs *true split execution*: each owner's head segment executes
+        on its own thread behind a ``federation.transport`` channel, and
+        the only cross-party tensors are cut activations / cut gradients
+        — measured wire bytes, not estimates (``self.transport_stats``).
+        Split-mode knobs: ``schedule`` ("pipelined" overlaps owner
+        compute for batch t+1 with the scientist's trunk update for
+        batch t; "sequential" is the fully synchronous baseline),
+        ``compression`` (None | "fp16" | "int8" cut-payload codec),
+        ``backend`` ("queue" = serialized simulated network, "direct" =
+        in-process reference passing), ``latency_s``/``bandwidth_bps``
+        (injected per-message transit time)."""
         self._require(resolved=True, built=True, labels=True)
         if (epochs is None) == (steps is None):
             raise ValueError("pass exactly one of epochs= or steps=")
+        if mode not in ("joint", "split"):
+            raise ValueError(f"mode must be 'joint' or 'split': {mode!r}")
+        if mode == "split":
+            return self._fit_split(
+                epochs=epochs, steps=steps, batch_size=batch_size,
+                eval_frac=eval_frac, owner_lr=owner_lr,
+                scientist_lr=scientist_lr, log_every=log_every,
+                ckpt_dir=ckpt_dir, ckpt_every=ckpt_every,
+                shuffle_seed=shuffle_seed, verbose=verbose,
+                schedule=schedule, compression=compression,
+                backend=backend, latency_s=latency_s,
+                bandwidth_bps=bandwidth_bps)
 
         n = len(self.scientist.ids)
         n_train = n - int(n * eval_frac)
@@ -187,13 +224,14 @@ class VerticalSession:
         def scalars(m):
             return {k: float(v) for k, v in m.items()}
 
+        stream = self._index_stream(rng, n_train, batch_size, epochs, steps)
         if epochs is not None:
+            steps_per_epoch = (n_train - batch_size) // batch_size + 1
             global_step = 0
             for ep in range(epochs):
-                order = rng.permutation(self._train_idx)
-                for s in range(0, n_train - batch_size + 1, batch_size):
+                for _ in range(steps_per_epoch):
                     batch = adapter.make_batch(
-                        owner_arrays, labels, order[s:s + batch_size])
+                        owner_arrays, labels, next(stream))
                     self.params, state, metrics = step_fn(
                         self.params, state, batch, global_step)
                     global_step += 1
@@ -214,15 +252,9 @@ class VerticalSession:
                 if ckpt_dir and ckpt_every and (ep + 1) % ckpt_every == 0:
                     self.checkpoint(ckpt_dir, ep + 1)
         else:
-            order = rng.permutation(self._train_idx)
-            cursor = 0
             for i in range(steps):
-                if cursor + batch_size > n_train:
-                    order = rng.permutation(self._train_idx)
-                    cursor = 0
-                idx = order[cursor:cursor + batch_size]
-                cursor += batch_size
-                batch = adapter.make_batch(owner_arrays, labels, idx)
+                batch = adapter.make_batch(owner_arrays, labels,
+                                           next(stream))
                 self.params, state, metrics = step_fn(
                     self.params, state, batch, i)
                 rec = {"step": i, **scalars(metrics)}
@@ -243,6 +275,319 @@ class VerticalSession:
                           for k, v in history["eval"][-1].items()
                           if k not in ("epoch", "step")})
         history["final"] = final
+        self.history = history
+        return history
+
+    def _index_stream(self, rng, n_train, batch_size, epochs, steps):
+        """The batch-index stream — ONE generator shared by the joint
+        and split training loops, so both consume the shuffle rng
+        identically (split-mode gradient equivalence is bit-for-bit
+        against the joint path and depends on this).  epochs-mode:
+        a fresh permutation per epoch, full batches only; steps-mode:
+        reshuffle whenever the remaining tail can't fill a batch."""
+        if epochs is not None:
+            for _ in range(epochs):
+                order = rng.permutation(self._train_idx)
+                for s in range(0, n_train - batch_size + 1, batch_size):
+                    yield order[s:s + batch_size]
+        else:
+            order = rng.permutation(self._train_idx)
+            cursor = 0
+            for _ in range(steps):
+                if cursor + batch_size > n_train:
+                    order = rng.permutation(self._train_idx)
+                    cursor = 0
+                yield order[cursor:cursor + batch_size]
+                cursor += batch_size
+
+    # ------------------------------------------------- 3b. split execution
+
+    def _recv_from_owner(self, ep, worker, kind, timeout: float = 120.0):
+        """Receive ``kind`` from one owner, surfacing a dead worker
+        immediately (short poll) instead of after the full timeout."""
+        deadline = time.monotonic() + timeout
+        while True:
+            try:
+                return ep.recv_kind(kind, timeout=1.0)
+            except _queue.Empty:
+                if worker.error is not None:
+                    raise RuntimeError(
+                        f"owner worker {worker.owner.name!r} failed"
+                    ) from worker.error
+                if time.monotonic() > deadline:
+                    raise RuntimeError(
+                        f"timed out waiting for {kind!r} from "
+                        f"{worker.owner.name!r}")
+
+    def _sync_split_params(self, workers, eps, trunk_params):
+        """Flush every owner's message queue (barrier), then reassemble
+        the session-resident param tree from the owners' live segments —
+        the trusted-runtime accessor, mirroring ``_owner_arrays``."""
+        for ep in eps:
+            ep.send("barrier", {}, seq=-1)
+        for ep, w in zip(eps, workers):
+            self._recv_from_owner(ep, w, "barrier_ack")
+        self.params = {
+            "heads": self.adapter.stack_head_params(
+                [w.params for w in workers]),
+            "trunk": trunk_params}
+
+    def _fit_split(self, *, epochs, steps, batch_size, eval_frac, owner_lr,
+                   scientist_lr, log_every, ckpt_dir, ckpt_every,
+                   shuffle_seed, verbose, schedule, compression, backend,
+                   latency_s, bandwidth_bps) -> dict:
+        """True split execution over the transport layer (paper Fig. 2).
+
+        Per step t the wire carries exactly four message kinds:
+        ``head_fwd`` (batch row indices; arrow 4 "compute forward"),
+        ``cut_activations`` (arrow 5), ``cut_gradients`` (arrow 7), and
+        — in the sequential schedule only — ``step_done`` acks.  The
+        pipelined schedule ships the cut gradients *before* the
+        scientist's trunk update and the next forward request right
+        behind them, so the owners' backward+forward for t/t+1 overlap
+        the scientist's optimizer step; FIFO order keeps the math
+        identical (owners always apply the step-t update before running
+        batch t+1).  With the lossless codec, both schedules reproduce
+        the joint program bit-for-bit whenever the adapter's head
+        optimizer is elementwise-separable across owners (the paper's
+        MLP/SGD case — property-tested); the LM adapter clips grads
+        per-owner instead of across all heads, so it tracks the joint
+        path within tolerance rather than exactly."""
+        adapter = self.adapter
+        if not getattr(adapter, "supports_split", False):
+            raise ValueError(f"{type(adapter).__name__} does not support "
+                             "split execution")
+        if schedule not in ("pipelined", "sequential"):
+            raise ValueError(f"unknown schedule {schedule!r}")
+        sequential = schedule == "sequential"
+        codec = transport.get_codec(compression)
+
+        n = len(self.scientist.ids)
+        n_train = n - int(n * eval_frac)
+        if n_train < batch_size:
+            raise ValueError(f"{n_train} train rows < batch {batch_size}")
+        self._train_idx = np.arange(n_train)
+        self._eval_idx = np.arange(n_train, n)
+
+        trunk_step = adapter.trunk_program()
+        trunk_opt = adapter.trunk_optimizer(scientist_lr)
+        trunk_params = self.params["trunk"]
+        trunk_state = trunk_opt.init(trunk_params)
+
+        # update+apply compiled together — the joint step's fusion
+        # granularity (bit-for-bit equivalence depends on it)
+        @jax.jit
+        def trunk_update(tp, ts, tg, i):
+            updates, ts = trunk_opt.update(tg, ts, tp, i)
+            return apply_updates(tp, updates), ts
+
+        workers, eps, threads = [], [], []
+        for p, owner in enumerate(self.owners):
+            ep_sci, ep_own = transport.channel_pair(
+                "scientist", owner.name, backend=backend,
+                latency_s=latency_s, bandwidth_bps=bandwidth_bps)
+            head_fwd, head_bwd = adapter.owner_programs(p)
+            w = OwnerComputeEndpoint(
+                owner, ep_own, head_fwd, head_bwd,
+                optimizer=adapter.owner_optimizer(owner_lr),
+                params=adapter.owner_param_slice(self.params, p),
+                codec=codec, ack_steps=sequential)
+            workers.append(w)
+            eps.append(ep_sci)
+            th = threading.Thread(target=w.run, daemon=True,
+                                  name=f"owner-{owner.name}")
+            th.start()
+            threads.append(th)
+
+        labels = self.scientist.labels
+        rng = np.random.default_rng(self.seed if shuffle_seed is None
+                                    else shuffle_seed)
+        if epochs is not None:
+            steps_per_epoch = (n_train - batch_size) // batch_size + 1
+            total_steps = epochs * steps_per_epoch
+        else:
+            steps_per_epoch = None
+            total_steps = steps
+        # THE batch-index stream — shared with the joint loop
+        gen = self._index_stream(rng, n_train, batch_size, epochs, steps)
+        inflight: deque = deque()
+
+        def send_fwd(idx, seq):
+            for ep in eps:
+                ep.send("head_fwd", {"idx": np.asarray(idx, np.int32)},
+                        seq=seq)
+            inflight.append(idx)
+
+        def recv_cuts(seq):
+            cuts, aux = [], 0.0
+            for ep, w in zip(eps, workers):
+                m = self._recv_from_owner(ep, w, "cut_activations")
+                if m.seq != seq:
+                    raise RuntimeError(f"protocol desync: cut seq {m.seq} "
+                                       f"!= expected {seq}")
+                cuts.append(codec.decode(m.payload))
+                # scalar rides as a (1,) array (wire arrays are >=1-d)
+                aux += float(np.asarray(m.payload.get("aux", 0.0)).sum())
+            return jnp.asarray(np.stack(cuts)), aux
+
+        history: dict = {"train": [], "eval": []}
+        t0 = time.time()
+        t_warm = None       # end of step 0 — everything compiled after it
+        overhead_s = 0.0    # eval/sync/ckpt time, excluded from step cost
+        metrics: dict = {}
+
+        def scalars(m):
+            return {k: float(v) for k, v in m.items()}
+
+        try:
+            if total_steps > 0:
+                send_fwd(next(gen), 0)
+            for t in range(total_steps):
+                idx_t = inflight.popleft()
+                cut, owner_aux = recv_cuts(t)
+                lab = jnp.asarray(labels[idx_t])
+                metrics, tgrads, cgrads = trunk_step(trunk_params, cut, lab)
+                if owner_aux and "aux" in metrics:
+                    # joint-path parity: heads aux + trunk aux
+                    metrics = {**metrics,
+                               "aux": metrics["aux"] + owner_aux}
+                cg = np.asarray(cgrads)
+                if sequential:
+                    # synchronous baseline: update, ship grads, wait for
+                    # every owner to finish its step, then request t+1
+                    trunk_params, trunk_state = trunk_update(
+                        trunk_params, trunk_state, tgrads, t)
+                    for p, ep in enumerate(eps):
+                        ep.send("cut_gradients", codec.encode(cg[p]), seq=t)
+                    for ep, w in zip(eps, workers):
+                        self._recv_from_owner(ep, w, "step_done")
+                    if t + 1 < total_steps:
+                        send_fwd(next(gen), t + 1)
+                else:
+                    # pipelined: grads + next forward request leave first;
+                    # the owners' bwd(t)+fwd(t+1) overlap our trunk update
+                    for p, ep in enumerate(eps):
+                        ep.send("cut_gradients", codec.encode(cg[p]), seq=t)
+                    if t + 1 < total_steps:
+                        send_fwd(next(gen), t + 1)
+                    trunk_params, trunk_state = trunk_update(
+                        trunk_params, trunk_state, tgrads, t)
+                if t == 0:
+                    t_warm = time.time()
+
+                # ----------- bookkeeping (excluded from step timings)
+                tb = time.time()
+                if epochs is not None:
+                    if (t + 1) % steps_per_epoch == 0:
+                        ep_i = (t + 1) // steps_per_epoch - 1
+                        rec = {"epoch": ep_i, **scalars(metrics)}
+                        history["train"].append(rec)
+                        if len(self._eval_idx):
+                            self._sync_split_params(workers, eps,
+                                                    trunk_params)
+                            history["eval"].append(
+                                {"epoch": ep_i, **self.evaluate()})
+                        if verbose and (ep_i % (log_every or 1) == 0
+                                        or ep_i == epochs - 1):
+                            ev = (history["eval"][-1]
+                                  if history["eval"] else {})
+                            extra = "".join(f" val_{k}={v:.4f}"
+                                            for k, v in ev.items()
+                                            if k != "epoch")
+                            print(f"epoch {ep_i:3d} " + " ".join(
+                                f"{k}={v:.4f}" for k, v in rec.items()
+                                if k != "epoch") + extra +
+                                f" ({time.time() - t0:.1f}s)")
+                        if ckpt_dir and ckpt_every \
+                                and (ep_i + 1) % ckpt_every == 0:
+                            self._sync_split_params(workers, eps,
+                                                    trunk_params)
+                            self.checkpoint(ckpt_dir, ep_i + 1)
+                else:
+                    rec = {"step": t, **scalars(metrics)}
+                    history["train"].append(rec)
+                    if verbose and log_every and (t % log_every == 0
+                                                  or t == steps - 1):
+                        print(f"step {t:5d} " + " ".join(
+                            f"{k}={v:.4f}" for k, v in rec.items()
+                            if k != "step") + f" ({time.time() - t0:.1f}s)")
+                    if ckpt_dir and ckpt_every \
+                            and (t + 1) % ckpt_every == 0:
+                        self._sync_split_params(workers, eps, trunk_params)
+                        self.checkpoint(ckpt_dir, t + 1)
+                overhead_s += time.time() - tb
+
+            wall_s = time.time() - t0
+            self._sync_split_params(workers, eps, trunk_params)
+            if steps is not None and len(self._eval_idx):
+                history["eval"].append({"step": steps, **self.evaluate()})
+        finally:
+            for ep in eps:
+                ep.send("stop", {})
+            for th in threads:
+                th.join(timeout=10.0)
+
+        # ------------------------------------- measured traffic accounting
+        per_owner: Dict[str, dict] = {}
+        tot_payload = tot_wire = 0
+        for owner, ep in zip(self.owners, eps):
+            sent, rcvd = ep.sent_stats, ep.recv_stats
+            cut_k = rcvd["by_kind"].get("cut_activations",
+                                        {"payload_bytes": 0,
+                                         "wire_bytes": 0})
+            grad_k = sent["by_kind"].get("cut_gradients",
+                                         {"payload_bytes": 0,
+                                          "wire_bytes": 0})
+            per_owner[owner.name] = {
+                "cut_payload_bytes": cut_k["payload_bytes"],
+                "cut_wire_bytes": cut_k["wire_bytes"],
+                "grad_payload_bytes": grad_k["payload_bytes"],
+                "grad_wire_bytes": grad_k["wire_bytes"],
+                "messages": sent["messages"] + rcvd["messages"],
+            }
+            tot_payload += cut_k["payload_bytes"] + grad_k["payload_bytes"]
+            tot_wire += cut_k["wire_bytes"] + grad_k["wire_bytes"]
+            self._log(owner.name, "scientist", "cut_activations",
+                      bytes=cut_k["payload_bytes"], measured=True,
+                      per_step_bytes=cut_k["payload_bytes"]
+                      // max(total_steps, 1),
+                      width=self.adapter.cut_shape(
+                          batch_size, owner.feature_shape)[-1])
+            self._log("scientist", owner.name, "cut_gradients",
+                      bytes=grad_k["payload_bytes"], measured=True,
+                      per_step_bytes=grad_k["payload_bytes"]
+                      // max(total_steps, 1))
+        self.transport_stats = {
+            "mode": "split", "schedule": schedule,
+            "compression": compression or "none", "backend": backend,
+            "latency_s": latency_s, "bandwidth_bps": bandwidth_bps,
+            "steps": total_steps, "wall_s": wall_s,
+            # per-step cost excludes eval/sync/ckpt bookkeeping ...
+            "step_ms": (1e3 * (wall_s - overhead_s)
+                        / max(total_steps, 1)),
+            # ... and, steady-state, the step-0 jit compiles too
+            "steady_step_ms": (1e3 * (t0 + wall_s - t_warm - overhead_s)
+                               / (total_steps - 1)
+                               if t_warm is not None and total_steps > 1
+                               else 1e3 * (wall_s - overhead_s)
+                               / max(total_steps, 1)),
+            "per_owner": per_owner,
+            "cut_payload_bytes_per_step": sum(
+                o["cut_payload_bytes"] for o in per_owner.values())
+            // max(total_steps, 1),
+            "total_payload_bytes": tot_payload,
+            "total_wire_bytes": tot_wire,
+            "total_payload_bytes_per_step": tot_payload
+            // max(total_steps, 1),
+        }
+
+        final = dict(history["train"][-1]) if history["train"] else {}
+        if history["eval"]:
+            final.update({f"val_{k}": v
+                          for k, v in history["eval"][-1].items()
+                          if k not in ("epoch", "step")})
+        history["final"] = final
+        history["transport"] = self.transport_stats
         self.history = history
         return history
 
@@ -275,7 +620,10 @@ class VerticalSession:
     def serve(self, **engine_kw):
         """Wrap the resident split model in a ``ServingEngine`` (LM archs).
         Kwargs are forwarded: ``batch_slots, ctx_len, max_new, eos_token,
-        ring_cache, pad_token``."""
+        ring_cache, pad_token``, plus the transport boundary knobs
+        ``transport`` ("direct" | "queue" routes every cut activation
+        through a measured ``federation.transport`` channel),
+        ``latency_s``, and ``bandwidth_bps``."""
         self._require(built=True)
         if not getattr(self.adapter, "supports_serving", False):
             raise ValueError(

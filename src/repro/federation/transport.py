@@ -1,0 +1,306 @@
+"""The transport layer: what actually crosses the party boundary.
+
+Until this module existed, "communication" in the repro was an analytic
+estimate (``core.splitnn.cut_layer_traffic``) layered over one joint
+autodiff program.  This module makes the boundary real: parties exchange
+:class:`Message` objects over :class:`Channel` s, and everything the
+session reports about traffic is *measured* from the wire.
+
+Two backends:
+
+  * ``direct``  — in-process handoff.  Payload pytrees move by reference
+    (zero-copy); bytes are still accounted from the array buffers.  This
+    is the fast path for same-process simulation and serving.
+  * ``queue``   — a simulated network.  Every payload is serialized to a
+    length-prefixed wire format (``_pack``/``_unpack``), byte counts are
+    taken from the actual blob, and delivery can be delayed by a
+    configurable ``latency_s`` plus ``wire_bytes / bandwidth_bps``.
+    Channels are thread-safe: owner compute endpoints run on their own
+    threads (``federation/parties.OwnerComputeEndpoint``), so pipelined
+    schedules overlap owner and scientist compute in real wall-clock.
+
+Cut-payload codecs live here too (``get_codec``): the only bytes that
+cross the boundary are cut activations and cut gradients, so shrinking
+them is the protocol's one compression lever (Secure Forward Aggregation,
+Cai et al. 2022, quantizes the same tensor).  ``fp16`` is a plain
+down-cast; ``int8`` is per-row symmetric quantization through the Pallas
+kernel in ``repro/kernels/quantize``.
+"""
+from __future__ import annotations
+
+import queue
+import struct
+import threading
+import time
+from dataclasses import dataclass
+from typing import Dict, Optional, Tuple
+
+import numpy as np
+
+__all__ = ["Message", "Channel", "Endpoint", "channel_pair",
+           "Codec", "get_codec", "CODECS"]
+
+
+# ---------------------------------------------------------------------------
+# Wire format: length-prefixed named arrays
+# ---------------------------------------------------------------------------
+
+
+def _pack(payload: Dict[str, np.ndarray]) -> bytes:
+    """Serialize ``{name: array}`` to one blob.  Per entry:
+    [u16 name_len][name][u16 dtype_len][dtype.name][u8 ndim][i64 dims...]
+    [i64 nbytes][raw buffer].  ``dtype.name`` (not ``.str``) so the
+    ml_dtypes extension types (bfloat16 cut activations) round-trip."""
+    parts = [struct.pack("<I", len(payload))]
+    for name, arr in payload.items():
+        arr = np.ascontiguousarray(arr)
+        nb, dt = name.encode(), arr.dtype.name.encode()
+        parts.append(struct.pack("<H", len(nb)))
+        parts.append(nb)
+        parts.append(struct.pack("<H", len(dt)))
+        parts.append(dt)
+        parts.append(struct.pack("<B", arr.ndim))
+        parts.append(struct.pack(f"<{arr.ndim}q", *arr.shape))
+        body = arr.tobytes()
+        parts.append(struct.pack("<q", len(body)))
+        parts.append(body)
+    return b"".join(parts)
+
+
+def _unpack(blob: bytes) -> Dict[str, np.ndarray]:
+    out: Dict[str, np.ndarray] = {}
+    off = 0
+    (n,) = struct.unpack_from("<I", blob, off)
+    off += 4
+    for _ in range(n):
+        (ln,) = struct.unpack_from("<H", blob, off)
+        off += 2
+        name = blob[off:off + ln].decode()
+        off += ln
+        (ld,) = struct.unpack_from("<H", blob, off)
+        off += 2
+        dtype = np.dtype(blob[off:off + ld].decode())
+        off += ld
+        (ndim,) = struct.unpack_from("<B", blob, off)
+        off += 1
+        shape = struct.unpack_from(f"<{ndim}q", blob, off)
+        off += 8 * ndim
+        (nbytes,) = struct.unpack_from("<q", blob, off)
+        off += 8
+        out[name] = np.frombuffer(
+            blob[off:off + nbytes], dtype=dtype).reshape(shape)
+        off += nbytes
+    return out
+
+
+def _payload_nbytes(payload: Dict[str, np.ndarray]) -> int:
+    # jax and numpy arrays both expose .nbytes — no materialization
+    return sum(getattr(a, "nbytes", None) or np.asarray(a).nbytes
+               for a in payload.values())
+
+
+# ---------------------------------------------------------------------------
+# Messages and channels
+# ---------------------------------------------------------------------------
+
+
+@dataclass
+class Message:
+    sender: str
+    receiver: str
+    kind: str
+    payload: Dict[str, np.ndarray]
+    seq: int = 0
+    payload_bytes: int = 0         # sum of array buffers (the protocol data)
+    wire_bytes: int = 0            # serialized blob incl. headers (queue)
+    not_before: float = 0.0        # simulated-network delivery time
+
+
+class Channel:
+    """One direction of a party boundary, with measured byte accounting.
+
+    ``serialize=True`` (the ``queue`` backend) round-trips every payload
+    through the wire format and models transit time; ``serialize=False``
+    (the ``direct`` backend) hands the pytree over by reference.  Both are
+    thread-safe FIFO queues, so message *order* is the protocol's
+    happens-before edge (an owner applies the step-``t`` gradient before
+    it sees the step-``t+1`` forward request).
+    """
+
+    def __init__(self, sender: str, receiver: str, *,
+                 serialize: bool = True, latency_s: float = 0.0,
+                 bandwidth_bps: Optional[float] = None):
+        self.sender, self.receiver = sender, receiver
+        self.serialize = serialize
+        self.latency_s = latency_s
+        self.bandwidth_bps = bandwidth_bps
+        self._q: "queue.Queue[Message]" = queue.Queue()
+        self._lock = threading.Lock()
+        self.stats: Dict[str, object] = {
+            "messages": 0, "payload_bytes": 0, "wire_bytes": 0,
+            "by_kind": {}}
+
+    def _account(self, kind: str, payload_bytes: int, wire_bytes: int):
+        with self._lock:
+            st = self.stats
+            st["messages"] += 1
+            st["payload_bytes"] += payload_bytes
+            st["wire_bytes"] += wire_bytes
+            k = st["by_kind"].setdefault(
+                kind, {"count": 0, "payload_bytes": 0, "wire_bytes": 0})
+            k["count"] += 1
+            k["payload_bytes"] += payload_bytes
+            k["wire_bytes"] += wire_bytes
+
+    def send(self, kind: str, payload: Dict[str, np.ndarray], *,
+             seq: int = 0) -> Message:
+        pb = _payload_nbytes(payload)
+        if self.serialize:
+            blob = _pack({k: np.asarray(v) for k, v in payload.items()})
+            wb = len(blob)
+            payload = {"__blob__": blob}           # only bytes travel
+        else:
+            wb = pb                                # by-reference handoff
+        msg = Message(self.sender, self.receiver, kind, payload, seq=seq,
+                      payload_bytes=pb, wire_bytes=wb)
+        if self.latency_s or self.bandwidth_bps:
+            transit = self.latency_s + (wb / self.bandwidth_bps
+                                        if self.bandwidth_bps else 0.0)
+            msg.not_before = time.monotonic() + transit
+        self._account(kind, pb, wb)
+        self._q.put(msg)
+        return msg
+
+    def recv(self, timeout: Optional[float] = None) -> Message:
+        msg = self._q.get(timeout=timeout)
+        if msg.not_before:
+            delay = msg.not_before - time.monotonic()
+            if delay > 0:
+                time.sleep(delay)
+        if self.serialize:
+            msg.payload = _unpack(msg.payload["__blob__"])
+        return msg
+
+    def empty(self) -> bool:
+        return self._q.empty()
+
+
+class Endpoint:
+    """A party's end of a duplex boundary: an outbox + an inbox channel.
+
+    ``recv_kind`` stashes messages of other kinds instead of dropping
+    them — in a pipelined schedule the next step's cut activations can
+    already be in flight when the scientist waits for a barrier ack."""
+
+    def __init__(self, name: str, peer: str, outbox: Channel, inbox: Channel):
+        self.name, self.peer = name, peer
+        self.outbox, self.inbox = outbox, inbox
+        self._stash: list = []
+
+    def send(self, kind: str, payload: Dict[str, np.ndarray], *,
+             seq: int = 0) -> Message:
+        return self.outbox.send(kind, payload, seq=seq)
+
+    def recv(self, timeout: Optional[float] = None) -> Message:
+        if self._stash:
+            return self._stash.pop(0)
+        return self.inbox.recv(timeout=timeout)
+
+    def recv_kind(self, kind: str, timeout: Optional[float] = None
+                  ) -> Message:
+        """Receive the next message of protocol kind ``kind``, keeping
+        any earlier-arriving messages of other kinds for later."""
+        for i, m in enumerate(self._stash):
+            if m.kind == kind:
+                return self._stash.pop(i)
+        while True:
+            msg = self.inbox.recv(timeout=timeout)
+            if msg.kind == kind:
+                return msg
+            self._stash.append(msg)
+
+    @property
+    def sent_stats(self) -> Dict[str, object]:
+        return self.outbox.stats
+
+    @property
+    def recv_stats(self) -> Dict[str, object]:
+        return self.inbox.stats
+
+
+def channel_pair(a: str, b: str, *, backend: str = "queue",
+                 latency_s: float = 0.0,
+                 bandwidth_bps: Optional[float] = None
+                 ) -> Tuple[Endpoint, Endpoint]:
+    """Build the duplex boundary between parties ``a`` and ``b``.
+    Returns ``(endpoint_a, endpoint_b)``."""
+    if backend not in ("queue", "direct"):
+        raise ValueError(f"unknown transport backend {backend!r}")
+    ser = backend == "queue"
+    ab = Channel(a, b, serialize=ser, latency_s=latency_s,
+                 bandwidth_bps=bandwidth_bps)
+    ba = Channel(b, a, serialize=ser, latency_s=latency_s,
+                 bandwidth_bps=bandwidth_bps)
+    return Endpoint(a, b, ab, ba), Endpoint(b, a, ba, ab)
+
+
+# ---------------------------------------------------------------------------
+# Cut-payload codecs
+# ---------------------------------------------------------------------------
+
+
+class Codec:
+    """Quantize-dequantize transform for cut payloads.  ``encode`` maps a
+    float array to the wire payload dict; ``decode`` inverts it (lossy
+    for fp16/int8).  The lossless codec preserves the model's own cut
+    dtype on the wire — bf16 LM activations ship as 2 bytes/el, exactly
+    what ``cut_layer_traffic`` accounts."""
+
+    name = "none"
+
+    def encode(self, arr) -> Dict[str, np.ndarray]:
+        return {"x": np.asarray(arr)}
+
+    def decode(self, payload: Dict[str, np.ndarray]) -> np.ndarray:
+        return np.asarray(payload["x"])
+
+
+class FP16Codec(Codec):
+    name = "fp16"
+
+    def encode(self, arr):
+        return {"h": np.asarray(arr).astype(np.float16)}
+
+    def decode(self, payload):
+        return payload["h"].astype(np.float32)
+
+
+class Int8Codec(Codec):
+    """Per-row symmetric int8 (scale = absmax/127 over the last axis),
+    computed by the Pallas kernel in ``repro/kernels/quantize``.
+    Decodes to float32 (consumers cast to their compute dtype)."""
+
+    name = "int8"
+
+    def encode(self, arr):
+        from repro.kernels.quantize import quantize_int8
+        a = np.asarray(arr).astype(np.float32)
+        rows = a.reshape(-1, a.shape[-1])
+        q, scale = quantize_int8(rows)
+        return {"q": np.asarray(q).reshape(a.shape),
+                "s": np.asarray(scale).reshape(a.shape[:-1] + (1,))}
+
+    def decode(self, payload):
+        return (payload["q"].astype(np.float32) *
+                payload["s"].astype(np.float32))
+
+
+CODECS = {c.name: c for c in (Codec, FP16Codec, Int8Codec)}
+
+
+def get_codec(name: Optional[str]) -> Codec:
+    key = name or "none"
+    if key not in CODECS:
+        raise ValueError(f"unknown compression {name!r}; "
+                         f"known: {sorted(CODECS)}")
+    return CODECS[key]()

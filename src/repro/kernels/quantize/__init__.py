@@ -1,0 +1,3 @@
+from repro.kernels.quantize.ops import quantize_int8  # noqa: F401
+from repro.kernels.quantize.ref import (dequantize_int8_ref,  # noqa: F401
+                                        quantize_int8_ref)

@@ -1,0 +1,48 @@
+"""Per-row symmetric int8 quantization as a Pallas TPU kernel.
+
+The cut-layer payload is the only tensor that crosses the party boundary,
+so quantizing it on-device before the send is the protocol's bandwidth
+lever (transport codec ``int8``).  One grid step handles a (block_m, K)
+row block: the row absmax, the scale (absmax / 127), and the rounded int8
+values are all produced in a single VMEM pass — the f32 activation never
+returns to HBM.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.kernels.compat import compiler_params
+
+
+def _quantize_kernel(x_ref, q_ref, s_ref):
+    x = x_ref[...].astype(jnp.float32)                    # (bm, K)
+    absmax = jnp.max(jnp.abs(x), axis=-1, keepdims=True)  # (bm, 1)
+    scale = jnp.maximum(absmax, 1e-12) / 127.0
+    q = jnp.clip(jnp.round(x / scale), -127.0, 127.0)
+    q_ref[...] = q.astype(jnp.int8)
+    s_ref[...] = scale.astype(jnp.float32)
+
+
+def quantize_int8_raw(x, *, block_m: int = 256, interpret: bool = False):
+    """x: (T, K) float.  Returns (values int8 (T, K), scales f32 (T, 1))
+    with per-row symmetric scaling: ``x ~= values * scales``."""
+    T, K = x.shape
+    bm = min(block_m, T)
+    nm = -(-T // bm)
+    if nm * bm - T:
+        x = jnp.pad(x, ((0, nm * bm - T), (0, 0)))
+    q, s = pl.pallas_call(
+        _quantize_kernel,
+        grid=(nm,),
+        in_specs=[pl.BlockSpec((bm, K), lambda i: (i, 0))],
+        out_specs=[pl.BlockSpec((bm, K), lambda i: (i, 0)),
+                   pl.BlockSpec((bm, 1), lambda i: (i, 0))],
+        out_shape=[jax.ShapeDtypeStruct((nm * bm, K), jnp.int8),
+                   jax.ShapeDtypeStruct((nm * bm, 1), jnp.float32)],
+        compiler_params=compiler_params(
+            dimension_semantics=("parallel",)),
+        interpret=interpret,
+    )(x)
+    return q[:T], s[:T]

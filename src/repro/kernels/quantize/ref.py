@@ -1,0 +1,17 @@
+"""Pure-jnp oracle for per-row symmetric int8 quantization."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def quantize_int8_ref(x):
+    """x: (T, K).  Returns (values int8 (T, K), scales f32 (T, 1))."""
+    x = x.astype(jnp.float32)
+    absmax = jnp.max(jnp.abs(x), axis=-1, keepdims=True)
+    scale = jnp.maximum(absmax, 1e-12) / 127.0
+    q = jnp.clip(jnp.round(x / scale), -127.0, 127.0).astype(jnp.int8)
+    return q, scale
+
+
+def dequantize_int8_ref(q, scale):
+    return q.astype(jnp.float32) * scale

@@ -22,7 +22,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.federation import batching
+from repro.federation import batching, transport as transport_mod
 from repro.models.model import SplitModel
 
 
@@ -44,7 +44,14 @@ class ServingEngine:
     def __init__(self, model: SplitModel, params, *, batch_slots: int = 4,
                  ctx_len: int = 128, max_new: int = 32,
                  eos_token: Optional[int] = None, ring_cache: bool = False,
-                 pad_token: int = 0):
+                 pad_token: int = 0, transport: Optional[str] = None,
+                 latency_s: float = 0.0,
+                 bandwidth_bps: Optional[float] = None):
+        """``transport`` ("direct" | "queue") routes every cut activation
+        through a real ``federation.transport`` channel: prefill and
+        decode run as separate owner/scientist segment programs and
+        ``stats`` reports *measured* cut bytes off the wire instead of
+        the analytic ``cut_layer_traffic`` estimate."""
         cfg = model.cfg
         if cfg.modality != "text":
             raise ValueError("ServingEngine drives text archs")
@@ -58,8 +65,21 @@ class ServingEngine:
         self._next_rid = 0
         self._prefill = jax.jit(model.prefill)
         self._decode = jax.jit(model.decode_step)
+        self._ep_owner = self._ep_sci = None
+        if transport is not None:
+            if cfg.enc_dec:
+                raise ValueError("transport-backed serving supports "
+                                 "decoder-only text archs")
+            self._ep_owner, self._ep_sci = transport_mod.channel_pair(
+                "owners", "scientist", backend=transport,
+                latency_s=latency_s, bandwidth_bps=bandwidth_bps)
+            self._prefill_heads = jax.jit(model.prefill_heads)
+            self._prefill_trunk = jax.jit(model.prefill_trunk)
+            self._decode_heads = jax.jit(model.decode_heads)
+            self._decode_trunk = jax.jit(model.decode_trunk)
         self.stats = {"waves": 0, "requests": 0, "tokens_generated": 0,
-                      "wall_s": 0.0}
+                      "wall_s": 0.0, "cut_payload_bytes": 0,
+                      "cut_wire_bytes": 0, "cut_messages": 0}
 
     def submit(self, tokens, max_new: Optional[int] = None) -> int:
         tokens = np.asarray(tokens, np.int32)
@@ -70,6 +90,33 @@ class ServingEngine:
         self._queue.append(Request(rid, tokens, max_new or self.max_new))
         return rid
 
+    def _ship_cut(self, cut_arrays) -> jnp.ndarray:
+        """Route cut activations through the owner->scientist channel
+        (the measured boundary) and return the scientist-side tensor."""
+        for i, c in enumerate(cut_arrays):
+            self._ep_owner.send("cut_activations", {"cut": np.asarray(c)},
+                                seq=i)
+        out = [self._ep_sci.recv_kind("cut_activations").payload["cut"]
+               for _ in cut_arrays]
+        return jnp.asarray(np.stack(out)) if len(out) > 1 \
+            else jnp.asarray(out[0])
+
+    def _split_prefill(self, owner_tokens, caches):
+        cut, head_caches = self._prefill_heads(
+            self.params["heads"], owner_tokens, caches["heads"])
+        cut = self._ship_cut([cut[p] for p in range(self.P)])
+        logits, trunk_caches = self._prefill_trunk(
+            self.params["trunk"], cut, caches["trunk"])
+        return logits, {"heads": head_caches, "trunk": trunk_caches}
+
+    def _split_decode(self, caches, tok, pos, pos_local):
+        z, head_caches = self._decode_heads(
+            self.params["heads"], tok, caches["heads"], pos_local)
+        z = self._ship_cut([z])          # only the generation owner's slice
+        logits, trunk_caches = self._decode_trunk(
+            self.params["trunk"], z, caches["trunk"], pos)
+        return logits, {"heads": head_caches, "trunk": trunk_caches}
+
     def _run_wave(self, wave: List[Request]) -> List[Result]:
         t0 = time.time()
         B, S = self.B, self.S
@@ -79,10 +126,12 @@ class ServingEngine:
                                      pad=self.pad, pad_side="left")
         caches = self.model.cache_init(B, S, n_new=self.max_new + 1,
                                        ring=self.ring)
-        logits, caches = self._prefill(
-            self.params,
-            {"owner_tokens": batching.serving_owner_slices(toks, self.P)},
-            caches)
+        owner_tokens = batching.serving_owner_slices(toks, self.P)
+        if self._ep_owner is not None:
+            logits, caches = self._split_prefill(owner_tokens, caches)
+        else:
+            logits, caches = self._prefill(
+                self.params, {"owner_tokens": owner_tokens}, caches)
         tok = jnp.argmax(logits, -1)[:, None].astype(jnp.int32)
 
         results = [Result(r.rid) for r in wave]
@@ -101,8 +150,12 @@ class ServingEngine:
             self.stats["tokens_generated"] += appended
             if done.all() or t == self.max_new - 1:
                 break
-            logits, caches = self._decode(self.params, caches, tok,
-                                          S + t, S // self.P + t)
+            if self._ep_owner is not None:
+                logits, caches = self._split_decode(caches, tok, S + t,
+                                                    S // self.P + t)
+            else:
+                logits, caches = self._decode(self.params, caches, tok,
+                                              S + t, S // self.P + t)
             tok = jnp.argmax(logits, -1)[:, None].astype(jnp.int32)
         dt = time.time() - t0
         for res in results:
@@ -110,6 +163,12 @@ class ServingEngine:
         self.stats["waves"] += 1
         self.stats["requests"] += len(wave)
         self.stats["wall_s"] += dt
+        if self._ep_owner is not None:
+            st = self._ep_sci.recv_stats["by_kind"].get(
+                "cut_activations", {})
+            self.stats["cut_payload_bytes"] = st.get("payload_bytes", 0)
+            self.stats["cut_wire_bytes"] = st.get("wire_bytes", 0)
+            self.stats["cut_messages"] = st.get("count", 0)
         return results
 
     def run(self) -> Dict[int, Result]:

@@ -319,11 +319,9 @@ class SplitModel:
             swa_override=swa_override)
         return logits, aux_h + aux_t
 
-    def loss_fn(self, params, batch, *, rng=None, swa_override=None):
+    @staticmethod
+    def ce_loss(logits, labels):
         """Causal LM loss (labels: next-token ids, -100 = masked)."""
-        logits, aux = self.forward(params, batch, rng=rng,
-                                   swa_override=swa_override)
-        labels = batch["labels"]
         valid = labels >= 0
         lab = jnp.where(valid, labels, 0)
         # vocab-sharding-friendly CE: never gathers the (B, S, V) logits —
@@ -336,7 +334,12 @@ class SplitModel:
             jnp.where(vio == lab[..., None], logits, 0.0), axis=-1)
         ll = label_logit - lse
         n = jnp.maximum(jnp.sum(valid), 1)
-        loss = -jnp.sum(ll * valid) / n
+        return -jnp.sum(ll * valid) / n
+
+    def loss_fn(self, params, batch, *, rng=None, swa_override=None):
+        logits, aux = self.forward(params, batch, rng=rng,
+                                   swa_override=swa_override)
+        loss = self.ce_loss(logits, batch["labels"])
         return loss + aux, {"loss": loss, "aux": aux}
 
     # ------------------------------------------------------------ serving
@@ -396,6 +399,46 @@ class SplitModel:
             params["trunk"], z, caches=caches["trunk"], pos=0,
             swa_override=swa_override)
         return logits[:, -1], {"heads": head_caches, "trunk": trunk_caches}
+
+    # ------------------------------------------- per-segment serving programs
+    #
+    # prefill/decode_step above run heads + trunk as one program.  When the
+    # engine serves through a transport-backed boundary, it uses these
+    # split halves instead, so the cut activations are a real wire payload
+    # (measured bytes) rather than an internal value.  Text, decoder-only.
+
+    def prefill_heads(self, heads, owner_inputs, head_caches, *,
+                      swa_override=None):
+        """Owner side of prefill: (cut (P, B, S_p, k), head caches)."""
+        cut, hc, _ = self.heads_forward(heads, owner_inputs,
+                                        caches=head_caches, pos=0,
+                                        swa_override=swa_override)
+        return cut, hc
+
+    def prefill_trunk(self, trunk, cut, trunk_caches, *, swa_override=None):
+        """Scientist side of prefill: combine the received cut and run the
+        trunk.  Returns (last-token logits, trunk caches)."""
+        z = self.combine(cut)
+        logits, tc, _ = self.trunk_forward(trunk, z, caches=trunk_caches,
+                                           pos=0, swa_override=swa_override)
+        return logits[:, -1], tc
+
+    def decode_heads(self, heads, token, head_caches, pos_local, *,
+                     swa_override=None):
+        """Owner side of one decode step: the generation owner's cut slice
+        (B, 1, k) plus updated head caches."""
+        oi = jnp.broadcast_to(token[None], (self.P,) + token.shape)
+        cut, hc, _ = self.heads_forward(heads, oi, caches=head_caches,
+                                        pos=pos_local,
+                                        swa_override=swa_override)
+        return cut[0], hc
+
+    def decode_trunk(self, trunk, z, trunk_caches, pos, *,
+                     swa_override=None):
+        logits, tc, _ = self.trunk_forward(trunk, z, caches=trunk_caches,
+                                           pos=pos,
+                                           swa_override=swa_override)
+        return logits[:, -1], tc
 
     def decode_step(self, params, caches, token, pos, pos_local,
                     *, swa_override=None):

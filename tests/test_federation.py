@@ -176,15 +176,23 @@ def test_registry_dispatch():
 
 def test_session_round_trip_mnist_accuracy():
     """resolve -> build -> fit on vertical MNIST-like data reaches >85%
-    val accuracy with the paper's Appendix-B hyperparameters."""
+    val accuracy with the paper's Appendix-B hyperparameters — in TRUE
+    split mode: every cut activation/gradient crosses a real transport
+    channel (pipelined schedule, measured bytes).  Bit-for-bit identical
+    to the joint path (tests/test_transport.py), so this also certifies
+    the joint program."""
     sci, owners = make_vertical_mnist_parties(4000, seed=0, keep_frac=0.9)
     session = VerticalSession(*feature_parties(sci, owners))
     stats = session.resolve(group="modp512")
     assert stats["global_intersection"] > 3000
     session.build(MNIST_CFG)
     history = session.fit(epochs=30, batch_size=128, eval_frac=0.15,
-                          verbose=False)
+                          verbose=False, mode="split")
     assert history["final"]["val_accuracy"] > 0.85
+    ts = session.transport_stats
+    assert ts["schedule"] == "pipelined" and ts["backend"] == "queue"
+    assert ts["cut_payload_bytes_per_step"] == \
+        len(session.owners) * 128 * session.adapter.model.k * 4
 
 
 def test_session_sequence_fit_and_serve():
