@@ -2,7 +2,7 @@
 PY := python
 export PYTHONPATH := src
 
-.PHONY: verify test fast quickstart bench
+.PHONY: verify test fast quickstart bench bench-check
 
 verify:
 	$(PY) -m pytest -x -q
@@ -19,3 +19,8 @@ quickstart:
 # CI-sized benchmark sweep; transport_bench also writes BENCH_transport.json
 bench:
 	$(PY) -m benchmarks.run --fast
+
+# Perf-regression gate: fresh full-size bench runs vs committed
+# BENCH_*.json baselines, with per-metric tolerances (benchmarks/check.py)
+bench-check:
+	$(PY) -m benchmarks.run --check

@@ -1,0 +1,130 @@
+"""Bench regression gate: compare freshly-measured BENCH_*.json reports
+against the committed baselines with per-metric tolerances.
+
+Usage (via the harness): ``python -m benchmarks.run --check`` or
+``make bench-check``.  Fresh results are written to a temp directory and
+never overwrite the committed baselines; the gate fails (exit 1) when a
+tracked metric regresses beyond its tolerance or disappears.
+
+Tolerance model — keyed on metric name, not location, so new report
+sections inherit sane rules:
+
+  * timings (``*_ms``, ``us_per_call``, ``ids_per_s``) — ratio bound
+    (the shared-CPU box is noisy; 2.5x either way still catches the
+    pathological regressions this gate exists for: compile landing in
+    the timed region, a lost overlap, an accidental sync);
+  * ratios (``*speedup*``, ``compression_ratio``, ``*_vs_lower_bound``,
+    ``*amortization*``) — tighter ratio bound;
+  * accuracies — absolute bound;
+  * byte counts — exact (protocol traffic is deterministic);
+  * ``config``/sweep tables and platform-dependent picks
+    (``pipelined_microbatches``) — informational, skipped.
+"""
+from __future__ import annotations
+
+import json
+import math
+import os
+from typing import Iterator, Tuple
+
+#: baseline file -> suite that regenerates it (benchmarks.run name)
+TRACKED = {
+    "BENCH_transport.json": "transport",
+    "BENCH_psi.json": "psi_scaling",
+}
+
+SKIP_SUBTREES = ("config", "pipeline_sweep")
+SKIP_KEYS = ("pipelined_microbatches",)
+
+
+def _rule(key: str):
+    """(kind, bound) tolerance for a metric name."""
+    if key in SKIP_KEYS:
+        return ("skip", None)
+    if "accuracy" in key:
+        return ("abs", 0.08)
+    if "bytes" in key:
+        return ("exact", None)
+    if ("speedup" in key or "compression_ratio" in key
+            or "amortization" in key or "vs_lower_bound" in key):
+        return ("ratio", 2.0)
+    if key == "lower_bound_ms":
+        return ("exact", None)
+    if (key.endswith("_ms") or key == "us_per_call"
+            or key == "ids_per_s" or key == "wall_s"):
+        return ("ratio", 2.5)
+    return ("ratio", 2.5)   # default: treat unknown numerics as timings
+
+
+def _leaves(tree, prefix="") -> Iterator[Tuple[str, str, float]]:
+    """Yield (path, leaf_key, value) for every numeric leaf."""
+    for k, v in tree.items():
+        path = f"{prefix}.{k}" if prefix else k
+        if k in SKIP_SUBTREES:
+            continue
+        if isinstance(v, dict):
+            yield from _leaves(v, path)
+        elif isinstance(v, (int, float)) and not isinstance(v, bool):
+            yield path, k, float(v)
+
+
+def compare(baseline: dict, fresh: dict, name: str = "") -> list:
+    """Return a list of failure strings (empty = pass)."""
+    fails = []
+    fresh_flat = {p: v for p, _, v in _leaves(fresh)}
+    for path, key, base in _leaves(baseline):
+        kind, bound = _rule(key)
+        if kind == "skip":
+            continue
+        if path not in fresh_flat:
+            fails.append(f"{name}:{path}: missing from fresh results")
+            continue
+        new = fresh_flat[path]
+        if kind == "exact":
+            ok = new == base
+            detail = f"{new} != {base}"
+        elif kind == "abs":
+            ok = abs(new - base) <= bound
+            detail = f"|{new:.4f} - {base:.4f}| > {bound}"
+        else:  # ratio
+            if base == 0 or new == 0:
+                ok = new == base
+                detail = f"{new} vs {base} (zero)"
+            else:
+                r = new / base
+                ok = 1.0 / bound <= r <= bound and math.isfinite(r)
+                detail = f"{new:.4g} vs {base:.4g} (ratio {r:.2f} " \
+                         f"outside [{1/bound:.2f}, {bound}])"
+        if not ok:
+            fails.append(f"{name}:{path}: {detail}")
+    return fails
+
+
+def check(repo_root: str = ".", fresh_dir: str = ".") -> int:
+    """Compare every tracked baseline in ``repo_root`` against the same
+    file in ``fresh_dir``.  Prints a PASS/FAIL line per file, returns
+    the number of failures."""
+    n_fail = 0
+    for fname in TRACKED:
+        base_path = os.path.join(repo_root, fname)
+        fresh_path = os.path.join(fresh_dir, fname)
+        if not os.path.exists(base_path):
+            print(f"bench-check SKIP {fname} (no committed baseline)")
+            continue
+        if not os.path.exists(fresh_path):
+            print(f"bench-check FAIL {fname} (fresh run produced no file)")
+            n_fail += 1
+            continue
+        with open(base_path) as f:
+            baseline = json.load(f)
+        with open(fresh_path) as f:
+            fresh = json.load(f)
+        fails = compare(baseline, fresh, fname)
+        if fails:
+            n_fail += len(fails)
+            print(f"bench-check FAIL {fname}:")
+            for msg in fails:
+                print(f"  {msg}")
+        else:
+            print(f"bench-check PASS {fname}")
+    return n_fail

@@ -2,11 +2,19 @@
 TPU-roofline report.  Prints ``name,us_per_call,derived`` CSV.
 
     PYTHONPATH=src python -m benchmarks.run [--only NAME] [--fast]
+                                            [--check]
+
+``--check`` re-measures the suites with committed ``BENCH_*.json``
+baselines (transport, psi) into a temp directory and gates on the
+per-metric tolerances in ``benchmarks.check`` — the perf-regression
+analogue of the test suite.
 """
 from __future__ import annotations
 
 import argparse
+import os
 import sys
+import tempfile
 import traceback
 
 
@@ -14,19 +22,38 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None)
     ap.add_argument("--fast", action="store_true",
-                    help="smaller fig4 run (CI-sized)")
+                    help="smaller fig4/transport runs (CI-sized)")
+    ap.add_argument("--check", action="store_true",
+                    help="compare fresh BENCH_*.json against the "
+                         "committed baselines with tolerances")
     args = ap.parse_args()
 
-    from benchmarks import (combine_ablation, cut_comm, fig4_accuracy,
-                            kernels_bench, psi_scaling, split_overhead,
-                            transport_bench)
+    from benchmarks import (check, combine_ablation, cut_comm,
+                            fig4_accuracy, kernels_bench, psi_scaling,
+                            split_overhead, transport_bench)
+
+    if args.check:
+        # full-size runs (the baselines were measured at full size),
+        # written to a scratch dir so baselines are never clobbered
+        with tempfile.TemporaryDirectory() as tmp:
+            print("name,us_per_call,derived")
+            for row in transport_bench.run(
+                    out=os.path.join(tmp, "BENCH_transport.json")):
+                print(",".join(str(x) for x in row))
+            for row in psi_scaling.run(
+                    out=os.path.join(tmp, "BENCH_psi.json")):
+                print(",".join(str(x) for x in row))
+            if check.check(repo_root=".", fresh_dir=tmp):
+                raise SystemExit(1)
+        return
 
     suites = {
         "psi_scaling": psi_scaling.run,
         "cut_comm": cut_comm.run,
         "kernels": kernels_bench.run,
         "split_overhead": split_overhead.run,
-        "transport": (lambda: transport_bench.run(n=1200, epochs=2))
+        "transport": (lambda: transport_bench.run(
+                          n=1200, epochs=2, trials=1, sweep=False))
                       if args.fast else transport_bench.run,
         "combine_ablation": (lambda: combine_ablation.run(n=1500, epochs=4)
                              ) if args.fast else combine_ablation.run,

@@ -32,6 +32,9 @@ def main(argv=None):
                     choices=["none", "fp16", "int8"])
     ap.add_argument("--latency-ms", type=float, default=0.0,
                     help="injected channel latency (split mode)")
+    ap.add_argument("--microbatches", type=int, default=1,
+                    help="GPipe chunks in flight per channel "
+                         "(split pipelined mode)")
     ap.add_argument("--epochs", type=int, default=10)
     args = ap.parse_args(argv)
 
@@ -49,6 +52,7 @@ def main(argv=None):
                           eval_frac=0.15, mode=args.mode,
                           schedule=args.schedule,
                           compression=args.compression,
+                          microbatches=args.microbatches,
                           latency_s=args.latency_ms * 1e-3)
 
     if args.mode == "split":
@@ -57,7 +61,8 @@ def main(argv=None):
               f"{ts['schedule']} schedule over {ts['backend']} transport "
               f"({ts['compression']} codec): measured "
               f"{ts['cut_payload_bytes_per_step']} B/step of cut "
-              f"activations, {ts['step_ms']:.1f} ms/step "
+              f"activations, {ts['step_ms']:.1f} ms/step, "
+              f"M={ts['microbatches']} in flight "
               f"(raw pixels: ZERO)")
     else:
         traffic = session.cut_traffic(batch_size=128)

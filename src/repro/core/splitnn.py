@@ -203,6 +203,64 @@ def make_mlp_trunk_program(model: MLPSplitNN):
     return jax.jit(trunk_step)
 
 
+def make_mlp_trunk_microbatch_programs(model: MLPSplitNN):
+    """Per-microbatch scientist programs for GPipe-style pipelining.
+
+    The batch is split into M row chunks; every chunk's loss is seeded
+    ``sum / denom`` with ``denom`` = the FULL batch size, so the per-row
+    cotangents are exactly the full-batch mean's and grads accumulate
+    across microbatches by plain f32 addition in chunk order.  Metrics
+    accumulate the same way (``loss`` = NLL sum / B, ``accuracy`` =
+    correct count / B per chunk).
+
+    Two programs because they sit on opposite sides of the wire window:
+
+      ``cutgrad(tp, cuts (P-tuple of (bm, k)), labels (bm,), denom,
+          inv_micro) -> (cut_grad_tuple, metric_parts)``
+          — the latency-critical path; runs the moment a chunk's cut
+          activations arrive so its gradient chunk can ship back
+          immediately.  Takes/returns per-owner tuples: the stack and
+          the per-owner split both happen inside the compiled program,
+          so the dispatch loop does no host-side reshaping.
+      ``weightgrad(tp, cuts, labels, denom, inv_micro) ->
+          trunk_grad_tree``
+          — recompute-based trunk weight gradients, executed while the
+          cut gradients fly and the owners step (hidden by the wire).
+
+    With one microbatch (the whole batch as a single chunk) this
+    decomposition is bitwise-identical to the fused
+    ``make_mlp_trunk_program`` step — verified by the split-vs-joint
+    property tests.  ACROSS chunk sizes the math is not bitwise-stable
+    (XLA reduction order differs with row count), so the equivalence
+    oracle for microbatched runs is the microbatched joint loop in
+    ``VerticalSession`` — built from these same programs — not
+    ``make_split_train_step``.
+    """
+
+    def chunk_loss(tp, cuts, labels, denom):
+        z = model.combine(jnp.stack(cuts))
+        logits = model._mlp_apply(tp, z)
+        logp = jax.nn.log_softmax(logits)
+        loss = -jnp.sum(jnp.take_along_axis(logp, labels[:, None], 1)) \
+            / denom
+        acc = jnp.sum(jnp.argmax(logits, -1) == labels) / denom
+        return loss, {"loss": loss, "accuracy": acc}
+
+    # inv_micro is part of the uniform adapter signature (the LM trunk
+    # weights its aux loss by it); the MLP loss has no per-chunk term
+    def cutgrad(tp, cuts, labels, denom, inv_micro):
+        (_, parts), cg = jax.value_and_grad(
+            lambda c: chunk_loss(tp, c, labels, denom),
+            has_aux=True)(tuple(cuts))
+        return cg, parts
+
+    def weightgrad(tp, cuts, labels, denom, inv_micro):
+        return jax.grad(
+            lambda p: chunk_loss(p, tuple(cuts), labels, denom)[0])(tp)
+
+    return jax.jit(cutgrad), jax.jit(weightgrad)
+
+
 # ---------------------------------------------------------------------------
 # Communication accounting (claim C4)
 # ---------------------------------------------------------------------------

@@ -114,33 +114,55 @@ class DataScientist:
 class OwnerComputeEndpoint:
     """The compute that, in a real deployment, runs on the owner's device.
 
-    Holds the owner's private feature slice, its head-segment parameters,
-    and its own optimizer state; everything else arrives as protocol
-    messages on its :class:`~repro.federation.transport.Endpoint`:
+    Holds the owner's private feature slice (staged on device once — the
+    per-step dispatch loop never blocks on a host transfer), its
+    head-segment parameters, and its own optimizer state; everything else
+    arrives as protocol messages on its
+    :class:`~repro.federation.transport.Endpoint`:
 
       ``head_fwd``       (scientist -> owner): batch row indices, seq t.
-                         The owner gathers ITS OWN rows, runs the jitted
-                         head forward, and ships codec-encoded cut
-                         activations back — the only data that ever
-                         leaves (paper Fig. 2, arrow 5).
-      ``cut_gradients``  (scientist -> owner): the cut gradient for seq t
-                         (arrow 7).  The owner runs its explicit-VJP head
-                         backward against the inputs it cached for t and
-                         applies its own optimizer update (arrow 8).
+                         The owner gathers ITS OWN rows on device, splits
+                         them into ``microbatches`` chunks, and — once
+                         every update through step t-1 is applied — runs
+                         the jitted head forward per chunk, shipping each
+                         codec-encoded cut chunk the moment it exists
+                         (paper Fig. 2, arrow 5): up to M cut exchanges
+                         in flight per channel.
+      ``cut_gradients``  (scientist -> owner): the cut gradient for chunk
+                         m of step t, seq ``t*M + m`` (arrow 7).  The
+                         owner runs its explicit-VJP head backward for
+                         that chunk immediately (hidden under the wire
+                         for all but the last chunk), accumulates, and on
+                         the step's final chunk applies its optimizer
+                         update (arrow 8) — grads from every microbatch
+                         are accumulated at step-start params before the
+                         single update, so the math is the plain
+                         full-batch step, GPipe-scheduled.
+      ``warmup``         pre-training handshake: runs every jitted
+                         program (gather, fwd/bwd per chunk shape, a
+                         zero-gradient update, both codec directions) so
+                         no XLA compile lands inside the timed training
+                         region.  A zero gradient leaves params and
+                         optimizer state bitwise unchanged.
       ``barrier``        flush marker; the owner acks once every prior
                          message is processed.
       ``stop``           end of training.
 
-    FIFO channel order is the protocol's only synchronization: the
-    gradient for step t always precedes the forward request for step
-    t+1, so pipelined schedules stay mathematically exact.  ``run`` is
-    the thread target; with compute released from the GIL (jitted
-    programs), owner threads genuinely overlap the scientist's trunk.
+    FIFO channel order is the protocol's only synchronization: every
+    gradient chunk of step t precedes the forward execution for step
+    t+1 (the t+1 ``head_fwd`` may *arrive* early — it is staged, not
+    run, until the step-t update lands), so pipelined schedules stay
+    mathematically exact.  ``run`` is the thread target; with compute
+    released from the GIL (jitted programs), owner threads genuinely
+    overlap the scientist's trunk.
     """
 
     def __init__(self, owner: DataOwner, endpoint, head_fwd, head_bwd, *,
-                 optimizer, params, codec, ack_steps: bool = False):
+                 optimizer, params, codec, ack_steps: bool = False,
+                 microbatches: int = 1, gather=None, update_program=None,
+                 tail_program=None):
         import jax
+        import jax.numpy as jnp
 
         self.owner = owner
         self.endpoint = endpoint
@@ -150,18 +172,100 @@ class OwnerComputeEndpoint:
         self.opt_state = optimizer.init(params)
         self.codec = codec
         self.ack_steps = ack_steps
+        self.micro = int(microbatches)
         self.steps_done = 0
         self.error: Optional[BaseException] = None
         self._inflight: Dict[int, object] = {}   # seq -> owner-side inputs
+        self._plan: Dict[int, list] = {}         # step -> staged fwd chunks
+        self._grad_acc = None
+        self._grads_seen = 0
 
-        # one jitted program per segment op — update+apply compiled
-        # together, the same fusion granularity as the joint train step
-        # (required for bit-for-bit gradient equivalence)
-        def _update(p, s, g, i):
-            updates, s = optimizer.update(g, s, p, i)
-            return apply_updates(p, updates), s
+        if update_program is None:
+            # one jitted program per segment op — update+apply compiled
+            # together, the same fusion granularity as the joint train
+            # step (required for bit-for-bit gradient equivalence);
+            # params/state buffers are donated
+            def _update(p, s, g, i):
+                updates, s = optimizer.update(g, s, p, i)
+                return apply_updates(p, updates), s
 
-        self._update = jax.jit(_update)
+            update_program = jax.jit(_update, donate_argnums=(0, 1))
+        self._update = update_program
+        # fused bwd+update+fwd tail (one dispatch on the critical path);
+        # None falls back to the separate programs
+        self._tail = tail_program
+        self._gather = gather or jax.jit(lambda feats, idx: feats[idx])
+        self._feats = jnp.asarray(owner._features)   # device-staged, once
+
+    # helpers --------------------------------------------------------------
+    def _stage(self, idx) -> list:
+        """Gather the step's rows on device and pre-slice the microbatch
+        chunks (all off the latency-critical path)."""
+        import jax.numpy as jnp
+        x = self._gather(self._feats, jnp.asarray(np.asarray(idx)))
+        if self.micro == 1:
+            return [x]
+        bm = x.shape[0] // self.micro
+        return [x[m * bm:(m + 1) * bm] for m in range(self.micro)]
+
+    def _ship_cut(self, out, seq: int, kind: str = "cut_activations"
+                  ) -> None:
+        # segment programs may return (cut, aux): the scalar owner-local
+        # aux loss rides along for metric parity
+        cut, aux = out if isinstance(out, tuple) else (out, None)
+        payload = self.codec.encode(cut)
+        if aux is not None:
+            payload["aux"] = np.float32(np.asarray(aux).sum())
+        self.endpoint.send(kind, payload, seq=seq)
+
+    def _run_fwd(self, step: int, first_out=None) -> None:
+        """Run + ship the microbatch forwards of ``step`` (params are
+        already at step-start state by FIFO order).  ``first_out``:
+        chunk 0's forward output when the fused tail program already
+        produced it."""
+        chunks = self._plan[step]
+        start = 0
+        if first_out is not None:
+            self._inflight[step * self.micro] = chunks[0]
+            self._ship_cut(first_out, step * self.micro)
+            start = 1
+        for m in range(start, len(chunks)):
+            seq = step * self.micro + m
+            self._inflight[seq] = chunks[m]
+            self._ship_cut(self.head_fwd(self.params, chunks[m]), seq)
+        del self._plan[step]
+
+    def _warmup(self, msg) -> None:
+        """Compile every program this endpoint will run, leaving params
+        and optimizer state bitwise untouched (zero-gradient update)."""
+        import jax
+        import jax.numpy as jnp
+
+        chunks = self._stage(msg.payload["idx"])
+        for m, x in enumerate(chunks):
+            self._ship_cut(self.head_fwd(self.params, x), m,
+                           kind="warmup_cuts")
+        acc = None
+        gzero = None
+        for m in range(len(chunks)):
+            g = jnp.asarray(self.codec.decode(
+                self.endpoint.recv_kind("warmup_grads").payload))
+            gzero = g * 0.0
+            grads = self.head_bwd(self.params, chunks[m], gzero)
+            acc = grads if acc is None else jax.tree.map(
+                lambda a, b: a + b, acc, grads)
+        self.params, self.opt_state = self._update(
+            self.params, self.opt_state, acc, 0)
+        if self._tail is not None:
+            # compile the fused tail too — zero grads leave params and
+            # state bitwise unchanged, matching its real call shape
+            # (acc=None for single-chunk steps, a grads tree otherwise)
+            tail_acc = None if self.micro == 1 else \
+                jax.tree.map(lambda a: a * 0.0, acc)
+            self.params, self.opt_state, _ = self._tail(
+                self.params, self.opt_state, tail_acc, chunks[-1],
+                gzero, 0, chunks[0])
+        self.endpoint.send("warmup_done", {}, seq=msg.seq)
 
     # one message ----------------------------------------------------------
     def handle(self, msg) -> bool:
@@ -171,29 +275,52 @@ class OwnerComputeEndpoint:
         if msg.kind == "barrier":
             self.endpoint.send("barrier_ack", {}, seq=msg.seq)
             return True
+        if msg.kind == "warmup":
+            self._warmup(msg)
+            return True
         if msg.kind == "head_fwd":
-            import jax.numpy as jnp
-            seq = int(msg.seq)
-            x = jnp.asarray(self.owner._features[msg.payload["idx"]])
-            self._inflight[seq] = x
-            out = self.head_fwd(self.params, x)
-            # segment programs may return (cut, aux): the scalar
-            # owner-local aux loss rides along for metric parity
-            cut, aux = out if isinstance(out, tuple) else (out, None)
-            payload = self.codec.encode(np.asarray(cut))
-            if aux is not None:
-                payload["aux"] = np.float32(np.asarray(aux).sum())
-            self.endpoint.send("cut_activations", payload, seq=seq)
+            step = int(msg.seq)
+            self._plan[step] = self._stage(msg.payload["idx"])
+            if step == self.steps_done:
+                # all updates through step-1 applied — run now; otherwise
+                # the staged plan runs when the step-(t-1) update lands
+                self._run_fwd(step)
             return True
         if msg.kind == "cut_gradients":
+            import jax
             import jax.numpy as jnp
             seq = int(msg.seq)
             g = jnp.asarray(self.codec.decode(msg.payload))
             x = self._inflight.pop(seq)
-            grads = self.head_bwd(self.params, x, g)
-            self.params, self.opt_state = self._update(
-                self.params, self.opt_state, grads, self.steps_done)
-            self.steps_done += 1
+            # grads accumulate at step-start params; ONE update per step
+            # on its last chunk (GPipe semantics — the exact full-batch
+            # step; with micro == 1 this degenerates to the one-shot
+            # update)
+            last = self._grads_seen + 1 == self.micro
+            nxt = self.steps_done + 1
+            if last and self._tail is not None and nxt in self._plan:
+                # fused fast path: final-chunk bwd + accumulate + update
+                # + next step's first forward, one compiled dispatch
+                self.params, self.opt_state, out = self._tail(
+                    self.params, self.opt_state, self._grad_acc, x, g,
+                    self.steps_done, self._plan[nxt][0])
+                self._grad_acc, self._grads_seen = None, 0
+                self.steps_done = nxt
+                self._run_fwd(nxt, out)
+            else:
+                grads = self.head_bwd(self.params, x, g)
+                self._grad_acc = grads if self._grad_acc is None else \
+                    jax.tree.map(lambda a, b: a + b, self._grad_acc,
+                                 grads)
+                self._grads_seen += 1
+                if last:
+                    self.params, self.opt_state = self._update(
+                        self.params, self.opt_state, self._grad_acc,
+                        self.steps_done)
+                    self._grad_acc, self._grads_seen = None, 0
+                    self.steps_done += 1
+                    if self.steps_done in self._plan:
+                        self._run_fwd(self.steps_done)
             if self.ack_steps:
                 self.endpoint.send("step_done", {}, seq=seq)
             return True

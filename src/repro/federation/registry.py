@@ -22,6 +22,25 @@ runs over the transport layer:
                              -> the per-party update rules (the joint
                                 ``default_optimizer`` split at the same
                                 boundary)
+
+Adapters with ``supports_microbatch = True`` add the GPipe surface used
+by ``fit(..., microbatches=M)``:
+
+  ``trunk_microbatch_programs()`` -> (cutgrad, weightgrad) per-chunk
+                                 scientist programs (sum/denom seeding)
+  ``gather_program()``       -> jitted device-side row gather
+                                 (feats, idx) -> rows, so the dispatch
+                                 loop never blocks on a host transfer
+  ``owner_update_rule(lr)`` / ``trunk_update_rule(lr)``
+                             -> (optimizer, jitted update+apply with
+                                buffer donation), cached so the split
+                                workers and the microbatched joint
+                                oracle run the *same* compiled programs
+
+Every program accessor is cached on the adapter: the microbatched joint
+oracle and the transport-backed split schedule must execute identical
+compiled programs for the bit-for-bit equivalence contract to be about
+the *protocol* rather than about XLA codegen stability.
 """
 from __future__ import annotations
 
@@ -32,7 +51,76 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.federation import batching
-from repro.optim import adam, chain, clip_by_global_norm, multi_segment, sgd
+from repro.optim import (adam, apply_updates, chain, clip_by_global_norm,
+                         multi_segment, sgd)
+
+
+class _ProgramCache:
+    """Mixin: build-once accessors for jitted segment programs."""
+
+    def _cached(self, key, builder):
+        cache = getattr(self, "_progs", None)
+        if cache is None:
+            cache = self._progs = {}
+        if key not in cache:
+            cache[key] = builder()
+        return cache[key]
+
+    def gather_program(self):
+        """Device-side row gather: (staged feature array, idx) -> rows.
+        One jitted program shared by owner workers and the joint oracle —
+        feature matrices are staged on device once, so per-step batch
+        assembly never round-trips through the host."""
+        return self._cached(
+            "gather", lambda: jax.jit(lambda feats, idx: feats[idx]))
+
+    def _update_rule(self, key, optimizer):
+        def build():
+            def upd(params, state, grads, step):
+                updates, state_ = optimizer.update(grads, state, params,
+                                                   step)
+                return apply_updates(params, updates), state_
+            return optimizer, jax.jit(upd, donate_argnums=(0, 1))
+        return self._cached(key, build)
+
+    def owner_update_rule(self, owner_lr: Optional[float] = None):
+        """(optimizer, jitted update+apply) for one owner's head segment.
+        update+apply compile together — the joint step's fusion
+        granularity (bit-for-bit equivalence depends on it) — and donate
+        the param/state buffers."""
+        return self._update_rule(("owner_upd", owner_lr),
+                                 self.owner_optimizer(owner_lr))
+
+    def trunk_update_rule(self, scientist_lr: Optional[float] = None):
+        return self._update_rule(("trunk_upd", scientist_lr),
+                                 self.trunk_optimizer(scientist_lr))
+
+    def owner_tail_rule(self, owner_lr: Optional[float] = None,
+                        owner_index: int = 0):
+        """The owner's latency-critical tail as ONE compiled program:
+        backward for the step's final gradient chunk (+ fold into the
+        accumulated grads when microbatched), the optimizer update, and
+        the forward for the *next* step's first chunk.  One dispatch
+        instead of three and no host sync between segments — and
+        bitwise-identical to the separate programs (property-tested).
+        ``acc`` may be ``None`` (single-chunk steps add nothing — not
+        even a zeros-tree, which would flip -0.0 gradient signs)."""
+        head_fwd, head_bwd = self.owner_programs(owner_index)
+        optimizer = self.owner_optimizer(owner_lr)
+        key = ("owner_tail", owner_lr, id(head_fwd))
+
+        def build():
+            def tail(p, s, acc, x, g, step, x_next):
+                gr = head_bwd(p, x, g)
+                if acc is not None:
+                    gr = jax.tree.map(lambda a, b: a + b, acc, gr)
+                updates, s2 = optimizer.update(gr, s, p, step)
+                p2 = apply_updates(p, updates)
+                return p2, s2, head_fwd(p2, x_next)
+
+            return jax.jit(tail, donate_argnums=(0, 1))
+
+        return self._cached(key, build)
 
 _BUILDERS: Dict[type, Callable] = {}
 
@@ -67,7 +155,7 @@ from repro.models.model import SplitModel
 
 
 @register_model(MLPSplitConfig)
-class MLPAdapter:
+class MLPAdapter(_ProgramCache):
     """The paper's Appendix-B dual-headed MLP on feature-split data."""
 
     layout = "feature"
@@ -108,14 +196,24 @@ class MLPAdapter:
 
     # ------------------------------------------------- split execution
     supports_split = True
+    supports_microbatch = True
 
     def owner_programs(self, owner_index: int):
         from repro.core.splitnn import make_mlp_head_programs
-        return make_mlp_head_programs(self.model)
+        # one shape-polymorphic program pair serves every owner
+        return self._cached("head_progs",
+                            lambda: make_mlp_head_programs(self.model))
 
     def trunk_program(self):
         from repro.core.splitnn import make_mlp_trunk_program
-        return make_mlp_trunk_program(self.model)
+        return self._cached("trunk_prog",
+                            lambda: make_mlp_trunk_program(self.model))
+
+    def trunk_microbatch_programs(self):
+        from repro.core.splitnn import make_mlp_trunk_microbatch_programs
+        return self._cached(
+            "trunk_micro",
+            lambda: make_mlp_trunk_microbatch_programs(self.model))
 
     def owner_param_slice(self, params, p: int):
         if self.model.symmetric:
@@ -140,7 +238,7 @@ class MLPAdapter:
 
 
 @register_model(ArchConfig)
-class SplitLMAdapter:
+class SplitLMAdapter(_ProgramCache):
     """Sequence-split language models (`SplitModel`) — text modality."""
 
     layout = "sequence"
@@ -192,6 +290,7 @@ class SplitLMAdapter:
 
     # ------------------------------------------------- split execution
     supports_split = True
+    supports_microbatch = True
 
     def owner_programs(self, owner_index: int):
         """Owner ``owner_index``'s jitted segment programs.  The head
@@ -204,38 +303,79 @@ class SplitLMAdapter:
         to cross the boundary)."""
         model = self.model
 
-        def head_apply(hp, tokens):
-            S_p = tokens.shape[-1]
-            positions = model._positions(S_p, owner_index)
-            cut, _, aux = model._head_one(hp, tokens, positions, 0)
-            return cut, aux
+        def build():
+            def head_apply(hp, tokens):
+                S_p = tokens.shape[-1]
+                positions = model._positions(S_p, owner_index)
+                cut, _, aux = model._head_one(hp, tokens, positions, 0)
+                return cut, aux
 
-        def head_fwd(hp, tokens):
-            return head_apply(hp, tokens)
+            def head_fwd(hp, tokens):
+                return head_apply(hp, tokens)
 
-        def head_bwd(hp, tokens, g):
-            (cut, aux), vjp = jax.vjp(lambda q: head_apply(q, tokens), hp)
-            return vjp((g.astype(cut.dtype),
-                        jnp.ones((), aux.dtype)))[0]
+            def head_bwd(hp, tokens, g):
+                (cut, aux), vjp = jax.vjp(
+                    lambda q: head_apply(q, tokens), hp)
+                return vjp((g.astype(cut.dtype),
+                            jnp.ones((), aux.dtype)))[0]
 
-        return jax.jit(head_fwd), jax.jit(head_bwd)
+            return jax.jit(head_fwd), jax.jit(head_bwd)
+
+        return self._cached(("head_progs", owner_index), build)
 
     def trunk_program(self):
         model = self.model
         cdt = jnp.dtype(model.cfg.compute_dtype)
 
-        def trunk_step(tp, cut, labels):
-            def f(tp_, cut_):
-                z = model.combine(cut_.astype(cdt))
-                logits, _, aux_t = model.trunk_forward(tp_, z)
-                ce = model.ce_loss(logits, labels)
-                return ce + aux_t, {"loss": ce, "aux": aux_t}
+        def build():
+            def trunk_step(tp, cut, labels):
+                def f(tp_, cut_):
+                    z = model.combine(cut_.astype(cdt))
+                    logits, _, aux_t = model.trunk_forward(tp_, z)
+                    ce = model.ce_loss(logits, labels)
+                    return ce + aux_t, {"loss": ce, "aux": aux_t}
 
-            (_, metrics), (tg, cg) = jax.value_and_grad(
-                f, argnums=(0, 1), has_aux=True)(tp, cut)
-            return metrics, tg, cg
+                (_, metrics), (tg, cg) = jax.value_and_grad(
+                    f, argnums=(0, 1), has_aux=True)(tp, cut)
+                return metrics, tg, cg
 
-        return jax.jit(trunk_step)
+            return jax.jit(trunk_step)
+
+        return self._cached("trunk_prog", build)
+
+    def trunk_microbatch_programs(self):
+        """Per-chunk scientist programs (GPipe).  The chunk CE is scaled
+        ``bm / denom`` (= chunk mean re-weighted to the full-batch mean)
+        and the trunk aux loss contributes ``aux / n_micro``, so summing
+        metric parts and grads across chunks reproduces full-batch
+        semantics; per-owner clipping already makes the LM path
+        tolerance- (not bit-) equivalent to the fused joint program."""
+        model = self.model
+        cdt = jnp.dtype(model.cfg.compute_dtype)
+
+        def build():
+            def chunk_loss(tp, cuts, labels, denom, inv_micro):
+                z = model.combine(jnp.stack(cuts).astype(cdt))
+                logits, _, aux_t = model.trunk_forward(tp, z)
+                ce = model.ce_loss(logits, labels) \
+                    * labels.shape[0] / denom
+                aux = aux_t * inv_micro
+                return ce + aux, {"loss": ce, "aux": aux}
+
+            def cutgrad(tp, cuts, labels, denom, inv_micro):
+                (_, parts), cg = jax.value_and_grad(
+                    lambda c: chunk_loss(tp, c, labels, denom, inv_micro),
+                    has_aux=True)(tuple(cuts))
+                return cg, parts
+
+            def weightgrad(tp, cuts, labels, denom, inv_micro):
+                return jax.grad(
+                    lambda p: chunk_loss(p, tuple(cuts), labels, denom,
+                                         inv_micro)[0])(tp)
+
+            return jax.jit(cutgrad), jax.jit(weightgrad)
+
+        return self._cached("trunk_micro", build)
 
     def owner_param_slice(self, params, p: int):
         return jax.tree.map(lambda a: a[p], params["heads"])

@@ -16,6 +16,20 @@ Every cross-party message the session mediates is appended to
 are PSI responses and cut-layer activations (claim C4), and the only
 scientist->owner payloads are blinded PSI sets, the resolved-ID broadcast,
 and cut-layer gradients.
+
+Training modes:
+
+  * ``fit(mode="joint")`` — one jitted autodiff program per step.
+  * ``fit(mode="joint", microbatches=M)`` — the *microbatched joint
+    oracle*: the same GPipe math the pipelined split schedule runs
+    (per-chunk grads at step-start params, accumulated in chunk order,
+    one update), executed in-process through the same compiled segment
+    programs.  Chunked reductions are not bitwise-identical to the
+    one-shot program (XLA reduction order differs with row count), so
+    this loop — not the fused program — is the bit-for-bit reference
+    for microbatched split runs.
+  * ``fit(mode="split", microbatches=M)`` — true split execution over
+    the transport with M cut exchanges in flight per channel.
 """
 from __future__ import annotations
 
@@ -36,7 +50,14 @@ from repro.federation import batching, transport
 from repro.federation.parties import (DataOwner, DataScientist,
                                       OwnerComputeEndpoint, PrivacyError)
 from repro.federation.registry import build_adapter
-from repro.optim import apply_updates
+
+
+def _scalars(m):
+    return {k: float(v) for k, v in m.items()}
+
+
+def _tree_add(a, b):
+    return jax.tree.map(lambda x, y: x + y, a, b)
 
 
 class VerticalSession:
@@ -96,14 +117,17 @@ class VerticalSession:
         """The paper's §3.1 protocol: the scientist runs DH-PSI pairwise
         with each owner (scientist = client, so only the scientist learns
         each intersection), intersects globally, broadcasts the shared IDs,
-        and every party filter-and-sorts.  Returns the stats dict."""
+        and every party filter-and-sorts.  The scientist blinds its set
+        ONCE and reuses the blinded upload for every owner round (its
+        secret is per-session, so re-blinding per owner bought nothing but
+        modexps).  Returns the stats dict."""
         nb = GROUPS[group][2]
         stats: dict = {"rounds": [], "global_intersection": 0}
         global_ids = set(self.scientist.ids)
+        client = PSIClient(self.scientist.ids, group)
+        blinded = client.blind()
         for owner in self.owners:
-            client = PSIClient(self.scientist.ids, group)
             server = PSIServer(owner.ids, fp_rate, group)
-            blinded = client.blind()
             double, bf = server.respond(blinded)
             inter = client.intersect(double, bf)
             global_ids &= set(inter)
@@ -151,7 +175,7 @@ class VerticalSession:
             log_every: Optional[int] = None, ckpt_dir: Optional[str] = None,
             ckpt_every: int = 0, shuffle_seed: Optional[int] = None,
             verbose: bool = True, mode: str = "joint",
-            schedule: str = "pipelined",
+            schedule: str = "pipelined", microbatches: int = 1,
             compression: Optional[str] = None, backend: str = "queue",
             latency_s: float = 0.0,
             bandwidth_bps: Optional[float] = None) -> dict:
@@ -165,14 +189,20 @@ class VerticalSession:
         Returns ``{"train": [...], "eval": [...], "final": {...}}``.
 
         ``mode="joint"`` (default) runs the single jitted autodiff
-        program — the gradient-equivalence oracle.  ``mode="split"``
-        runs *true split execution*: each owner's head segment executes
-        on its own thread behind a ``federation.transport`` channel, and
-        the only cross-party tensors are cut activations / cut gradients
-        — measured wire bytes, not estimates (``self.transport_stats``).
+        program — the gradient-equivalence oracle.  With
+        ``microbatches=M > 1`` the joint loop runs the *microbatched*
+        oracle instead: per-chunk grads at step-start params, accumulated
+        in chunk order through the same compiled segment programs the
+        split schedule uses (GPipe semantics).  ``mode="split"`` runs
+        *true split execution*: each owner's head segment executes on its
+        own thread behind a ``federation.transport`` channel, and the
+        only cross-party tensors are cut activations / cut gradients —
+        measured wire bytes, not estimates (``self.transport_stats``).
         Split-mode knobs: ``schedule`` ("pipelined" overlaps owner
-        compute for batch t+1 with the scientist's trunk update for
-        batch t; "sequential" is the fully synchronous baseline),
+        compute and wire latency with the scientist's work — with
+        ``microbatches=M`` every batch is split into M GPipe chunks and
+        up to M cut exchanges ride the channel concurrently;
+        "sequential" is the fully synchronous baseline),
         ``compression`` (None | "fp16" | "int8" cut-payload codec),
         ``backend`` ("queue" = serialized simulated network, "direct" =
         in-process reference passing), ``latency_s``/``bandwidth_bps``
@@ -182,6 +212,18 @@ class VerticalSession:
             raise ValueError("pass exactly one of epochs= or steps=")
         if mode not in ("joint", "split"):
             raise ValueError(f"mode must be 'joint' or 'split': {mode!r}")
+        microbatches = int(microbatches)
+        if microbatches < 1:
+            raise ValueError(f"microbatches must be >= 1: {microbatches}")
+        if microbatches > 1:
+            if batch_size % microbatches:
+                raise ValueError(
+                    f"microbatches={microbatches} must divide "
+                    f"batch_size={batch_size}")
+            if not getattr(self.adapter, "supports_microbatch", False):
+                raise ValueError(
+                    f"{type(self.adapter).__name__} does not support "
+                    "microbatched training")
         if mode == "split":
             return self._fit_split(
                 epochs=epochs, steps=steps, batch_size=batch_size,
@@ -189,9 +231,17 @@ class VerticalSession:
                 scientist_lr=scientist_lr, log_every=log_every,
                 ckpt_dir=ckpt_dir, ckpt_every=ckpt_every,
                 shuffle_seed=shuffle_seed, verbose=verbose,
-                schedule=schedule, compression=compression,
-                backend=backend, latency_s=latency_s,
-                bandwidth_bps=bandwidth_bps)
+                schedule=schedule, microbatches=microbatches,
+                compression=compression, backend=backend,
+                latency_s=latency_s, bandwidth_bps=bandwidth_bps)
+        if microbatches > 1:
+            return self._fit_joint_microbatched(
+                epochs=epochs, steps=steps, batch_size=batch_size,
+                eval_frac=eval_frac, owner_lr=owner_lr,
+                scientist_lr=scientist_lr, log_every=log_every,
+                ckpt_dir=ckpt_dir, ckpt_every=ckpt_every,
+                shuffle_seed=shuffle_seed, verbose=verbose,
+                microbatches=microbatches)
 
         n = len(self.scientist.ids)
         n_train = n - int(n * eval_frac)
@@ -203,7 +253,9 @@ class VerticalSession:
         adapter = self.adapter
         opt = adapter.default_optimizer(owner_lr, scientist_lr)
         state = train_state_init(self.params, opt)
-        step_fn = make_split_train_step(adapter.loss_fn, opt, donate=False)
+        # donate=True: the joint step consumes its param/state buffers in
+        # place — the allocation-free hot loop the core API was built for
+        step_fn = make_split_train_step(adapter.loss_fn, opt, donate=True)
 
         # the per-step protocol traffic, recorded once (static shapes)
         for owner in self.owners:
@@ -221,9 +273,6 @@ class VerticalSession:
         t0 = time.time()
         metrics = {}
 
-        def scalars(m):
-            return {k: float(v) for k, v in m.items()}
-
         stream = self._index_stream(rng, n_train, batch_size, epochs, steps)
         if epochs is not None:
             steps_per_epoch = (n_train - batch_size) // batch_size + 1
@@ -235,7 +284,7 @@ class VerticalSession:
                     self.params, state, metrics = step_fn(
                         self.params, state, batch, global_step)
                     global_step += 1
-                rec = {"epoch": ep, **scalars(metrics)}
+                rec = {"epoch": ep, **_scalars(metrics)}
                 history["train"].append(rec)
                 if len(self._eval_idx):
                     history["eval"].append(
@@ -257,7 +306,7 @@ class VerticalSession:
                                            next(stream))
                 self.params, state, metrics = step_fn(
                     self.params, state, batch, i)
-                rec = {"step": i, **scalars(metrics)}
+                rec = {"step": i, **_scalars(metrics)}
                 history["train"].append(rec)
                 if verbose and log_every and (i % log_every == 0
                                               or i == steps - 1):
@@ -300,6 +349,170 @@ class VerticalSession:
                 yield order[cursor:cursor + batch_size]
                 cursor += batch_size
 
+    def _train_bookkeeping(self, t, metrics, history, t0, *, epochs,
+                           steps, steps_per_epoch, log_every, verbose,
+                           ckpt_dir, ckpt_every, sync):
+        """Per-step history/eval/print/checkpoint — shared by the
+        microbatched joint oracle and the split loop.  ``sync`` makes
+        ``self.params`` current (a transport barrier + reassembly for
+        the split loop, a local reassembly for the oracle) before any
+        eval or checkpoint touches them."""
+        if epochs is not None:
+            if (t + 1) % steps_per_epoch:
+                return
+            ep_i = (t + 1) // steps_per_epoch - 1
+            rec = {"epoch": ep_i, **_scalars(metrics)}
+            history["train"].append(rec)
+            if len(self._eval_idx):
+                sync()
+                history["eval"].append(
+                    {"epoch": ep_i, **self.evaluate()})
+            if verbose and (ep_i % (log_every or 1) == 0
+                            or ep_i == epochs - 1):
+                ev = history["eval"][-1] if history["eval"] else {}
+                extra = "".join(f" val_{k}={v:.4f}"
+                                for k, v in ev.items() if k != "epoch")
+                print(f"epoch {ep_i:3d} " + " ".join(
+                    f"{k}={v:.4f}" for k, v in rec.items()
+                    if k != "epoch") + extra +
+                    f" ({time.time() - t0:.1f}s)")
+            if ckpt_dir and ckpt_every and (ep_i + 1) % ckpt_every == 0:
+                sync()
+                self.checkpoint(ckpt_dir, ep_i + 1)
+        else:
+            rec = {"step": t, **_scalars(metrics)}
+            history["train"].append(rec)
+            if verbose and log_every and (t % log_every == 0
+                                          or t == steps - 1):
+                print(f"step {t:5d} " + " ".join(
+                    f"{k}={v:.4f}" for k, v in rec.items()
+                    if k != "step") + f" ({time.time() - t0:.1f}s)")
+            if ckpt_dir and ckpt_every and (t + 1) % ckpt_every == 0:
+                sync()
+                self.checkpoint(ckpt_dir, t + 1)
+
+    # ------------------------------------- 3a. microbatched joint oracle
+
+    def _fit_joint_microbatched(self, *, epochs, steps, batch_size,
+                                eval_frac, owner_lr, scientist_lr,
+                                log_every, ckpt_dir, ckpt_every,
+                                shuffle_seed, verbose, microbatches
+                                ) -> dict:
+        """The GPipe reference loop: per-microbatch segment programs,
+        grads accumulated in chunk order at step-start params, one
+        optimizer update per party per step.  Runs the SAME compiled
+        programs (adapter-cached) as ``fit(mode="split",
+        microbatches=M)`` in the same order — the bit-for-bit oracle for
+        microbatched split execution."""
+        adapter = self.adapter
+        M = microbatches
+        bm = batch_size // M
+        n = len(self.scientist.ids)
+        n_train = n - int(n * eval_frac)
+        if n_train < batch_size:
+            raise ValueError(f"{n_train} train rows < batch {batch_size}")
+        self._train_idx = np.arange(n_train)
+        self._eval_idx = np.arange(n_train, n)
+
+        P = len(self.owners)
+        head_progs = [adapter.owner_programs(p) for p in range(P)]
+        gather = adapter.gather_program()
+        feats = [jnp.asarray(o._features) for o in self.owners]
+        owner_opt, owner_update = adapter.owner_update_rule(owner_lr)
+        slices = [adapter.owner_param_slice(self.params, p)
+                  for p in range(P)]
+        ostates = [owner_opt.init(s) for s in slices]
+        trunk_opt, trunk_update = adapter.trunk_update_rule(scientist_lr)
+        cutgrad, weightgrad = adapter.trunk_microbatch_programs()
+        tp = self.params["trunk"]
+        ts = trunk_opt.init(tp)
+        denom = jnp.asarray(float(batch_size), jnp.float32)
+        inv_micro = jnp.asarray(1.0 / M, jnp.float32)
+
+        labels = self.scientist.labels
+        rng = np.random.default_rng(self.seed if shuffle_seed is None
+                                    else shuffle_seed)
+        stream = self._index_stream(rng, n_train, batch_size, epochs, steps)
+        if epochs is not None:
+            steps_per_epoch = (n_train - batch_size) // batch_size + 1
+            total_steps = epochs * steps_per_epoch
+        else:
+            steps_per_epoch = None
+            total_steps = steps
+
+        def reassemble():
+            self.params = {"heads": adapter.stack_head_params(slices),
+                           "trunk": tp}
+
+        history: dict = {"train": [], "eval": []}
+        t0 = time.time()
+        metrics: dict = {}
+
+        for t in range(total_steps):
+            idx = next(stream)
+            lab_full = labels[idx]
+            idx_dev = jnp.asarray(np.asarray(idx, np.int32))
+            xs = [gather(f, idx_dev) for f in feats]
+            chunks = [[x[m * bm:(m + 1) * bm] for m in range(M)]
+                      for x in xs]
+            parts_list = []
+            owner_aux = 0.0
+            hg_acc: List[Optional[object]] = [None] * P
+            cut_cache = []
+            for m in range(M):
+                cuts = []
+                for p in range(P):
+                    out = head_progs[p][0](slices[p], chunks[p][m])
+                    cut, aux = (out if isinstance(out, tuple)
+                                else (out, None))
+                    cuts.append(cut)
+                    if aux is not None:
+                        # identical f32 round-trip as the wire's aux
+                        owner_aux += float(
+                            np.float32(np.asarray(aux).sum()))
+                cuts = tuple(cuts)
+                lab_m = jnp.asarray(lab_full[m * bm:(m + 1) * bm])
+                cg, parts = cutgrad(tp, cuts, lab_m, denom, inv_micro)
+                parts_list.append(parts)
+                for p in range(P):
+                    hg = head_progs[p][1](slices[p], chunks[p][m], cg[p])
+                    hg_acc[p] = hg if hg_acc[p] is None else \
+                        _tree_add(hg_acc[p], hg)
+                cut_cache.append((cuts, lab_m))
+            for p in range(P):
+                slices[p], ostates[p] = owner_update(
+                    slices[p], ostates[p], hg_acc[p], t)
+            tg_acc = None
+            for cuts, lab_m in cut_cache:
+                tg = weightgrad(tp, cuts, lab_m, denom, inv_micro)
+                tg_acc = tg if tg_acc is None else _tree_add(tg_acc, tg)
+            tp, ts = trunk_update(tp, ts, tg_acc, t)
+            parts_acc = parts_list[0]
+            for parts in parts_list[1:]:
+                parts_acc = {k: parts_acc[k] + parts[k] for k in parts}
+            metrics = dict(parts_acc)
+            if owner_aux and "aux" in metrics:
+                metrics = {**metrics, "aux": metrics["aux"] + owner_aux}
+
+            self._train_bookkeeping(
+                t, metrics, history, t0, epochs=epochs, steps=steps,
+                steps_per_epoch=steps_per_epoch, log_every=log_every,
+                verbose=verbose, ckpt_dir=ckpt_dir,
+                ckpt_every=ckpt_every, sync=reassemble)
+
+        reassemble()
+        if steps is not None and len(self._eval_idx):
+            history["eval"].append({"step": steps, **self.evaluate()})
+
+        final = dict(history["train"][-1]) if history["train"] else {}
+        if history["eval"]:
+            final.update({f"val_{k}": v
+                          for k, v in history["eval"][-1].items()
+                          if k not in ("epoch", "step")})
+        history["final"] = final
+        self.history = history
+        return history
+
     # ------------------------------------------------- 3b. split execution
 
     def _recv_from_owner(self, ep, worker, kind, timeout: float = 120.0):
@@ -334,25 +547,35 @@ class VerticalSession:
 
     def _fit_split(self, *, epochs, steps, batch_size, eval_frac, owner_lr,
                    scientist_lr, log_every, ckpt_dir, ckpt_every,
-                   shuffle_seed, verbose, schedule, compression, backend,
-                   latency_s, bandwidth_bps) -> dict:
+                   shuffle_seed, verbose, schedule, microbatches,
+                   compression, backend, latency_s, bandwidth_bps) -> dict:
         """True split execution over the transport layer (paper Fig. 2).
 
         Per step t the wire carries exactly four message kinds:
         ``head_fwd`` (batch row indices; arrow 4 "compute forward"),
         ``cut_activations`` (arrow 5), ``cut_gradients`` (arrow 7), and
         — in the sequential schedule only — ``step_done`` acks.  The
-        pipelined schedule ships the cut gradients *before* the
-        scientist's trunk update and the next forward request right
-        behind them, so the owners' backward+forward for t/t+1 overlap
-        the scientist's optimizer step; FIFO order keeps the math
-        identical (owners always apply the step-t update before running
-        batch t+1).  With the lossless codec, both schedules reproduce
-        the joint program bit-for-bit whenever the adapter's head
-        optimizer is elementwise-separable across owners (the paper's
-        MLP/SGD case — property-tested); the LM adapter clips grads
-        per-owner instead of across all heads, so it tracks the joint
-        path within tolerance rather than exactly."""
+        pipelined schedule ships the step-t+1 forward request *before*
+        step t's gradients and the gradients before the trunk update, so
+        the owners' backward+forward for t/t+1 overlap the scientist's
+        optimizer step; with ``microbatches=M`` the batch is split into
+        M GPipe chunks, each chunk's cut gradient leaves the moment its
+        cut activations arrive, and the trunk's weight gradients +
+        update run *inside the wire's round-trip window* — only one
+        chunk of owner-edge and trunk-cutgrad compute remains on the
+        latency-critical path.  FIFO order keeps the math identical
+        (owners accumulate every chunk gradient at step-start params and
+        update exactly once per step).  An explicit warmup round
+        compiles every program on both sides before the timed region.
+
+        With the lossless codec, both schedules reproduce the joint
+        program bit-for-bit whenever the adapter's head optimizer is
+        elementwise-separable across owners (the paper's MLP/SGD case —
+        property-tested); microbatched runs reproduce the microbatched
+        joint oracle (``fit(mode="joint", microbatches=M)``) the same
+        way.  The LM adapter clips grads per-owner instead of across all
+        heads, so it tracks the joint path within tolerance rather than
+        exactly."""
         adapter = self.adapter
         if not getattr(adapter, "supports_split", False):
             raise ValueError(f"{type(adapter).__name__} does not support "
@@ -360,6 +583,12 @@ class VerticalSession:
         if schedule not in ("pipelined", "sequential"):
             raise ValueError(f"unknown schedule {schedule!r}")
         sequential = schedule == "sequential"
+        M = microbatches
+        if sequential and M > 1:
+            raise ValueError("microbatches > 1 requires the pipelined "
+                             "schedule (sequential is the synchronous "
+                             "baseline)")
+        bm = batch_size // M
         codec = transport.get_codec(compression)
 
         n = len(self.scientist.ids)
@@ -369,18 +598,28 @@ class VerticalSession:
         self._train_idx = np.arange(n_train)
         self._eval_idx = np.arange(n_train, n)
 
-        trunk_step = adapter.trunk_program()
-        trunk_opt = adapter.trunk_optimizer(scientist_lr)
+        trunk_opt, trunk_update = adapter.trunk_update_rule(scientist_lr)
         trunk_params = self.params["trunk"]
         trunk_state = trunk_opt.init(trunk_params)
+        # Pipelined: the decomposed trunk programs serve every M (M == 1
+        # is a single whole-batch chunk) — cut grads on the
+        # latency-critical path, weight grads + update in the wire's
+        # shadow.  The decomposition is bitwise-identical to the fused
+        # trunk step (property-tested), so the M == 1 joint-oracle
+        # equivalence is unchanged.  Sequential: the fused one-pass
+        # program — recompute-based decomposition would double trunk
+        # work with no wire window to hide it in, overstating the
+        # baseline this schedule exists to provide.
+        if sequential:
+            trunk_step = adapter.trunk_program()
+            cutgrad = weightgrad = None
+        else:
+            cutgrad, weightgrad = adapter.trunk_microbatch_programs()
+            trunk_step = None
+        denom = jnp.asarray(float(batch_size), jnp.float32)
+        inv_micro = jnp.asarray(1.0 / M, jnp.float32)
 
-        # update+apply compiled together — the joint step's fusion
-        # granularity (bit-for-bit equivalence depends on it)
-        @jax.jit
-        def trunk_update(tp, ts, tg, i):
-            updates, ts = trunk_opt.update(tg, ts, tp, i)
-            return apply_updates(tp, updates), ts
-
+        owner_opt, owner_update = adapter.owner_update_rule(owner_lr)
         workers, eps, threads = [], [], []
         for p, owner in enumerate(self.owners):
             ep_sci, ep_own = transport.channel_pair(
@@ -389,9 +628,12 @@ class VerticalSession:
             head_fwd, head_bwd = adapter.owner_programs(p)
             w = OwnerComputeEndpoint(
                 owner, ep_own, head_fwd, head_bwd,
-                optimizer=adapter.owner_optimizer(owner_lr),
+                optimizer=owner_opt,
                 params=adapter.owner_param_slice(self.params, p),
-                codec=codec, ack_steps=sequential)
+                codec=codec, ack_steps=sequential, microbatches=M,
+                gather=adapter.gather_program(),
+                update_program=owner_update,
+                tail_program=adapter.owner_tail_rule(owner_lr, p))
             workers.append(w)
             eps.append(ep_sci)
             th = threading.Thread(target=w.run, daemon=True,
@@ -418,7 +660,10 @@ class VerticalSession:
                         seq=seq)
             inflight.append(idx)
 
-        def recv_cuts(seq):
+        def recv_chunk(seq):
+            """One microbatch chunk from every owner -> per-owner cut
+            tuple + the owners' summed aux scalar.  The cuts go into the
+            jitted trunk programs as-is (stacking happens in-program)."""
             cuts, aux = [], 0.0
             for ep, w in zip(eps, workers):
                 m = self._recv_from_owner(ep, w, "cut_activations")
@@ -426,95 +671,134 @@ class VerticalSession:
                     raise RuntimeError(f"protocol desync: cut seq {m.seq} "
                                        f"!= expected {seq}")
                 cuts.append(codec.decode(m.payload))
-                # scalar rides as a (1,) array (wire arrays are >=1-d)
-                aux += float(np.asarray(m.payload.get("aux", 0.0)).sum())
-            return jnp.asarray(np.stack(cuts)), aux
+                if "aux" in m.payload:
+                    aux += float(np.asarray(m.payload["aux"]).sum())
+            return tuple(cuts), aux
 
-        history: dict = {"train": [], "eval": []}
-        t0 = time.time()
-        t_warm = None       # end of step 0 — everything compiled after it
-        overhead_s = 0.0    # eval/sync/ckpt time, excluded from step cost
-        metrics: dict = {}
+        # Party threads trade sub-millisecond messages; CPython's default
+        # 5 ms GIL switch interval would let one party's pure-Python
+        # stretch stall another's dispatch for a whole quantum.
+        import sys as _sys
+        old_switch = _sys.getswitchinterval()
+        _sys.setswitchinterval(5e-4)
 
-        def scalars(m):
-            return {k: float(v) for k, v in m.items()}
-
+        # ---------------- warmup: compile both sides before the clock
         try:
+            widx = np.zeros(batch_size, np.int32)
+            wlab = np.asarray(labels[widx])
+            for ep in eps:
+                ep.send("warmup", {"idx": widx}, seq=-1)
+            for m in range(M):
+                cuts = []
+                for ep, w in zip(eps, workers):
+                    mm = self._recv_from_owner(ep, w, "warmup_cuts")
+                    cuts.append(codec.decode(mm.payload))
+                lab_m = jnp.asarray(wlab[m * bm:(m + 1) * bm])
+                if sequential:
+                    _, _, cg = trunk_step(trunk_params, jnp.stack(cuts),
+                                          lab_m)
+                else:
+                    cg, _ = cutgrad(trunk_params, tuple(cuts), lab_m,
+                                    denom, inv_micro)
+                    weightgrad(trunk_params, tuple(cuts), lab_m, denom,
+                               inv_micro)
+                zero = np.zeros_like(np.asarray(cg[0]))
+                for ep in eps:
+                    ep.send("warmup_grads", codec.encode(zero), seq=m)
+            trunk_params, trunk_state = trunk_update(
+                trunk_params, trunk_state,
+                jax.tree.map(jnp.zeros_like, trunk_params), 0)
+            for ep, w in zip(eps, workers):
+                self._recv_from_owner(ep, w, "warmup_done")
+
+            # ---------------- the timed training region
+            history: dict = {"train": [], "eval": []}
+            t0 = time.time()
+            t_warm = None     # end of step 0 (steady-state guard band)
+            overhead_s = 0.0  # eval/sync/ckpt time, excluded from step cost
+            metrics: dict = {}
+
+            def sync():
+                self._sync_split_params(workers, eps, trunk_params)
+
             if total_steps > 0:
                 send_fwd(next(gen), 0)
             for t in range(total_steps):
+                if not sequential and t + 1 < total_steps:
+                    # the t+1 forward request leaves FIRST: it overlaps
+                    # the wire and the owners stage (not run) it until
+                    # their step-t update lands — FIFO keeps it exact
+                    send_fwd(next(gen), t + 1)
                 idx_t = inflight.popleft()
-                cut, owner_aux = recv_cuts(t)
-                lab = jnp.asarray(labels[idx_t])
-                metrics, tgrads, cgrads = trunk_step(trunk_params, cut, lab)
-                if owner_aux and "aux" in metrics:
-                    # joint-path parity: heads aux + trunk aux
-                    metrics = {**metrics,
-                               "aux": metrics["aux"] + owner_aux}
-                cg = np.asarray(cgrads)
+                # label staging runs while the cut chunks are on the wire
+                lab_t = np.asarray(labels[idx_t])
+                lab_chunks = [jnp.asarray(lab_t[m * bm:(m + 1) * bm])
+                              for m in range(M)]
                 if sequential:
-                    # synchronous baseline: update, ship grads, wait for
-                    # every owner to finish its step, then request t+1
+                    # synchronous baseline: one whole-batch exchange
+                    # through the fused one-pass trunk program; update
+                    # strictly before the grads leave, wait for every
+                    # owner's step, then request t+1
+                    cuts, owner_aux = recv_chunk(t)
+                    parts, tg, cg = trunk_step(
+                        trunk_params, jnp.stack(cuts), lab_chunks[0])
                     trunk_params, trunk_state = trunk_update(
-                        trunk_params, trunk_state, tgrads, t)
+                        trunk_params, trunk_state, tg, t)
                     for p, ep in enumerate(eps):
-                        ep.send("cut_gradients", codec.encode(cg[p]), seq=t)
+                        ep.send("cut_gradients", codec.encode(cg[p]),
+                                seq=t)
                     for ep, w in zip(eps, workers):
                         self._recv_from_owner(ep, w, "step_done")
                     if t + 1 < total_steps:
                         send_fwd(next(gen), t + 1)
+                    parts_list = [parts]
                 else:
-                    # pipelined: grads + next forward request leave first;
-                    # the owners' bwd(t)+fwd(t+1) overlap our trunk update
-                    for p, ep in enumerate(eps):
-                        ep.send("cut_gradients", codec.encode(cg[p]), seq=t)
-                    if t + 1 < total_steps:
-                        send_fwd(next(gen), t + 1)
+                    # pipelined GPipe: each chunk's cut grads ship the
+                    # moment its cuts arrive; everything batch-wide —
+                    # trunk weight grads, the optimizer update, metric
+                    # folds — runs in the wire's shadow afterwards
+                    owner_aux = 0.0
+                    parts_list = []
+                    cut_cache = []
+                    for m in range(M):
+                        seq = t * M + m
+                        cuts, aux_m = recv_chunk(seq)
+                        owner_aux += aux_m
+                        cg, parts = cutgrad(trunk_params, cuts,
+                                            lab_chunks[m], denom,
+                                            inv_micro)
+                        for p, ep in enumerate(eps):
+                            ep.send("cut_gradients",
+                                    codec.encode(cg[p]), seq=seq)
+                        parts_list.append(parts)
+                        cut_cache.append((cuts, lab_chunks[m]))
+                    tg_acc = None
+                    for cuts, lab_m in cut_cache:
+                        tg = weightgrad(trunk_params, cuts, lab_m,
+                                        denom, inv_micro)
+                        tg_acc = tg if tg_acc is None else \
+                            _tree_add(tg_acc, tg)
                     trunk_params, trunk_state = trunk_update(
-                        trunk_params, trunk_state, tgrads, t)
+                        trunk_params, trunk_state, tg_acc, t)
+                parts_acc = parts_list[0]
+                for parts in parts_list[1:]:
+                    parts_acc = {k: parts_acc[k] + parts[k]
+                                 for k in parts}
+                metrics = dict(parts_acc)
+                if owner_aux and "aux" in metrics:
+                    # joint-path parity: heads aux + trunk aux
+                    metrics = {**metrics,
+                               "aux": metrics["aux"] + owner_aux}
                 if t == 0:
                     t_warm = time.time()
 
                 # ----------- bookkeeping (excluded from step timings)
                 tb = time.time()
-                if epochs is not None:
-                    if (t + 1) % steps_per_epoch == 0:
-                        ep_i = (t + 1) // steps_per_epoch - 1
-                        rec = {"epoch": ep_i, **scalars(metrics)}
-                        history["train"].append(rec)
-                        if len(self._eval_idx):
-                            self._sync_split_params(workers, eps,
-                                                    trunk_params)
-                            history["eval"].append(
-                                {"epoch": ep_i, **self.evaluate()})
-                        if verbose and (ep_i % (log_every or 1) == 0
-                                        or ep_i == epochs - 1):
-                            ev = (history["eval"][-1]
-                                  if history["eval"] else {})
-                            extra = "".join(f" val_{k}={v:.4f}"
-                                            for k, v in ev.items()
-                                            if k != "epoch")
-                            print(f"epoch {ep_i:3d} " + " ".join(
-                                f"{k}={v:.4f}" for k, v in rec.items()
-                                if k != "epoch") + extra +
-                                f" ({time.time() - t0:.1f}s)")
-                        if ckpt_dir and ckpt_every \
-                                and (ep_i + 1) % ckpt_every == 0:
-                            self._sync_split_params(workers, eps,
-                                                    trunk_params)
-                            self.checkpoint(ckpt_dir, ep_i + 1)
-                else:
-                    rec = {"step": t, **scalars(metrics)}
-                    history["train"].append(rec)
-                    if verbose and log_every and (t % log_every == 0
-                                                  or t == steps - 1):
-                        print(f"step {t:5d} " + " ".join(
-                            f"{k}={v:.4f}" for k, v in rec.items()
-                            if k != "step") + f" ({time.time() - t0:.1f}s)")
-                    if ckpt_dir and ckpt_every \
-                            and (t + 1) % ckpt_every == 0:
-                        self._sync_split_params(workers, eps, trunk_params)
-                        self.checkpoint(ckpt_dir, t + 1)
+                self._train_bookkeeping(
+                    t, metrics, history, t0, epochs=epochs, steps=steps,
+                    steps_per_epoch=steps_per_epoch, log_every=log_every,
+                    verbose=verbose, ckpt_dir=ckpt_dir,
+                    ckpt_every=ckpt_every, sync=sync)
                 overhead_s += time.time() - tb
 
             wall_s = time.time() - t0
@@ -522,6 +806,7 @@ class VerticalSession:
             if steps is not None and len(self._eval_idx):
                 history["eval"].append({"step": steps, **self.evaluate()})
         finally:
+            _sys.setswitchinterval(old_switch)
             for ep in eps:
                 ep.send("stop", {})
             for th in threads:
@@ -559,13 +844,16 @@ class VerticalSession:
                       // max(total_steps, 1))
         self.transport_stats = {
             "mode": "split", "schedule": schedule,
+            "microbatches": M,
             "compression": compression or "none", "backend": backend,
             "latency_s": latency_s, "bandwidth_bps": bandwidth_bps,
             "steps": total_steps, "wall_s": wall_s,
-            # per-step cost excludes eval/sync/ckpt bookkeeping ...
+            # per-step cost excludes eval/sync/ckpt bookkeeping (every
+            # compile is pulled out of the timed region by the warmup
+            # handshake) ...
             "step_ms": (1e3 * (wall_s - overhead_s)
                         / max(total_steps, 1)),
-            # ... and, steady-state, the step-0 jit compiles too
+            # ... and, steady-state, the step-0 pipeline fill too
             "steady_step_ms": (1e3 * (t0 + wall_s - t_warm - overhead_s)
                                / (total_steps - 1)
                                if t_warm is not None and total_steps > 1

@@ -9,22 +9,33 @@ session reports about traffic is *measured* from the wire.
 Two backends:
 
   * ``direct``  — in-process handoff.  Payload pytrees move by reference
-    (zero-copy); bytes are still accounted from the array buffers.  This
-    is the fast path for same-process simulation and serving.
+    (zero-copy, *zero host sync*: codecs pass device arrays through
+    untouched, so nothing forces a device->host round-trip per step).
+    This is the fast path for same-process simulation and serving.
   * ``queue``   — a simulated network.  Every payload is serialized to a
-    length-prefixed wire format (``_pack``/``_unpack``), byte counts are
-    taken from the actual blob, and delivery can be delayed by a
+    single preallocated wire frame (``_pack``/``_unpack``), byte counts
+    are taken from the actual blob, and delivery can be delayed by a
     configurable ``latency_s`` plus ``wire_bytes / bandwidth_bps``.
     Channels are thread-safe: owner compute endpoints run on their own
     threads (``federation/parties.OwnerComputeEndpoint``), so pipelined
     schedules overlap owner and scientist compute in real wall-clock.
 
+The wire frame is one contiguous buffer: a first pass sizes the frame,
+the arrays are then copied straight into a per-channel scratch buffer
+(reused across sends — no per-array ``tobytes`` allocations), and the
+receiver unpacks zero-copy ``np.frombuffer`` views into the immutable
+blob.  Delivery deadlines are honored with a hybrid sleep+spin wait
+(``SPIN_WAIT_S``): a plain ``time.sleep`` overshoots by 1-3 ms on a
+shared box, which is the same order as the per-step budget the pipelined
+schedule is trying to protect at LAN latencies.
+
 Cut-payload codecs live here too (``get_codec``): the only bytes that
 cross the boundary are cut activations and cut gradients, so shrinking
 them is the protocol's one compression lever (Secure Forward Aggregation,
 Cai et al. 2022, quantizes the same tensor).  ``fp16`` is a plain
-down-cast; ``int8`` is per-row symmetric quantization through the Pallas
-kernel in ``repro/kernels/quantize``.
+down-cast; ``int8`` is per-row symmetric quantization fused with wire
+packing in one Pallas kernel pass (``repro/kernels/quantize``): the wire
+payload is a single ``(rows, K+4)`` byte frame, values + bitcast scale.
 """
 from __future__ import annotations
 
@@ -38,36 +49,102 @@ from typing import Dict, Optional, Tuple
 import numpy as np
 
 __all__ = ["Message", "Channel", "Endpoint", "channel_pair",
-           "Codec", "get_codec", "CODECS"]
+           "Codec", "get_codec", "CODECS", "SPIN_WAIT_S"]
+
+# Hybrid-wait margin: sleep until this close to a delivery deadline, then
+# spin on the monotonic clock.  ``time.sleep`` alone overshoots by the
+# kernel timer slack (measured 1.5 ms mean / 3 ms p90 here), which would
+# put milliseconds of scheduling noise on every simulated-latency hop.
+SPIN_WAIT_S = 3e-3
+
+
+def _wait_until(deadline: float, spin_s: float = SPIN_WAIT_S) -> None:
+    """Block until ``time.monotonic() >= deadline`` with sub-0.1 ms
+    precision: coarse sleep for the bulk, spin for the last ``spin_s``
+    seconds.  The spin yields the GIL every iteration (``sleep(0)``) —
+    a bare busy-loop would hold it for the interpreter's full 5 ms
+    switch interval and serialize the owner threads against the
+    scientist on small hosts."""
+    while True:
+        rem = deadline - time.monotonic()
+        if rem <= 0.0:
+            return
+        if rem > spin_s:
+            time.sleep(rem - spin_s)
+        else:
+            while time.monotonic() < deadline:
+                time.sleep(0)
+            return
 
 
 # ---------------------------------------------------------------------------
-# Wire format: length-prefixed named arrays
+# Wire format: one preallocated frame of named arrays
 # ---------------------------------------------------------------------------
+#
+# Frame layout:  [u32 n_entries] then per entry
+#   [u16 name_len][name][u16 dtype_len][dtype.name][u8 ndim][i64 dims...]
+#   [i64 nbytes][raw buffer]
+# ``dtype.name`` (not ``.str``) so the ml_dtypes extension types (bfloat16
+# cut activations) round-trip.  The frame is sized in a first pass and the
+# array buffers are copied directly into one scratch bytearray — no
+# per-array ``tobytes`` allocation, no list-of-parts join.
+
+
+def _frame_entries(payload: Dict[str, np.ndarray]):
+    """Normalize payload values and precompute the exact frame size."""
+    entries = []
+    size = 4
+    for name, arr in payload.items():
+        arr = np.ascontiguousarray(np.asarray(arr))
+        nb, dt = name.encode(), arr.dtype.name.encode()
+        size += 2 + len(nb) + 2 + len(dt) + 1 + 8 * arr.ndim + 8 + arr.nbytes
+        entries.append((nb, dt, arr))
+    return entries, size
+
+
+def _pack_into(payload: Dict[str, np.ndarray], buf: bytearray) -> int:
+    """Pack ``{name: array}`` into ``buf`` (grown as needed), returning
+    the number of bytes used.  ``buf`` is reusable scratch: callers
+    snapshot the used prefix before the next send."""
+    entries, size = _frame_entries(payload)
+    if len(buf) < size:
+        buf.extend(b"\0" * (size - len(buf)))
+    struct.pack_into("<I", buf, 0, len(entries))
+    off = 4
+    for nb, dt, arr in entries:
+        struct.pack_into("<H", buf, off, len(nb))
+        off += 2
+        buf[off:off + len(nb)] = nb
+        off += len(nb)
+        struct.pack_into("<H", buf, off, len(dt))
+        off += 2
+        buf[off:off + len(dt)] = dt
+        off += len(dt)
+        struct.pack_into("<B", buf, off, arr.ndim)
+        off += 1
+        struct.pack_into(f"<{arr.ndim}q", buf, off, *arr.shape)
+        off += 8 * arr.ndim
+        struct.pack_into("<q", buf, off, arr.nbytes)
+        off += 8
+        # via a flat uint8 view: the ml_dtypes extension types (bf16 cut
+        # activations) expose no buffer protocol of their own
+        buf[off:off + arr.nbytes] = memoryview(arr.reshape(-1).view(np.uint8))
+        off += arr.nbytes
+    return off
 
 
 def _pack(payload: Dict[str, np.ndarray]) -> bytes:
-    """Serialize ``{name: array}`` to one blob.  Per entry:
-    [u16 name_len][name][u16 dtype_len][dtype.name][u8 ndim][i64 dims...]
-    [i64 nbytes][raw buffer].  ``dtype.name`` (not ``.str``) so the
-    ml_dtypes extension types (bfloat16 cut activations) round-trip."""
-    parts = [struct.pack("<I", len(payload))]
-    for name, arr in payload.items():
-        arr = np.ascontiguousarray(arr)
-        nb, dt = name.encode(), arr.dtype.name.encode()
-        parts.append(struct.pack("<H", len(nb)))
-        parts.append(nb)
-        parts.append(struct.pack("<H", len(dt)))
-        parts.append(dt)
-        parts.append(struct.pack("<B", arr.ndim))
-        parts.append(struct.pack(f"<{arr.ndim}q", *arr.shape))
-        body = arr.tobytes()
-        parts.append(struct.pack("<q", len(body)))
-        parts.append(body)
-    return b"".join(parts)
+    """Serialize ``{name: array}`` to one immutable blob."""
+    buf = bytearray()
+    used = _pack_into(payload, buf)
+    return bytes(memoryview(buf)[:used])
 
 
 def _unpack(blob: bytes) -> Dict[str, np.ndarray]:
+    """Inverse of ``_pack``.  The returned arrays are zero-copy
+    (read-only) views into ``blob`` — the receive buffer is the blob
+    itself, shared for the message's lifetime instead of re-sliced into
+    per-array copies."""
     out: Dict[str, np.ndarray] = {}
     off = 0
     (n,) = struct.unpack_from("<I", blob, off)
@@ -87,8 +164,9 @@ def _unpack(blob: bytes) -> Dict[str, np.ndarray]:
         off += 8 * ndim
         (nbytes,) = struct.unpack_from("<q", blob, off)
         off += 8
-        out[name] = np.frombuffer(
-            blob[off:off + nbytes], dtype=dtype).reshape(shape)
+        count = nbytes // dtype.itemsize if dtype.itemsize else 0
+        out[name] = np.frombuffer(blob, dtype=dtype, count=count,
+                                  offset=off).reshape(shape)
         off += nbytes
     return out
 
@@ -129,13 +207,16 @@ class Channel:
 
     def __init__(self, sender: str, receiver: str, *,
                  serialize: bool = True, latency_s: float = 0.0,
-                 bandwidth_bps: Optional[float] = None):
+                 bandwidth_bps: Optional[float] = None,
+                 spin_s: Optional[float] = None):
         self.sender, self.receiver = sender, receiver
         self.serialize = serialize
         self.latency_s = latency_s
         self.bandwidth_bps = bandwidth_bps
+        self.spin_s = SPIN_WAIT_S if spin_s is None else spin_s
         self._q: "queue.Queue[Message]" = queue.Queue()
         self._lock = threading.Lock()
+        self._sendbuf = bytearray()     # reusable pack scratch
         self.stats: Dict[str, object] = {
             "messages": 0, "payload_bytes": 0, "wire_bytes": 0,
             "by_kind": {}}
@@ -156,8 +237,9 @@ class Channel:
              seq: int = 0) -> Message:
         pb = _payload_nbytes(payload)
         if self.serialize:
-            blob = _pack({k: np.asarray(v) for k, v in payload.items()})
-            wb = len(blob)
+            used = _pack_into(payload, self._sendbuf)
+            blob = bytes(memoryview(self._sendbuf)[:used])
+            wb = used
             payload = {"__blob__": blob}           # only bytes travel
         else:
             wb = pb                                # by-reference handoff
@@ -174,9 +256,7 @@ class Channel:
     def recv(self, timeout: Optional[float] = None) -> Message:
         msg = self._q.get(timeout=timeout)
         if msg.not_before:
-            delay = msg.not_before - time.monotonic()
-            if delay > 0:
-                time.sleep(delay)
+            _wait_until(msg.not_before, self.spin_s)
         if self.serialize:
             msg.payload = _unpack(msg.payload["__blob__"])
         return msg
@@ -230,7 +310,8 @@ class Endpoint:
 
 def channel_pair(a: str, b: str, *, backend: str = "queue",
                  latency_s: float = 0.0,
-                 bandwidth_bps: Optional[float] = None
+                 bandwidth_bps: Optional[float] = None,
+                 spin_s: Optional[float] = None
                  ) -> Tuple[Endpoint, Endpoint]:
     """Build the duplex boundary between parties ``a`` and ``b``.
     Returns ``(endpoint_a, endpoint_b)``."""
@@ -238,9 +319,9 @@ def channel_pair(a: str, b: str, *, backend: str = "queue",
         raise ValueError(f"unknown transport backend {backend!r}")
     ser = backend == "queue"
     ab = Channel(a, b, serialize=ser, latency_s=latency_s,
-                 bandwidth_bps=bandwidth_bps)
+                 bandwidth_bps=bandwidth_bps, spin_s=spin_s)
     ba = Channel(b, a, serialize=ser, latency_s=latency_s,
-                 bandwidth_bps=bandwidth_bps)
+                 bandwidth_bps=bandwidth_bps, spin_s=spin_s)
     return Endpoint(a, b, ab, ba), Endpoint(b, a, ba, ab)
 
 
@@ -254,22 +335,25 @@ class Codec:
     float array to the wire payload dict; ``decode`` inverts it (lossy
     for fp16/int8).  The lossless codec preserves the model's own cut
     dtype on the wire — bf16 LM activations ship as 2 bytes/el, exactly
-    what ``cut_layer_traffic`` accounts."""
+    what ``cut_layer_traffic`` accounts.  Encode/decode keep device
+    arrays as device arrays: on the ``direct`` backend nothing here
+    forces a host round-trip (serialization, when it happens, lives in
+    ``Channel.send``)."""
 
     name = "none"
 
     def encode(self, arr) -> Dict[str, np.ndarray]:
-        return {"x": np.asarray(arr)}
+        return {"x": arr}
 
-    def decode(self, payload: Dict[str, np.ndarray]) -> np.ndarray:
-        return np.asarray(payload["x"])
+    def decode(self, payload: Dict[str, np.ndarray]):
+        return payload["x"]
 
 
 class FP16Codec(Codec):
     name = "fp16"
 
     def encode(self, arr):
-        return {"h": np.asarray(arr).astype(np.float16)}
+        return {"h": arr.astype(np.float16)}
 
     def decode(self, payload):
         return payload["h"].astype(np.float32)
@@ -277,22 +361,28 @@ class FP16Codec(Codec):
 
 class Int8Codec(Codec):
     """Per-row symmetric int8 (scale = absmax/127 over the last axis),
-    computed by the Pallas kernel in ``repro/kernels/quantize``.
-    Decodes to float32 (consumers cast to their compute dtype)."""
+    quantized *and* wire-packed in one Pallas pass
+    (``repro/kernels/quantize.quantize_pack_int8``): the payload is a
+    single ``(rows, K+4)`` uint8 frame — K int8 values plus the
+    little-endian f32 scale bitcast into the trailing 4 bytes of each
+    row.  Decodes to float32 (consumers cast to their compute dtype)."""
 
     name = "int8"
 
     def encode(self, arr):
-        from repro.kernels.quantize import quantize_int8
-        a = np.asarray(arr).astype(np.float32)
+        from repro.kernels.quantize import quantize_pack_int8
+        import jax.numpy as jnp
+        a = jnp.asarray(arr).astype(jnp.float32)
         rows = a.reshape(-1, a.shape[-1])
-        q, scale = quantize_int8(rows)
-        return {"q": np.asarray(q).reshape(a.shape),
-                "s": np.asarray(scale).reshape(a.shape[:-1] + (1,))}
+        packed = quantize_pack_int8(rows)
+        return {"qp": packed.reshape(a.shape[:-1] + (packed.shape[-1],))}
 
     def decode(self, payload):
-        return (payload["q"].astype(np.float32) *
-                payload["s"].astype(np.float32))
+        qp = np.asarray(payload["qp"])
+        k = qp.shape[-1] - 4
+        q = qp[..., :k].view(np.int8)
+        scale = np.ascontiguousarray(qp[..., k:]).view("<f4")
+        return q.astype(np.float32) * scale
 
 
 CODECS = {c.name: c for c in (Codec, FP16Codec, Int8Codec)}

@@ -1,3 +1,6 @@
-from repro.kernels.quantize.ops import quantize_int8  # noqa: F401
+from repro.kernels.quantize.ops import (quantize_int8,  # noqa: F401
+                                        quantize_pack_int8)
 from repro.kernels.quantize.ref import (dequantize_int8_ref,  # noqa: F401
-                                        quantize_int8_ref)
+                                        quantize_int8_ref,
+                                        quantize_pack_int8_ref,
+                                        unpack_int8_ref)

@@ -25,6 +25,23 @@ def _quantize_kernel(x_ref, q_ref, s_ref):
     s_ref[...] = scale.astype(jnp.float32)
 
 
+def _quantize_pack_kernel(x_ref, out_ref):
+    """Quantize a (bm, K) row block AND lay it out wire-ready in the same
+    VMEM pass: ``out[:, :K]`` are the int8 values bitcast to uint8,
+    ``out[:, K:K+4]`` are the per-row f32 scales bitcast to their four
+    (little-endian) bytes.  The float activation never returns to HBM and
+    no second packing pass touches the quantized values."""
+    x = x_ref[...].astype(jnp.float32)                    # (bm, K)
+    absmax = jnp.max(jnp.abs(x), axis=-1, keepdims=True)  # (bm, 1)
+    scale = jnp.maximum(absmax, 1e-12) / 127.0
+    q = jnp.clip(jnp.round(x / scale), -127.0, 127.0).astype(jnp.int8)
+    k = q.shape[-1]
+    out_ref[:, :k] = jax.lax.bitcast_convert_type(q, jnp.uint8)
+    sbytes = jax.lax.bitcast_convert_type(
+        scale.astype(jnp.float32), jnp.uint8)              # (bm, 1, 4)
+    out_ref[:, k:] = sbytes.reshape(sbytes.shape[0], 4)
+
+
 def quantize_int8_raw(x, *, block_m: int = 256, interpret: bool = False):
     """x: (T, K) float.  Returns (values int8 (T, K), scales f32 (T, 1))
     with per-row symmetric scaling: ``x ~= values * scales``."""
@@ -46,3 +63,28 @@ def quantize_int8_raw(x, *, block_m: int = 256, interpret: bool = False):
         interpret=interpret,
     )(x)
     return q[:T], s[:T]
+
+
+def quantize_pack_int8_raw(x, *, block_m: int = 256,
+                           interpret: bool = False):
+    """x: (T, K) float.  Returns the wire frame: a uint8 (T, K+4) array
+    whose first K columns are the per-row symmetric int8 values and whose
+    trailing 4 columns are the little-endian bytes of the f32 row scale —
+    quantization and wire packing fused into one pass (the transport's
+    ``int8`` codec ships this buffer as-is)."""
+    T, K = x.shape
+    bm = min(block_m, T)
+    nm = -(-T // bm)
+    if nm * bm - T:
+        x = jnp.pad(x, ((0, nm * bm - T), (0, 0)))
+    out = pl.pallas_call(
+        _quantize_pack_kernel,
+        grid=(nm,),
+        in_specs=[pl.BlockSpec((bm, K), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((bm, K + 4), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((nm * bm, K + 4), jnp.uint8),
+        compiler_params=compiler_params(
+            dimension_semantics=("parallel",)),
+        interpret=interpret,
+    )(x)
+    return out[:T]

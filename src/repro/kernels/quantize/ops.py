@@ -9,7 +9,8 @@ import functools
 
 import jax
 
-from repro.kernels.quantize.kernel import quantize_int8_raw
+from repro.kernels.quantize.kernel import (quantize_int8_raw,
+                                           quantize_pack_int8_raw)
 
 
 @functools.partial(jax.jit, static_argnames=("block_m", "interpret"))
@@ -22,3 +23,17 @@ def quantize_int8(x, *, block_m: int = 256, interpret=None):
     if interpret is None:
         interpret = jax.default_backend() != "tpu"
     return _quantize_jit(x, block_m=block_m, interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("block_m", "interpret"))
+def _quantize_pack_jit(x, *, block_m: int, interpret: bool):
+    return quantize_pack_int8_raw(x, block_m=block_m, interpret=interpret)
+
+
+def quantize_pack_int8(x, *, block_m: int = 256, interpret=None):
+    """x: (T, K) float.  Returns the uint8 (T, K+4) wire frame: int8
+    values + bitcast little-endian f32 row scale, fused in one kernel
+    pass (no separate pack step touches the quantized buffer)."""
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    return _quantize_pack_jit(x, block_m=block_m, interpret=interpret)

@@ -1,0 +1,85 @@
+"""The bench regression gate's comparator (benchmarks/check.py): the
+tolerance model that lets `make bench-check` track BENCH_*.json perf
+baselines without flaking on a noisy box."""
+import json
+import os
+import sys
+
+import pytest
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+from benchmarks.check import TRACKED, check, compare  # noqa: E402
+
+
+BASE = {
+    "config": {"n": 1500},
+    "joint_step_ms": 2.0,
+    "split_pipelined_step_ms": 20.0,
+    "pipeline_speedup": 2.2,
+    "pipelined_microbatches": 1,
+    "pipeline_sweep": {"8.0": {"1": 20.0}},
+    "compression": {
+        "int8": {"cut_payload_bytes_per_step": 17408,
+                 "val_accuracy": 0.45,
+                 "compression_ratio": 3.76}},
+}
+
+
+def test_within_tolerance_passes():
+    fresh = json.loads(json.dumps(BASE))
+    fresh["joint_step_ms"] = 4.5            # 2.25x — noisy-box ratio ok
+    fresh["compression"]["int8"]["val_accuracy"] = 0.41
+    assert compare(BASE, fresh) == []
+
+
+def test_timing_regression_fails():
+    fresh = json.loads(json.dumps(BASE))
+    fresh["split_pipelined_step_ms"] = 60.0  # 3x — compile in hot loop
+    fails = compare(BASE, fresh)
+    assert len(fails) == 1 and "split_pipelined_step_ms" in fails[0]
+
+
+def test_byte_counts_are_exact():
+    fresh = json.loads(json.dumps(BASE))
+    fresh["compression"]["int8"]["cut_payload_bytes_per_step"] += 4
+    assert any("cut_payload_bytes_per_step" in f
+               for f in compare(BASE, fresh))
+
+
+def test_missing_metric_fails_and_skips_are_skipped():
+    fresh = json.loads(json.dumps(BASE))
+    del fresh["pipeline_speedup"]
+    fresh["pipelined_microbatches"] = 4      # platform pick: ignored
+    fresh["config"] = {"n": 9}               # config subtree: ignored
+    fresh["pipeline_sweep"] = {}             # sweep subtree: ignored
+    fails = compare(BASE, fresh)
+    assert len(fails) == 1 and "pipeline_speedup" in fails[0]
+
+
+def test_check_gates_on_committed_baselines(tmp_path):
+    """End-to-end on synthetic files: PASS when fresh matches, count
+    failures when a tracked metric regresses or a file is missing."""
+    repo, fresh = tmp_path / "repo", tmp_path / "fresh"
+    repo.mkdir(), fresh.mkdir()
+    fname = next(iter(TRACKED))
+    (repo / fname).write_text(json.dumps(BASE))
+    (fresh / fname).write_text(json.dumps(BASE))
+    assert check(str(repo), str(fresh)) == 0
+    bad = json.loads(json.dumps(BASE))
+    bad["split_pipelined_step_ms"] = 500.0
+    (fresh / fname).write_text(json.dumps(bad))
+    assert check(str(repo), str(fresh)) == 1
+
+
+def test_committed_baselines_parse_against_themselves():
+    """The real committed BENCH files pass their own gate (sanity that
+    the tolerance rules cover every key they contain)."""
+    root = os.path.join(os.path.dirname(__file__), "..")
+    for fname in TRACKED:
+        path = os.path.join(root, fname)
+        if not os.path.exists(path):
+            pytest.skip(f"{fname} not committed")
+        with open(path) as f:
+            d = json.load(f)
+        assert compare(d, d, fname) == []

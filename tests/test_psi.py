@@ -102,3 +102,39 @@ def test_psi_bloom_compression_smaller_than_raw():
 def test_psi_2048_group_roundtrip():
     inter, _ = psi_intersect(["a", "b", "c"], ["b", "c", "d"])
     assert sorted(inter) == ["b", "c"]
+
+
+def test_short_and_full_exponents_agree():
+    """Short-exponent DH (the hot-loop lever) computes the same
+    intersection as full-width exponents."""
+    from repro.core.psi import psi_intersect
+    xs = [f"id-{i}" for i in range(40)]
+    ys = [f"id-{i + 20}" for i in range(40)]
+    short, _ = psi_intersect(xs, ys, group="modp512")
+    full, _ = psi_intersect(xs, ys, group="modp512", exp_bits=None)
+    assert short == full == [f"id-{i + 20}" for i in range(20)]
+
+
+def test_client_blind_is_memoized_and_reusable_across_owners():
+    """One client -> many owners: the blinded upload is computed once
+    and every owner round still yields the right intersection."""
+    from repro.core.psi import PSIClient, PSIServer
+    xs = [f"id-{i}" for i in range(30)]
+    client = PSIClient(xs, "modp512")
+    b1 = client.blind()
+    assert client.blind() is b1              # memoized, not re-blinded
+    for shift in (5, 10):
+        ys = [f"id-{i + shift}" for i in range(30)]
+        server = PSIServer(ys, group="modp512")
+        inter = client.intersect(*server.respond(b1))
+        assert inter == [f"id-{i}" for i in range(shift, 30)]
+
+
+def test_server_bloom_cached_across_rounds():
+    from repro.core.psi import PSIClient, PSIServer
+    ys = [f"id-{i}" for i in range(25)]
+    server = PSIServer(ys, group="modp512")
+    c1 = PSIClient([f"id-{i}" for i in range(10)], "modp512")
+    _, bf1 = server.respond(c1.blind())
+    _, bf2 = server.respond(c1.blind())
+    assert bf1 is bf2                        # built once per session

@@ -331,3 +331,147 @@ def test_serving_through_transport_measures_cut_bytes():
     # one wave: prefill ships P cut slices, then one per decode step
     assert st_["waves"] == 1
     assert st_["cut_messages"] == cfg.split.n_owners + (3 - 1)
+
+
+# ---------------------------------------------------------------------------
+# microbatch pipelining (GPipe): bit-for-bit vs the microbatched oracle
+# ---------------------------------------------------------------------------
+
+
+@given(st.sampled_from([2, 4]), st.integers(0, 3))
+@settings(max_examples=3, deadline=None)
+def test_microbatched_split_matches_microbatched_oracle(micro, seed):
+    """fit(mode="split", microbatches=M) — M GPipe cut exchanges in
+    flight per channel — reproduces the microbatched joint oracle
+    (fit(mode="joint", microbatches=M)) bit-for-bit: same per-chunk
+    programs, grads accumulated in chunk order at step-start params,
+    one update per party per step (the ISSUE's acceptance bar)."""
+    oracle = _mnist_session(320)
+    h_o = oracle.fit(epochs=1, batch_size=64, eval_frac=0.1,
+                     verbose=False, microbatches=micro,
+                     shuffle_seed=seed)
+    split = _mnist_session(320)
+    h_s = split.fit(epochs=1, batch_size=64, eval_frac=0.1,
+                    verbose=False, mode="split", schedule="pipelined",
+                    microbatches=micro, shuffle_seed=seed)
+    assert _params_equal(oracle.params, split.params), \
+        f"microbatched split diverged from the oracle (M={micro})"
+    assert h_s["final"]["loss"] == h_o["final"]["loss"]
+    assert h_s["final"]["accuracy"] == h_o["final"]["accuracy"]
+    # M chunks per step per direction on the wire
+    steps = split.transport_stats["steps"]
+    for per in split.transport_stats["per_owner"].values():
+        # head_fwd + warmup round + M cut/grad chunks per step
+        assert per["cut_payload_bytes"] > 0
+    assert split.transport_stats["microbatches"] == micro
+
+
+def test_microbatched_oracle_tracks_fused_joint():
+    """GPipe chunk accumulation is the same math as the one-shot batch
+    step — different rounding (chunked reductions), tiny param drift."""
+    fused = _mnist_session(320)
+    fused.fit(epochs=1, batch_size=64, verbose=False)
+    oracle = _mnist_session(320)
+    oracle.fit(epochs=1, batch_size=64, verbose=False, microbatches=4)
+    diffs = [np.abs(np.asarray(a) - np.asarray(b)).max()
+             for a, b in zip(jax.tree.leaves(fused.params),
+                             jax.tree.leaves(oracle.params))]
+    assert 0 < max(diffs) < 1e-4
+
+
+def test_microbatch_validation():
+    session = _mnist_session(320)
+    with pytest.raises(ValueError, match="divide"):
+        session.fit(epochs=1, batch_size=64, microbatches=3,
+                    verbose=False)
+    with pytest.raises(ValueError, match="pipelined"):
+        session.fit(epochs=1, batch_size=64, mode="split",
+                    schedule="sequential", microbatches=2, verbose=False)
+    with pytest.raises(ValueError, match="microbatches"):
+        session.fit(epochs=1, batch_size=64, microbatches=0,
+                    verbose=False)
+
+
+def test_int8_microbatched_split_trains():
+    """Compression composes with microbatch pipelining: the codec sees
+    per-chunk payloads and the run still converges sanely."""
+    s = _mnist_session(320)
+    h = s.fit(epochs=1, batch_size=64, verbose=False, mode="split",
+              microbatches=2, compression="int8")
+    assert np.isfinite(h["final"]["loss"])
+    ratio = (s.cut_traffic(64)["total_per_step_bytes"]
+             / s.transport_stats["total_payload_bytes_per_step"])
+    assert ratio >= 3.0
+
+
+# ---------------------------------------------------------------------------
+# transport error paths
+# ---------------------------------------------------------------------------
+
+
+def test_bf16_payload_round_trips_over_queue_backend():
+    """LM cut tensors are bf16 — the queue backend's wire frame must
+    preserve the extension dtype end to end, payload-accounted at
+    2 bytes/el."""
+    import ml_dtypes
+    a, b = transport.channel_pair("sci", "owner", backend="queue")
+    x = RNG.normal(size=(6, 5, 8)).astype(ml_dtypes.bfloat16)
+    a.send("cut_activations", {"x": x}, seq=3)
+    m = b.recv()
+    assert m.payload["x"].dtype == x.dtype
+    assert m.payload_bytes == x.size * 2
+    np.testing.assert_array_equal(m.payload["x"].astype(np.float32),
+                                  x.astype(np.float32))
+
+
+def test_protocol_desync_raises(monkeypatch):
+    """An owner that ships a wrong-sequence cut chunk must fail the fit
+    loudly (protocol desync), not silently misalign gradients."""
+    from repro.federation.parties import OwnerComputeEndpoint
+
+    real_ship = OwnerComputeEndpoint._ship_cut
+
+    def corrupt(self, out, seq, kind="cut_activations"):
+        if kind != "cut_activations":
+            return real_ship(self, out, seq, kind)
+        return real_ship(self, out, seq + 1 if seq >= 1 else seq)
+
+    monkeypatch.setattr(OwnerComputeEndpoint, "_ship_cut", corrupt)
+    session = _mnist_session(320)
+    with pytest.raises(RuntimeError, match="desync"):
+        session.fit(epochs=1, batch_size=64, verbose=False, mode="split")
+
+
+def test_owner_thread_exception_surfaces(monkeypatch):
+    """A crash on an owner's thread surfaces as the fit's RuntimeError
+    (with the owner named), via the recv poll — not a 120 s timeout."""
+    from repro.federation.parties import OwnerComputeEndpoint
+
+    def boom(self, step, first_out=None):
+        raise ValueError("owner-side kaboom")
+
+    monkeypatch.setattr(OwnerComputeEndpoint, "_run_fwd", boom)
+    session = _mnist_session(320)
+    t0 = time.monotonic()
+    with pytest.raises(RuntimeError, match="owner worker"):
+        session.fit(epochs=1, batch_size=64, verbose=False, mode="split")
+    assert time.monotonic() - t0 < 60.0
+
+
+def test_quantize_pack_kernel_matches_ref():
+    """The fused quantize+pack kernel emits the exact wire frame of the
+    reference (int8 values bit-exact; packed f32 scales within float
+    tolerance of the jnp oracle)."""
+    from repro.kernels.quantize import (quantize_int8_ref,
+                                        quantize_pack_int8,
+                                        unpack_int8_ref)
+    for shape in ((8, 64), (130, 64), (1, 128)):
+        x = RNG.normal(size=shape).astype(np.float32) * 3.0
+        packed = np.asarray(quantize_pack_int8(x, interpret=True))
+        assert packed.shape == (shape[0], shape[1] + 4)
+        assert packed.dtype == np.uint8
+        q, s = unpack_int8_ref(packed)
+        qr, sr = quantize_int8_ref(x)
+        np.testing.assert_array_equal(q, np.asarray(qr))
+        np.testing.assert_allclose(s[:, 0], np.asarray(sr)[:, 0],
+                                   rtol=1e-6)
