@@ -2,7 +2,7 @@
 PY := python
 export PYTHONPATH := src
 
-.PHONY: verify test fast quickstart bench bench-check
+.PHONY: verify test fast quickstart bench bench-check docs-check
 
 verify:
 	$(PY) -m pytest -x -q
@@ -24,3 +24,8 @@ bench:
 # BENCH_*.json baselines, with per-metric tolerances (benchmarks/check.py)
 bench-check:
 	$(PY) -m benchmarks.run --check
+
+# Executable-documentation gate: runs every fenced python snippet in
+# docs/*.md + README.md + listed module docstrings + the examples
+docs-check:
+	$(PY) tools/docs_check.py

@@ -33,14 +33,16 @@ def main() -> None:
                             split_overhead, transport_bench)
 
     if args.check:
-        # full-size runs (the baselines were measured at full size),
-        # written to a scratch dir so baselines are never clobbered
+        # gated sections re-measured at the size the committed baseline
+        # used (transport: full-size; psi: the CI-sized gate section —
+        # its 1e6-ID trajectory is informational/skipped), written to a
+        # scratch dir so baselines are never clobbered
         with tempfile.TemporaryDirectory() as tmp:
             print("name,us_per_call,derived")
             for row in transport_bench.run(
                     out=os.path.join(tmp, "BENCH_transport.json")):
                 print(",".join(str(x) for x in row))
-            for row in psi_scaling.run(
+            for row in psi_scaling.run_check(
                     out=os.path.join(tmp, "BENCH_psi.json")):
                 print(",".join(str(x) for x in row))
             if check.check(repo_root=".", fresh_dir=tmp):
@@ -48,7 +50,8 @@ def main() -> None:
         return
 
     suites = {
-        "psi_scaling": psi_scaling.run,
+        "psi_scaling": (psi_scaling.run_fast if args.fast
+                        else psi_scaling.run),
         "cut_comm": cut_comm.run,
         "kernels": kernels_bench.run,
         "split_overhead": split_overhead.run,

@@ -3,7 +3,12 @@ accuracy and cut-layer traffic as the number of data owners grows
 2 -> 4 -> 7 -> 14 (divisors of 784 features).
 
     PYTHONPATH=src python examples/multihead_scaling.py
+    PYTHONPATH=src python examples/multihead_scaling.py --fast  # CI-sized
+
+(``--fast`` is what ``make docs-check`` runs.)
 """
+import argparse
+
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -16,7 +21,7 @@ from repro.data import make_mnist_like
 from repro.optim import multi_segment, sgd
 
 
-def train_eval(n_owners, X, y, epochs=6):
+def train_eval(n_owners, X, y, epochs=6, batch=128):
     cfg = MLPSplitConfig(split=SplitConfig(
         n_owners=n_owners, combine="concat", cut_dim=64,
         owner_lr=0.01, scientist_lr=0.1))
@@ -31,8 +36,8 @@ def train_eval(n_owners, X, y, epochs=6):
     rng = np.random.default_rng(0)
     for ep in range(epochs):
         order = rng.permutation(ntr)
-        for s in range(0, ntr - 128, 128):
-            idx = order[s:s + 128]
+        for s in range(0, ntr - batch, batch):
+            idx = order[s:s + batch]
             b = {"x_slices": jnp.asarray(xs[:, idx]),
                  "labels": jnp.asarray(y[idx])}
             params, state, _ = step(params, state, b, ep)
@@ -42,13 +47,20 @@ def train_eval(n_owners, X, y, epochs=6):
     return float(vm["accuracy"])
 
 
-def main():
-    X, y = make_mnist_like(3000, seed=0)
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fast", action="store_true",
+                    help="CI-sized run (fewer samples/epochs/owner "
+                         "counts)")
+    args = ap.parse_args(argv)
+    n, epochs, batch = (600, 2, 64) if args.fast else (3000, 6, 128)
+    owner_counts = (2, 4) if args.fast else (2, 4, 7, 14)
+    X, y = make_mnist_like(n, seed=0)
     print(f"{'owners':>7} {'feat/owner':>11} {'val_acc':>8} "
           f"{'cut KiB/step':>13}")
-    for p in (2, 4, 7, 14):
-        acc = train_eval(p, X, y)
-        t = cut_layer_traffic(p, 128, 1, 64, 4)
+    for p in owner_counts:
+        acc = train_eval(p, X, y, epochs=epochs, batch=batch)
+        t = cut_layer_traffic(p, batch, 1, 64, 4)
         print(f"{p:7d} {784 // p:11d} {acc:8.3f} "
               f"{t['total_per_step_bytes'] / 1024:13.1f}")
     print("\ncut traffic grows linearly with owners; accuracy degrades "

@@ -1,7 +1,25 @@
 # The paper's primary contribution: multi-headed SplitNN + PSI entity
 # resolution, as a composable JAX system.
-from repro.core.splitnn import (MLPSplitNN, make_split_train_step,  # noqa
-                                cut_layer_traffic, train_state_init)
-from repro.core.psi import psi_intersect, PSIClient, PSIServer  # noqa: F401
-from repro.core.bloom import BloomFilter  # noqa: F401
+#
+# The SplitNN surface is lazily re-exported (PEP 562): importing the PSI
+# stack (``repro.core.psi`` / ``bloom`` / ``modexp`` / ``resolution``)
+# must NOT pull in jax — entity resolution runs in light parent and
+# worker processes (benchmarks, ModexpPool workers) where a ~300 MB XLA
+# image would dominate the measured footprint and make forking unsafe.
+from repro.core.psi import psi_intersect, PSIClient, PSIServer  # noqa
+from repro.core.bloom import BloomFilter, ShardedBloom  # noqa: F401
 from repro.core.resolution import VerticalDataset, resolve  # noqa: F401
+
+_SPLITNN = ("MLPSplitNN", "make_split_train_step", "cut_layer_traffic",
+            "train_state_init")
+
+
+def __getattr__(name):
+    if name in _SPLITNN:
+        from repro.core import splitnn
+        return getattr(splitnn, name)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
+
+
+def __dir__():
+    return sorted(list(globals()) + list(_SPLITNN))

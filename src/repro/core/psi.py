@@ -1,52 +1,71 @@
-"""Diffie–Hellman Private Set Intersection with Bloom-filter compression.
+"""Diffie–Hellman Private Set Intersection, streamed and parallel.
 
-The protocol of Angelou et al. 2020 (the PSI library PyVertical uses),
-re-implemented over the 2048-bit MODP group (RFC 3526 §3):
+Both parties hash into the subgroup QR_p of quadratic residues of a
+safe-prime MODP group (p = 2q + 1, RFC 3526 §3 for the 2048-bit group)
+via H(x) = sha256^*(x)^2 mod p.  The client (the data scientist) holds
+X and secret α; a server (a data owner) holds Y and secret β.  Two
+protocol variants share the same first two legs:
 
-  * safe prime p = 2q + 1; all elements live in the subgroup QR_p of
-    quadratic residues (prime order q), via H(x) = sha256^*(x)^2 mod p.
-  * client (the data scientist) holds X, secret α; server (a data owner)
-    holds Y, secret β.
-  * client -> server:  A_i = H(x_i)^α                (blinded)
-  * server -> client:  B_i = A_i^β = H(x_i)^{αβ}     (double-blinded, ordered)
-                       BF  = BloomFilter{ H(y_j)^β } (compressed server set)
-  * client: H(x_i)^β = B_i^{α^{-1} mod q}; x_i in the intersection iff
-    H(x_i)^β ∈ BF.
+  * client -> server:  A_i = H(x_i)^α                (blinded, chunked)
+  * server -> client:  B_i = A_i^β = H(x_i)^{αβ}     (double-blinded,
+                       ordered, chunked)
 
-Only the client learns the intersection; the server learns only |X|.
-False positives are bounded by the Bloom parameters (default 1e-9 — the
-asymmetric regime of the paper: small client set, large compressed server
-response).
+``mode="noinv"`` (default) — classic ECDH-PSI, compared in the
+*double-blinded domain*: the server also streams its own blinded set
+{ H(y_j)^β } (deduplicated and secret-shuffled, so Y's row order and
+multiplicities stay private), the client lifts it with its short α to
+T_j = H(y_j)^{αβ} and matches { B_i } against { T_j } exactly
+(vectorized 64-bit prefilter + full-width confirm).  No modular inverse
+exists anywhere, so **every leg of every round is a short
+exponentiation**, and there are no false positives.  Download cost: the
+server's set crosses uncompressed (nb bytes/element).
 
-Hot-loop engineering (the per-item cost is one 2048-bit modexp per
-protocol leg, so the batch structure is where the time goes):
+``mode="bloom"`` — Angelou et al. 2020 (the PSI library PyVertical
+ships): the server's set crosses as a
+:class:`~repro.core.bloom.ShardedBloom` over { H(y_j)^β } (~12x
+compressed, false positives bounded by ``fp_rate``), and the client
+recovers H(x_i)^β = B_i^{α^{-1} mod q} to probe it.  The inverse of a
+short exponent is full-width, so exactly one client leg per session
+must pay full width — this engine puts it on the **blind** leg (sample
+short γ, blind with α = γ^{-1} mod q): the blinded set is memoized and
+reused verbatim against every owner, so the full-width leg is paid once
+per session and the per-owner hot loop stays short.
 
-  * **Short exponents** — α and β are sampled as 256-bit exponents
-    (short-exponent Diffie–Hellman; secure under the discrete-log
-    short-exponent assumption, the standard practice RFC 7919 §5.2
-    codifies).  A modexp costs one squaring per exponent *bit*, so the
-    blind / double-blind / Bloom legs drop ~8x in a 2048-bit group.
-    The client's unblinding exponent α^{-1} mod q is full-width
-    regardless — it dominates the remaining client time.
-  * **Hash hoisting** — ``H(x_i)`` over a party's set is computed once
-    and cached on the object, not once per round: the scientist's set is
-    re-used verbatim against every owner.
-  * **Blinded-set reuse** — ``blind()`` memoizes.  A client whose secret
-    is per-session can upload the SAME blinded set to every owner
-    (``VerticalSession.resolve`` does), amortizing the whole client leg
-    across owners.  True fixed-base windowed precomputation does not
-    apply here — every exponentiation has a fresh base ``H(x_i)`` — so
-    shared-exponent + caching is the batching lever that actually
-    exists.
+Either way only the client learns the intersection; the server learns
+only |X|.
+
+Scaling engineering — the per-item cost is one modexp per protocol leg,
+so the engine is built around the batch structure
+(:mod:`repro.core.modexp` supplies the gmpy2-or-pure-Python backend, the
+packed big-int buffers, and the worker pool):
+
+  * **Streaming chunked rounds** — ``psi_round`` pipelines
+    blind -> exchange -> match in ``chunk_size`` chunks with bounded
+    lookahead (the transport layer's microbatch idiom): a million-ID
+    round never materializes one giant batch of boxed ints.  At-rest
+    data is packed bytes (``nb`` bytes/element); big-int objects exist
+    only inside the in-flight chunks.
+  * **Worker-pool modexp** — every chunk kernel (hash+blind fused,
+    double-blind, lift/unblind) can run on ``ModexpPool`` workers while
+    the parent streams Bloom adds / membership matches.
+    ``parallelism=0`` runs the identical kernels in-process: the
+    parallel engine is bit-identical to the serial path by construction
+    (property-tested).
+  * **Short exponents per group** — ``SHORT_BITS`` (RFC 7919 §5.2
+    2x-security-level rule; a modexp costs one squaring per exponent
+    *bit*).
+  * **Sharded Bloom intersection** (bloom mode) — per-shard frames
+    bound message sizes, shards OR-merge for parallel builds, and
+    membership probes are vectorized per chunk.
 """
 from __future__ import annotations
 
-import hashlib
 import secrets
-from dataclasses import dataclass, field
-from typing import List, Optional, Sequence
+from typing import Callable, Iterator, List, Optional, Sequence, Tuple
 
-from repro.core.bloom import BloomFilter
+from repro.core.bloom import ShardedBloom
+from repro.core.modexp import (ModexpPool, hash_to_group as _hash_to_group,
+                               hashpow_chunk, pow_chunk)
 
 # RFC 3526, 2048-bit MODP group: p is a safe prime (p = 2q + 1).
 P_HEX = (
@@ -74,9 +93,42 @@ GROUPS = {
     "modp512": (P512, (P512 - 1) // 2, 64),
 }
 
-# Short-exponent width (bits).  112-bit classical security needs ~224-bit
-# exponents (twice the security level); 256 leaves margin.
+# Short-exponent width (bits), per group.  The rule is twice the group's
+# classical security level (RFC 7919 §5.2): modp2048 offers ~112 bits, so
+# 256-bit exponents leave margin; the 512-bit toy group offers at most
+# ~60 bits against NFS, so 128-bit exponents already exceed the 2x rule —
+# wider ones would just burn squarings a demo group can't justify.
 SHORT_EXP_BITS = 256
+SHORT_BITS = {"modp2048": 256, "modp512": 128}
+
+#: sentinel — "the group's own short-exponent width"
+AUTO = "auto"
+
+
+def _resolve_exp_bits(exp_bits, group: str) -> Optional[int]:
+    return SHORT_BITS[group] if exp_bits == AUTO else exp_bits
+
+#: streaming granularity — elements per pipeline chunk
+DEFAULT_CHUNK = 4096
+
+#: protocol variants (see module docstring):
+#:   "noinv" — classic ECDH-PSI: compare in the double-blinded domain.
+#:             Every leg is a short exponentiation (no modular inverse
+#:             anywhere), intersections are exact (no Bloom false
+#:             positives), but the server's response carries its own
+#:             blinded set uncompressed (~2x the download of "bloom").
+#:   "bloom" — Angelou et al. (the library PyVertical ships): the server
+#:             set crosses the wire as a sharded Bloom filter (~12x
+#:             compressed), which forces the client to unblind via
+#:             α^{-1} — one full-width-exponent leg per session.
+DEFAULT_MODE = "noinv"
+
+
+def hash_to_group(item: bytes, prime: int = PRIME, nbytes: int = 256) -> int:
+    """H(x) = (sha256-derived integer mod p)^2 — lands in QR_p (order q).
+    (Implementation lives in :mod:`repro.core.modexp` so fork workers can
+    fuse hashing with the blind exponentiation.)"""
+    return _hash_to_group(item, prime, nbytes)
 
 
 def _sample_exponent(q: int, exp_bits: Optional[int] = SHORT_EXP_BITS) -> int:
@@ -88,111 +140,379 @@ def _sample_exponent(q: int, exp_bits: Optional[int] = SHORT_EXP_BITS) -> int:
     return secrets.randbits(exp_bits - 1) | (1 << (exp_bits - 1))
 
 
-def hash_to_group(item: bytes, prime: int = PRIME, nbytes: int = 256) -> int:
-    """H(x) = (sha256-derived integer mod p)^2 — lands in QR_p (order q)."""
-    h = b""
-    ctr = 0
-    while len(h) < nbytes + 16:  # modulus size + slack for uniformity
-        h += hashlib.sha256(item + ctr.to_bytes(4, "big")).digest()
-        ctr += 1
-    v = int.from_bytes(h, "big") % prime
-    return pow(v, 2, prime)
-
-
 def _enc(x: int, nbytes: int = 256) -> bytes:
     return x.to_bytes(nbytes, "big")
 
 
-@dataclass
+def _chunk_slices(total: int, size: int) -> Iterator[Tuple[int, int]]:
+    for i in range(0, total, size):
+        yield i, min(i + size, total)
+
+
 class PSIClient:
     """The data scientist's side.  One client object per session: its
-    hashed and blinded sets are computed once and reused across every
-    owner round (the secret is per-session, so re-blinding per owner
-    would buy nothing but modexps)."""
+    blinded set is computed once (packed) and reused across every owner
+    round (the secret is per-session, so re-blinding per owner would buy
+    nothing but modexps).
 
-    items: Sequence[str]
-    group: str = "modp2048"
-    exp_bits: Optional[int] = SHORT_EXP_BITS
-    _alpha: int = field(default=0, repr=False)
+    Exponent orientation depends on the protocol mode:
 
-    def __post_init__(self):
-        self._p, self._q, self._nb = GROUPS[self.group]
-        self._alpha = _sample_exponent(self._q, self.exp_bits)
-        # full-width unblinding exponent, computed once per session
-        self._alpha_inv = pow(self._alpha, -1, self._q)
-        self._hashed: Optional[List[int]] = None
+      * ``noinv`` — α itself is short; no inverse is ever needed (the
+        comparison happens in the double-blinded domain), so every leg
+        of every round is a short exponentiation.
+      * ``bloom`` — the short secret is the **unblind** exponent γ; the
+        blind exponent is α = γ^{-1} mod q (full-width, paid once per
+        session inside the memoized ``blind_packed``).  Every per-owner
+        leg the client runs afterwards is short."""
+
+    def __init__(self, items: Sequence[str], group: str = "modp2048",
+                 exp_bits=AUTO, mode: str = DEFAULT_MODE):
+        if mode not in ("noinv", "bloom"):
+            raise ValueError(f"unknown PSI mode {mode!r}")
+        self.items = items
+        self.group = group
+        self.mode = mode
+        self.exp_bits = exp_bits = _resolve_exp_bits(exp_bits, group)
+        self._p, self._q, self._nb = GROUPS[group]
+        if mode == "bloom":
+            # γ short; α = γ^{-1}: the full-width leg lands on the
+            # memoized blind, the per-round unblind stays short
+            self._unblind_exp = _sample_exponent(self._q, exp_bits)
+            self._blind_exp = pow(self._unblind_exp, -1, self._q)
+        else:
+            self._blind_exp = _sample_exponent(self._q, exp_bits)
+            self._unblind_exp = None            # lazily inverted if the
+            #                                     bloom-compat surface asks
+        self._blinded_packed: Optional[bytes] = None
         self._blinded: Optional[List[int]] = None
 
+    # -- blinding ----------------------------------------------------------
+    def blind_packed(self, pool: Optional[ModexpPool] = None,
+                     chunk_size: int = DEFAULT_CHUNK) -> bytes:
+        """The packed blinded set A_i = H(x_i)^α — computed once per
+        session (hash fused with the exponentiation in the chunk kernel),
+        then reused against every owner."""
+        if self._blinded_packed is None:
+            pool = pool or ModexpPool(0)
+            items, p, nb, a = self.items, self._p, self._nb, self._blind_exp
+            parts = pool.imap(
+                hashpow_chunk,
+                ((list(items[lo:hi]), a, p, nb)
+                 for lo, hi in _chunk_slices(len(items), chunk_size)))
+            self._blinded_packed = b"".join(parts)
+        return self._blinded_packed
+
     def blind(self) -> List[int]:
+        """Compat surface: the blinded set as ints (memoized)."""
         if self._blinded is None:
-            if self._hashed is None:
-                self._hashed = [
-                    hash_to_group(x.encode(), self._p, self._nb)
-                    for x in self.items]
-            a = self._alpha
-            self._blinded = [pow(h, a, self._p) for h in self._hashed]
+            from repro.core.modexp import unpack_ints
+            self._blinded = unpack_ints(self.blind_packed(), self._nb)
         return self._blinded
 
+    def reset_session(self) -> None:
+        """Drop the memoized blinded set (keeping the secrets) — the
+        'fresh round, same exponents' reset benchmarks and bit-identity
+        tests rely on."""
+        self._blinded_packed = None
+        self._blinded = None
+
+    # -- unblind + membership (bloom-mode legs) ----------------------------
+    @property
+    def unblind_exp(self) -> int:
+        """α^{-1} mod q — short by construction in ``bloom`` mode,
+        lazily inverted (full-width) when a ``noinv`` client is driven
+        through the bloom-compat surface."""
+        if self._unblind_exp is None:
+            self._unblind_exp = pow(self._blind_exp, -1, self._q)
+        return self._unblind_exp
+
+    def _match_packed(self, unblinded: bytes, bloom, lo: int) -> List[str]:
+        nb = self._nb
+        els = [unblinded[i:i + nb] for i in range(0, len(unblinded), nb)]
+        hits = bloom.query_batch(els)
+        return [self.items[lo + j] for j in range(len(els)) if hits[j]]
+
     def intersect(self, double_blinded: Sequence[int],
-                  server_bloom: BloomFilter) -> List[str]:
-        """Recover the intersection from the server's response."""
-        a_inv, p, nb = self._alpha_inv, self._p, self._nb
-        out = []
-        for x, db in zip(self.items, double_blinded):
-            unblinded = pow(db, a_inv, p)   # = H(x)^beta
-            if _enc(unblinded, nb) in server_bloom:
-                out.append(x)
-        return out
+                  server_bloom) -> List[str]:
+        """Compat surface: recover the intersection from an un-chunked
+        bloom-variant server response."""
+        from repro.core.modexp import pack_ints
+        packed = pack_ints(list(double_blinded), self._nb)
+        unb = pow_chunk((packed, self.unblind_exp, self._p, self._nb))
+        return self._match_packed(unb, server_bloom, 0)
 
 
-@dataclass
 class PSIServer:
-    """A data owner's side."""
+    """A data owner's side.  β is short; both server legs (double-blind,
+    Bloom build) are short exponentiations.  The Bloom over the β-blinded
+    own set is built once per session (sharded, streamed) and reused
+    across rounds with the same client."""
 
-    items: Sequence[str]
-    fp_rate: float = 1e-9
-    group: str = "modp2048"
-    exp_bits: Optional[int] = SHORT_EXP_BITS
-    _beta: int = field(default=0, repr=False)
+    def __init__(self, items: Sequence[str], fp_rate: float = 1e-9,
+                 group: str = "modp2048", exp_bits=AUTO):
+        self.items = items
+        self.fp_rate = fp_rate
+        self.group = group
+        self._p, self._q, self._nb = GROUPS[group]
+        self._beta = _sample_exponent(self._q,
+                                      _resolve_exp_bits(exp_bits, group))
+        self._bloom: Optional[ShardedBloom] = None
+        self._own_packed: Optional[bytes] = None
 
-    def __post_init__(self):
-        self._p, self._q, self._nb = GROUPS[self.group]
-        self._beta = _sample_exponent(self._q, self.exp_bits)
-        self._bloom: Optional[BloomFilter] = None
-
-    def _own_bloom(self) -> BloomFilter:
-        """Bloom over the β-blinded own set — computed once, reusable
-        across rounds with the same client (β is per-session)."""
+    def build_bloom(self, pool: Optional[ModexpPool] = None,
+                    chunk_size: int = DEFAULT_CHUNK) -> ShardedBloom:
+        """ShardedBloom{ H(y_j)^β } — worker chunks hash+exponentiate,
+        the parent streams vectorized shard adds."""
         if self._bloom is None:
-            b, p, nb = self._beta, self._p, self._nb
-            bf = BloomFilter.for_capacity(len(self.items), self.fp_rate)
-            for y in self.items:
-                bf.add(_enc(pow(hash_to_group(y.encode(), p, nb), b, p),
-                            nb))
+            pool = pool or ModexpPool(0)
+            items, p, nb, b = self.items, self._p, self._nb, self._beta
+            bf = ShardedBloom.for_capacity(len(items), self.fp_rate)
+            for packed in pool.imap(
+                    hashpow_chunk,
+                    ((list(items[lo:hi]), b, p, nb)
+                     for lo, hi in _chunk_slices(len(items), chunk_size))):
+                bf.add_batch([packed[i:i + nb]
+                              for i in range(0, len(packed), nb)])
             self._bloom = bf
         return self._bloom
 
+    def reset_session(self) -> None:
+        """Drop the memoized response-side state (keeping β) — see
+        :meth:`PSIClient.reset_session`."""
+        self._bloom = None
+        self._own_packed = None
+
+    def own_blinded_packed(self, pool: Optional[ModexpPool] = None,
+                           chunk_size: int = DEFAULT_CHUNK) -> bytes:
+        """The packed β-blinded own set { H(y_j)^β } — the uncompressed
+        server response of the ``noinv`` variant.  Memoized (at-rest
+        packed bytes) and reused across rounds with the same client.
+
+        Deduplicated and secret-shuffled before it ever leaves: row
+        order and duplicate multiplicity in Y are NOT part of what the
+        protocol reveals (standard ECDH-PSI practice — a client could
+        otherwise locate each matched record's position in the owner's
+        dataset).  The intersection is order-invariant, so the shuffle
+        never affects results."""
+        if self._own_packed is None:
+            import numpy as np
+            pool = pool or ModexpPool(0)
+            items = list(dict.fromkeys(self.items))
+            p, nb, b = self._p, self._nb, self._beta
+            packed = b"".join(pool.imap(
+                hashpow_chunk,
+                ((items[lo:hi], b, p, nb)
+                 for lo, hi in _chunk_slices(len(items), chunk_size))))
+            rng = np.random.default_rng(secrets.randbits(128))
+            rows = np.frombuffer(packed, np.uint8).reshape(-1, nb)
+            self._own_packed = rows[rng.permutation(len(rows))].tobytes()
+        return self._own_packed
+
+    def respond_chunks(self, blinded_packed: bytes,
+                       pool: Optional[ModexpPool] = None,
+                       chunk_size: int = DEFAULT_CHUNK
+                       ) -> Iterator[Tuple[int, bytes]]:
+        """Stream (base_index, double-blinded packed chunk) — B_i = A_i^β
+        in client order, chunked."""
+        pool = pool or ModexpPool(0)
+        p, nb, b = self._p, self._nb, self._beta
+        nbytes = chunk_size * nb
+        offsets = range(0, len(blinded_packed), nbytes)
+        for off, packed in zip(
+                offsets,
+                pool.imap(pow_chunk,
+                          ((blinded_packed[o:o + nbytes], b, p, nb)
+                           for o in offsets))):
+            yield off // nb, packed
+
     def respond(self, blinded: Sequence[int]):
-        """Returns (double-blinded client set [ordered], bloom of own set)."""
-        b, p = self._beta, self._p
-        double = [pow(a, b, p) for a in blinded]
-        return double, self._own_bloom()
+        """Compat surface: (double-blinded client set [ordered], bloom)."""
+        from repro.core.modexp import pack_ints, unpack_ints
+        packed = pack_ints(list(blinded), self._nb)
+        double = unpack_ints(
+            pow_chunk((packed, self._beta, self._p, self._nb)), self._nb)
+        return double, self.build_bloom()
+
+
+# ---------------------------------------------------------------------------
+# The streaming round
+# ---------------------------------------------------------------------------
+
+
+def _keys64(blob: bytes, nb: int) -> "np.ndarray":
+    """64-bit prefilter keys: the leading 8 bytes of each packed group
+    element (≈ uniform — elements are random mod a ~2^(8·nb) prime)."""
+    import numpy as np
+    a = np.frombuffer(blob, np.uint8).reshape(-1, nb)[:, :8]
+    # native-endian uint64 — np.isin rejects explicit byte-order dtypes
+    return a.copy().view(">u8").ravel().astype(np.uint64)
+
+
+def _exact_membership(d_blob: bytes, t_blob: bytes, nb: int):
+    """Per-element: is d_i ∈ {t_j}?  Vectorized 64-bit prefilter, then
+    an exact full-width confirm on the (intersection-sized) candidate
+    set — no false positives, duplicates preserved."""
+    import numpy as np
+    dk, tk = _keys64(d_blob, nb), _keys64(t_blob, nb)
+    cand = np.isin(dk, tk)
+    if not cand.any():
+        return cand
+    t_sel = np.isin(tk, dk[cand])
+    t_set = {t_blob[j * nb:(j + 1) * nb] for j in np.nonzero(t_sel)[0]}
+    out = np.zeros(len(dk), bool)
+    for i in np.nonzero(cand)[0]:
+        out[i] = d_blob[i * nb:(i + 1) * nb] in t_set
+    return out
+
+
+def _common_stats(client, server, pool, chunk_size) -> dict:
+    return {
+        "chunk_size": chunk_size,
+        "n_chunks": max(1, -(-len(client.items) // chunk_size)),
+        "peak_inflight_elements": min(len(client.items),
+                                      chunk_size * pool.inflight),
+        "parallelism": pool.parallelism if pool.is_parallel else 0,
+        "uncompressed_server_set_bytes": client._nb * len(server.items),
+    }
+
+
+def _round_bloom(client, server, pool, chunk_size, emit):
+    """Angelou et al.: compressed server response, full-width unblind."""
+    nb = client._nb
+    blind_cached = client._blinded_packed is not None
+    bloom_cached = server._bloom is not None
+
+    # server set -> sharded bloom (β leg), streamed
+    bloom = server.build_bloom(pool, chunk_size)
+    for frame in bloom.shard_frames():
+        emit("psi_bloom_shard", len(frame))
+
+    # client set -> blinded upload (α leg), memoized across owners
+    blinded = client.blind_packed(pool, chunk_size)
+    for lo, hi in _chunk_slices(len(client.items), chunk_size):
+        emit("psi_blind_chunk", (hi - lo) * nb)
+
+    # double-blind (β) -> unblind (γ) -> shard probes, pipelined
+    inter: List[str] = []
+    unblind_exp, p = client.unblind_exp, client._p
+    double_chunks = server.respond_chunks(blinded, pool, chunk_size)
+    offsets: List[int] = []
+
+    def _tapped():
+        for lo, packed in double_chunks:
+            emit("psi_double_chunk", len(packed))
+            offsets.append(lo)
+            yield (packed, unblind_exp, p, nb)
+
+    for unb in pool.imap(pow_chunk, _tapped()):
+        inter.extend(client._match_packed(unb, bloom, offsets.pop(0)))
+
+    stats = {
+        "mode": "bloom",
+        "client_upload_bytes": len(blinded),
+        "server_response_bytes": len(blinded) + bloom.nbytes(),
+        "bloom_bytes": bloom.nbytes(),
+        "bloom_shards": bloom.n_shards,
+        "blind_cached": blind_cached,
+        "server_cached": bloom_cached,
+        **_common_stats(client, server, pool, chunk_size),
+    }
+    return inter, stats
+
+
+def _round_noinv(client, server, pool, chunk_size, emit):
+    """Classic ECDH-PSI: compare in the double-blinded domain — every
+    leg short, intersections exact, server set uncompressed."""
+    import numpy as np
+    nb, p = client._nb, client._p
+    blind_cached = client._blinded_packed is not None
+    own_cached = server._own_packed is not None
+
+    # client set -> blinded upload (short α leg), memoized across owners
+    blinded = client.blind_packed(pool, chunk_size)
+    for lo, hi in _chunk_slices(len(client.items), chunk_size):
+        emit("psi_blind_chunk", (hi - lo) * nb)
+
+    # server's β-blinded own set (memoized) streams to the client, which
+    # lifts it into the double-blinded domain: T_j = (H(y_j)^β)^α
+    own = server.own_blinded_packed(pool, chunk_size)
+    cb = chunk_size * nb
+
+    def _own_tasks():
+        for o in range(0, len(own), cb):
+            emit("psi_server_set_chunk", len(own[o:o + cb]))
+            yield (own[o:o + cb], client._blind_exp, p, nb)
+
+    t_blob = b"".join(pool.imap(pow_chunk, _own_tasks()))
+
+    # double-blind response D_i = A_i^β, streamed in client order
+    d_parts: List[bytes] = []
+    for _lo, packed in server.respond_chunks(blinded, pool, chunk_size):
+        emit("psi_double_chunk", len(packed))
+        d_parts.append(packed)
+    d_blob = b"".join(d_parts)
+
+    hits = _exact_membership(d_blob, t_blob, nb)
+    inter = [client.items[i] for i in np.nonzero(hits)[0]]
+    stats = {
+        "mode": "noinv",
+        "client_upload_bytes": len(blinded),
+        "server_response_bytes": len(d_blob) + len(own),
+        "server_set_bytes": len(own),
+        "blind_cached": blind_cached,
+        "server_cached": own_cached,
+        **_common_stats(client, server, pool, chunk_size),
+    }
+    return inter, stats
+
+
+def psi_round(client: PSIClient, server: PSIServer, *,
+              pool: Optional[ModexpPool] = None,
+              chunk_size: int = DEFAULT_CHUNK,
+              on_message: Optional[Callable] = None
+              ) -> Tuple[List[str], dict]:
+    """One full PSI round between existing party objects, streamed in
+    ``chunk_size`` chunks through ``pool`` (serial when ``None``).
+
+    The protocol variant is the client's ``mode`` (``noinv``/``bloom``,
+    see ``DEFAULT_MODE``).  Stage pipeline either way (bounded lookahead
+    at every arrow, so peak big-int memory is O(chunk_size · inflight)
+    regardless of |X| and |Y|):
+
+        client blind chunks  ->  server double-blind chunks
+        server set chunks    ->  client lift/unblind + match chunks
+
+    ``on_message(kind, n_bytes)`` observes every simulated wire message
+    (``psi_blind_chunk`` / ``psi_double_chunk`` / ``psi_server_set_chunk``
+    / ``psi_bloom_shard``) — the session uses it for transcript
+    accounting.  Results are bit-identical across ``pool`` settings:
+    chunk order is preserved and every kernel computes exact modular
+    arithmetic.
+    """
+    if client.group != server.group:
+        raise ValueError(f"group mismatch: client {client.group!r} "
+                         f"!= server {server.group!r}")
+    pool = pool or ModexpPool(0)
+    emit = on_message or (lambda kind, n_bytes: None)
+    if client.mode == "bloom":
+        return _round_bloom(client, server, pool, chunk_size, emit)
+    return _round_noinv(client, server, pool, chunk_size, emit)
 
 
 def psi_intersect(client_items: Sequence[str], server_items: Sequence[str],
                   fp_rate: float = 1e-9, group: str = "modp2048",
-                  exp_bits: Optional[int] = SHORT_EXP_BITS):
-    """One full PSI round.  Returns (intersection_as_client_sees_it, stats)."""
-    client = PSIClient(client_items, group, exp_bits)
+                  exp_bits=AUTO, *,
+                  mode: str = DEFAULT_MODE,
+                  chunk_size: int = DEFAULT_CHUNK,
+                  parallelism: int = 0,
+                  pool: Optional[ModexpPool] = None):
+    """One full PSI round from raw item lists.  Returns
+    (intersection_as_client_sees_it, stats).  ``parallelism`` > 0 forks
+    that many modexp workers (ignored when an explicit ``pool`` is
+    passed); the result is bit-identical to the serial engine."""
+    client = PSIClient(client_items, group, exp_bits, mode)
     server = PSIServer(server_items, fp_rate, group, exp_bits)
-    blinded = client.blind()
-    double, bf = server.respond(blinded)
-    inter = client.intersect(double, bf)
-    nb = GROUPS[group][2]
-    stats = {
-        "client_upload_bytes": nb * len(blinded),
-        "server_response_bytes": nb * len(double) + bf.nbytes(),
-        "bloom_bytes": bf.nbytes(),
-        "uncompressed_server_set_bytes": nb * len(server_items),
-    }
-    return inter, stats
+    if pool is not None:
+        return psi_round(client, server, pool=pool, chunk_size=chunk_size)
+    with ModexpPool(parallelism) as own:
+        return psi_round(client, server, pool=own, chunk_size=chunk_size)

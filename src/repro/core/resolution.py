@@ -6,15 +6,26 @@ computes the global intersection, and broadcasts it.  Data owners never
 communicate and never learn of each other.  Each party then discards
 non-shared rows and sorts by ID so element n of every vertical dataset
 corresponds to the same data subject.
+
+Scaling: one :class:`~repro.core.psi.PSIClient` serves every owner round
+— its blinded upload is computed once (the only full-width-exponent leg
+of the session) and reused verbatim, so the marginal cost of each
+additional owner is three short-exponent chunk streams.  ``parallelism``
+forks that many modexp workers shared across all rounds; ``chunk_size``
+bounds the in-flight big-int working set (million-ID sets stream, they
+never materialize as one batch).  Results are bit-identical for every
+(parallelism, chunk_size) setting.
 """
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Dict, List, Sequence
+from typing import Dict, List, Optional, Sequence
 
 import numpy as np
 
-from repro.core.psi import GROUPS, PSIClient, PSIServer
+from repro.core.modexp import ModexpPool
+from repro.core.psi import (DEFAULT_CHUNK, DEFAULT_MODE, PSIClient,
+                            PSIServer, psi_round)
 
 
 @dataclass
@@ -41,29 +52,49 @@ class VerticalDataset:
 
 def resolve(scientist: VerticalDataset,
             owners: Dict[str, VerticalDataset],
-            fp_rate: float = 1e-9, group: str = "modp2048"):
+            fp_rate: float = 1e-9, group: str = "modp2048", *,
+            mode: str = DEFAULT_MODE,
+            chunk_size: int = DEFAULT_CHUNK,
+            parallelism: int = 0,
+            pool: Optional[ModexpPool] = None):
     """Run the full protocol.  Returns (aligned_scientist,
     {owner: aligned_dataset}, stats).
 
     After resolution every returned dataset has identical ``ids`` in
     identical order — the invariant SplitNN training relies on.
+    ``parallelism``/``chunk_size`` tune the PSI engine (see module
+    docstring); the default is the serial in-process engine.
     """
-    pairwise = {}
-    stats = {"rounds": [], "global_intersection": 0}
-    nb = GROUPS[group][2]
-    for name, ds in owners.items():
-        client = PSIClient(scientist.ids, group)   # scientist is the client
-        server = PSIServer(ds.ids, fp_rate, group)  # each owner is a server
-        blinded = client.blind()
-        double, bf = server.respond(blinded)
-        inter = client.intersect(double, bf)
-        pairwise[name] = set(inter)
-        stats["rounds"].append({
-            "owner": name,
-            "intersection_size": len(inter),
-            "client_upload_bytes": nb * len(blinded),
-            "server_response_bytes": nb * len(double) + bf.nbytes(),
-        })
+    own_pool = pool is None
+    pool = pool or ModexpPool(parallelism)
+    try:
+        client = PSIClient(scientist.ids, group,
+                           mode=mode)              # ONE client, all owners
+        pairwise = {}
+        stats = {"rounds": [], "global_intersection": 0,
+                 "mode": mode, "parallelism": pool.parallelism,
+                 "chunk_size": chunk_size}
+        for name, ds in owners.items():
+            server = PSIServer(ds.ids, fp_rate, group)
+            inter, rstats = psi_round(client, server, pool=pool,
+                                      chunk_size=chunk_size)
+            # effective engine parallelism (0 on fork-fallback hosts)
+            stats["parallelism"] = rstats["parallelism"]
+            pairwise[name] = set(inter)
+            stats["rounds"].append({
+                "owner": name,
+                "intersection_size": len(inter),
+                **{k: rstats[k] for k in
+                   ("client_upload_bytes", "server_response_bytes",
+                    "n_chunks", "blind_cached")},
+                **({"bloom_bytes": rstats["bloom_bytes"],
+                    "bloom_shards": rstats["bloom_shards"]}
+                   if mode == "bloom" else
+                   {"server_set_bytes": rstats["server_set_bytes"]}),
+            })
+    finally:
+        if own_pool:
+            pool.close()
 
     global_ids = set(scientist.ids)
     for s in pairwise.values():

@@ -24,6 +24,7 @@ from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
+from repro.core.psi import DEFAULT_MODE, PSIClient, PSIServer
 from repro.core.resolution import VerticalDataset
 from repro.core.vertical import make_ids, partition_sequence
 from repro.optim import apply_updates
@@ -44,6 +45,7 @@ class DataOwner:
     def __init__(self, name: str, ids: Sequence[str], features: np.ndarray):
         self.name = name
         self._vd = VerticalDataset(list(ids), np.asarray(features))
+        self._psi_servers: Dict[tuple, PSIServer] = {}
 
     # -- public (scientist-visible) surface --------------------------------
     @property
@@ -69,6 +71,17 @@ class DataOwner:
         return (f"DataOwner({self.name!r}, rows={self.n_rows}, "
                 f"feature_shape={self.feature_shape})")
 
+    def psi_server(self, group: str, fp_rate: float = 1e-9) -> PSIServer:
+        """The owner's PSI endpoint, cached per (group, fp_rate): β and
+        the sharded Bloom over the β-blinded own set are per-session
+        state, so repeated rounds against the same client (or a
+        re-resolve with unchanged rows) reuse them.  Invalidated when
+        the owner's rows change (``_align``)."""
+        key = (group, fp_rate)
+        if key not in self._psi_servers:
+            self._psi_servers[key] = PSIServer(self.ids, fp_rate, group)
+        return self._psi_servers[key]
+
     # -- owner-side surface (runs 'on the owner's device') -----------------
     @property
     def _features(self) -> np.ndarray:
@@ -77,6 +90,7 @@ class DataOwner:
     def _align(self, keep_ids: Sequence[str]) -> None:
         """Discard non-shared rows and sort by ID (paper §3.1)."""
         self._vd = self._vd.filter_and_sort(keep_ids)
+        self._psi_servers.clear()               # rows changed: new session
 
 
 class DataScientist:
@@ -89,6 +103,7 @@ class DataScientist:
             np.asarray(labels) if labels is not None
             else np.zeros(len(list(ids)), np.int32))
         self.has_labels = labels is not None
+        self._psi_clients: Dict[tuple, PSIClient] = {}
 
     @property
     def ids(self) -> List[str]:
@@ -102,8 +117,20 @@ class DataScientist:
         return (f"DataScientist(rows={len(self._vd.ids)}, "
                 f"labels={self.has_labels})")
 
+    def psi_client(self, group: str,
+                   mode: str = DEFAULT_MODE) -> PSIClient:
+        """The scientist's PSI endpoint, cached per (group, mode): its
+        blinded upload is memoized on the client and reused against
+        every owner round.  Invalidated when the scientist's rows
+        change (``_align``)."""
+        key = (group, mode)
+        if key not in self._psi_clients:
+            self._psi_clients[key] = PSIClient(self.ids, group, mode=mode)
+        return self._psi_clients[key]
+
     def _align(self, keep_ids: Sequence[str]) -> None:
         self._vd = self._vd.filter_and_sort(keep_ids)
+        self._psi_clients.clear()               # rows changed: new session
 
 
 # ---------------------------------------------------------------------------

@@ -1,13 +1,29 @@
 """VerticalSession — the single entrypoint for every PyVertical workflow.
 
-The paper's pipeline (Fig. 2) as a facade over the repo's machinery:
+The paper's pipeline (Fig. 2) as a facade over the repo's machinery
+(this example runs verbatim under ``make docs-check``):
 
-    sci, owners = feature_parties(*make_vertical_mnist_parties(2000))
-    session = VerticalSession(sci, owners)
-    session.resolve(group="modp512")          # DH-PSI + ID alignment
-    session.build(CONFIG)                     # MLPSplitNN | SplitModel
-    history = session.fit(epochs=10, batch_size=128, eval_frac=0.15)
-    engine = session.serve(...)               # split-inference (LM archs)
+```python
+from repro.configs.pyvertical_mnist import CONFIG
+from repro.data import make_vertical_mnist_parties
+from repro.federation import VerticalSession, feature_parties
+
+sci, owners = feature_parties(*make_vertical_mnist_parties(
+    400, seed=0, keep_frac=0.9))
+session = VerticalSession(sci, owners)
+stats = session.resolve(group="modp512")  # DH-PSI + ID alignment
+assert stats["global_intersection"] == len(session.scientist.ids)
+session.build(CONFIG)                     # MLPSplitNN | SplitModel
+history = session.fit(epochs=3, batch_size=64, eval_frac=0.2,
+                      verbose=False)
+assert history["train"][-1]["loss"] < history["train"][0]["loss"]
+# (LM archs additionally serve: engine = session.serve(...))
+```
+
+``resolve`` scales to million-ID sets: ``session.resolve(group=...,
+parallelism=4, chunk_size=4096)`` streams the PSI rounds in bounded
+chunks through a modexp worker pool and reuses the scientist's blinded
+upload across every owner (see ``repro/core/psi.py``).
 
 Party-visibility contract (enforced, see ``tests/test_federation.py``):
 owners never see labels, the scientist never receives raw feature arrays.
@@ -43,7 +59,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.psi import GROUPS, PSIClient, PSIServer
+from repro.core.modexp import ModexpPool
+from repro.core.psi import DEFAULT_CHUNK, DEFAULT_MODE, psi_round
 from repro.core.splitnn import (cut_layer_traffic, make_split_train_step,
                                 train_state_init)
 from repro.federation import batching, transport
@@ -113,32 +130,62 @@ class VerticalSession:
     # ------------------------------------------------------------ 1. resolve
 
     def resolve(self, *, group: str = "modp2048",
-                fp_rate: float = 1e-9) -> dict:
+                fp_rate: float = 1e-9, mode: str = DEFAULT_MODE,
+                parallelism: int = 0,
+                chunk_size: int = DEFAULT_CHUNK) -> dict:
         """The paper's §3.1 protocol: the scientist runs DH-PSI pairwise
         with each owner (scientist = client, so only the scientist learns
         each intersection), intersects globally, broadcasts the shared IDs,
-        and every party filter-and-sorts.  The scientist blinds its set
-        ONCE and reuses the blinded upload for every owner round (its
-        secret is per-session, so re-blinding per owner bought nothing but
-        modexps).  Returns the stats dict."""
-        nb = GROUPS[group][2]
-        stats: dict = {"rounds": [], "global_intersection": 0}
+        and every party filter-and-sorts.  Returns the stats dict.
+
+        The scientist blinds its set ONCE and reuses the blinded upload
+        for every owner round; each owner's response-side state (sharded
+        Bloom or blinded own set, by ``mode``) is likewise per-session.
+        ``parallelism`` forks that many modexp workers shared across all
+        owner rounds (0 = the bit-identical serial engine);
+        ``chunk_size`` bounds the streamed chunks so million-ID sets
+        never materialize one giant blinded batch."""
+        stats: dict = {"rounds": [], "global_intersection": 0,
+                       "mode": mode, "parallelism": parallelism,
+                       "chunk_size": chunk_size}
         global_ids = set(self.scientist.ids)
-        client = PSIClient(self.scientist.ids, group)
-        blinded = client.blind()
-        for owner in self.owners:
-            server = PSIServer(owner.ids, fp_rate, group)
-            double, bf = server.respond(blinded)
-            inter = client.intersect(double, bf)
-            global_ids &= set(inter)
-            up, down = nb * len(blinded), nb * len(double) + bf.nbytes()
-            self._log("scientist", owner.name, "psi_blinded", bytes=up)
-            self._log(owner.name, "scientist", "psi_response", bytes=down,
-                      width=None)
-            stats["rounds"].append({
-                "owner": owner.name, "intersection_size": len(inter),
-                "client_upload_bytes": up, "server_response_bytes": down,
-                "bloom_bytes": bf.nbytes()})
+        client = self.scientist.psi_client(group, mode)
+        with ModexpPool(parallelism) as pool:
+            for owner in self.owners:
+                server = owner.psi_server(group, fp_rate)
+                wire: Dict[str, List[int]] = {}
+
+                def tally(kind, n_bytes, wire=wire):
+                    c = wire.setdefault(kind, [0, 0])
+                    c[0] += 1
+                    c[1] += n_bytes
+
+                inter, rstats = psi_round(
+                    client, server, pool=pool, chunk_size=chunk_size,
+                    on_message=tally)
+                # the ENGINE's parallelism (0 when the host can't fork),
+                # not the requested value — stats must not claim a pool
+                # that silently degraded to serial
+                stats["parallelism"] = rstats["parallelism"]
+                global_ids &= set(inter)
+                # one transcript entry per wire-message kind, aggregated
+                # (per-chunk entries would swamp the transcript at 1e6)
+                for kind, (n_msgs, n_bytes) in wire.items():
+                    frm, to = (("scientist", owner.name)
+                               if kind == "psi_blind_chunk"
+                               else (owner.name, "scientist"))
+                    self._log(frm, to, kind, bytes=n_bytes, chunks=n_msgs)
+                stats["rounds"].append({
+                    "owner": owner.name, "intersection_size": len(inter),
+                    "client_upload_bytes": rstats["client_upload_bytes"],
+                    "server_response_bytes":
+                        rstats["server_response_bytes"],
+                    "n_chunks": rstats["n_chunks"],
+                    "blind_cached": rstats["blind_cached"],
+                    **({"bloom_bytes": rstats["bloom_bytes"],
+                        "bloom_shards": rstats["bloom_shards"]}
+                       if mode == "bloom" else
+                       {"server_set_bytes": rstats["server_set_bytes"]})})
         stats["global_intersection"] = len(global_ids)
         self.scientist._align(global_ids)
         for owner in self.owners:

@@ -120,7 +120,9 @@ def test_scientist_path_receives_only_cut_width_payloads():
     to_scientist = [m for m in session.transcript
                     if m["to"] == "scientist"]
     assert to_scientist, "transcript must record cross-party traffic"
-    assert {m["kind"] for m in to_scientist} <= {"psi_response",
+    assert {m["kind"] for m in to_scientist} <= {"psi_double_chunk",
+                                                 "psi_server_set_chunk",
+                                                 "psi_bloom_shard",
                                                  "cut_activations"}
     cuts = [m for m in to_scientist if m["kind"] == "cut_activations"]
     assert len(cuts) == len(session.owners)
@@ -130,7 +132,7 @@ def test_scientist_path_receives_only_cut_width_payloads():
     # and the reverse direction carries only protocol messages
     from_scientist = {m["kind"] for m in session.transcript
                       if m["from"] == "scientist"}
-    assert from_scientist <= {"psi_blinded", "resolved_ids",
+    assert from_scientist <= {"psi_blind_chunk", "resolved_ids",
                               "cut_gradients"}
 
 

@@ -95,7 +95,8 @@ def test_psi_server_learns_only_cardinality():
 
 def test_psi_bloom_compression_smaller_than_raw():
     server_items = [f"y{i}" for i in range(500)]
-    _, stats = psi_intersect(["y1", "zz"], server_items, group=GROUP)
+    _, stats = psi_intersect(["y1", "zz"], server_items, group=GROUP,
+                             mode="bloom")
     assert stats["bloom_bytes"] < stats["uncompressed_server_set_bytes"]
 
 

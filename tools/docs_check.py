@@ -1,0 +1,150 @@
+#!/usr/bin/env python
+"""Executable-documentation gate (``make docs-check``).
+
+Documentation rots silently unless it runs.  This tool extracts and
+executes, as real subprocesses with ``PYTHONPATH=src``:
+
+  1. every fenced ```python block in ``docs/*.md`` and ``README.md``
+     (skip one by putting ``<!-- docs-check: skip -->`` on the line
+     directly above the fence — for deliberately illustrative fragments);
+  2. every fenced ```python block inside the module docstrings listed in
+     ``DOCSTRING_MODULES`` (e.g. the ``federation/session.py`` header
+     example);
+  3. the example scripts in ``EXAMPLES`` (with fast flags where the
+     script supports them).
+
+Each snippet must be self-contained: it runs in its own interpreter from
+the repo root.  Failures print the captured output and fail the gate
+(exit 1) — CI runs this next to the tier-1 tests.
+"""
+from __future__ import annotations
+
+import argparse
+import ast
+import os
+import re
+import subprocess
+import sys
+import tempfile
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+DOC_GLOBS = ("docs", "README.md")
+DOCSTRING_MODULES = ("src/repro/federation/session.py",)
+EXAMPLES = (
+    ("examples/psi_demo.py", ()),
+    ("examples/multihead_scaling.py", ("--fast",)),
+)
+SKIP_MARK = "<!-- docs-check: skip -->"
+TIMEOUT_S = 1200
+
+FENCE_RE = re.compile(r"^```python\s*$")
+
+
+def fenced_blocks(text: str):
+    """Yield (start_line, code) for each ```python fence, honoring the
+    skip marker on the line directly above the fence."""
+    lines = text.splitlines()
+    i = 0
+    while i < len(lines):
+        if FENCE_RE.match(lines[i]):
+            prev = ""
+            for j in range(i - 1, -1, -1):
+                if lines[j].strip():
+                    prev = lines[j].strip()
+                    break
+            body = []
+            i += 1
+            start = i + 1
+            while i < len(lines) and lines[i].rstrip() != "```":
+                body.append(lines[i])
+                i += 1
+            if prev != SKIP_MARK:
+                yield start, "\n".join(body) + "\n"
+        i += 1
+
+
+def collect():
+    """-> [(label, code-or-None, argv-or-None)] — code snippets carry
+    source text; examples carry an argv to run directly."""
+    jobs = []
+    md_files = []
+    for entry in DOC_GLOBS:
+        path = os.path.join(ROOT, entry)
+        if os.path.isdir(path):
+            md_files += sorted(
+                os.path.join(path, f) for f in os.listdir(path)
+                if f.endswith(".md"))
+        elif os.path.exists(path):
+            md_files.append(path)
+    for md in md_files:
+        with open(md) as f:
+            text = f.read()
+        for line, code in fenced_blocks(text):
+            rel = os.path.relpath(md, ROOT)
+            jobs.append((f"{rel}:{line}", code, None))
+    for mod in DOCSTRING_MODULES:
+        with open(os.path.join(ROOT, mod)) as f:
+            doc = ast.get_docstring(ast.parse(f.read())) or ""
+        for line, code in fenced_blocks(doc):
+            jobs.append((f"{mod}:docstring:{line}", code, None))
+    for script, extra in EXAMPLES:
+        jobs.append((f"{script} {' '.join(extra)}".strip(), None,
+                     [os.path.join(ROOT, script), *extra]))
+    return jobs
+
+
+def run_one(label, code, argv) -> bool:
+    env = dict(os.environ)
+    # src for repro.*, the repo root for benchmarks.* / tools.*
+    path = os.path.join(ROOT, "src") + os.pathsep + ROOT
+    env["PYTHONPATH"] = (path + os.pathsep + env["PYTHONPATH"]
+                         if env.get("PYTHONPATH") else path)
+    if argv is None:
+        with tempfile.NamedTemporaryFile(
+                "w", suffix=".py", delete=False) as f:
+            f.write(code)
+            tmp = f.name
+        cmd = [sys.executable, tmp]
+    else:
+        tmp = None
+        cmd = [sys.executable, *argv]
+    try:
+        proc = subprocess.run(cmd, cwd=ROOT, env=env, text=True,
+                              capture_output=True, timeout=TIMEOUT_S)
+    finally:
+        if tmp:
+            os.unlink(tmp)
+    ok = proc.returncode == 0
+    print(f"docs-check {'PASS' if ok else 'FAIL'} {label}")
+    if not ok:
+        sys.stdout.write(proc.stdout[-4000:])
+        sys.stderr.write(proc.stderr[-4000:])
+    return ok
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--list", action="store_true",
+                    help="list snippets without running them")
+    ap.add_argument("--only", default=None,
+                    help="substring filter on snippet labels")
+    args = ap.parse_args(argv)
+    jobs = collect()
+    if args.only:
+        jobs = [j for j in jobs if args.only in j[0]]
+    if args.list:
+        for label, code, argv_ in jobs:
+            kind = "example" if argv_ else f"{len(code.splitlines())} lines"
+            print(f"{label} ({kind})")
+        return 0
+    if not jobs:
+        print("docs-check: no snippets found", file=sys.stderr)
+        return 1
+    failures = sum(not run_one(*j) for j in jobs)
+    print(f"docs-check: {len(jobs) - failures}/{len(jobs)} snippets pass")
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())
