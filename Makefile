@@ -2,7 +2,7 @@
 PY := python
 export PYTHONPATH := src
 
-.PHONY: verify test fast quickstart bench bench-check docs-check
+.PHONY: verify test fast quickstart bench bench-check docs-check coverage
 
 verify:
 	$(PY) -m pytest -x -q
@@ -29,3 +29,9 @@ bench-check:
 # docs/*.md + README.md + listed module docstrings + the examples
 docs-check:
 	$(PY) tools/docs_check.py
+
+# Line-coverage report for core/psi.py + federation/ (informational,
+# not a gate — baseline in docs/BENCHMARKS.md).  Uses pytest-cov when
+# installed, a scoped stdlib tracer otherwise.
+coverage:
+	$(PY) tools/coverage_report.py

@@ -35,7 +35,7 @@ TRACKED = {
 
 #: informational subtrees: committed by full-size runs, not re-measured
 #: under --check (the PSI trajectory's 1e6-ID row costs minutes)
-SKIP_SUBTREES = ("config", "pipeline_sweep", "trajectory")
+SKIP_SUBTREES = ("config", "pipeline_sweep", "trajectory", "wire_sweep")
 SKIP_KEYS = ("pipelined_microbatches",)
 
 

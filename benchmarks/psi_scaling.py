@@ -16,8 +16,18 @@ axes and writes ``BENCH_psi.json``:
     ``benchmarks.check``): round time, serial-vs-parallel speedup,
     deterministic protocol bytes, and the owner-round amortization
     (marginal second-owner round with the blinded set + Bloom cached).
+  * ``wire_gate`` — resolve-over-wire (ISSUE 5): the in-process engine
+    vs ``backend="queue"`` (the ``federation.psi_transport`` actors) at
+    0 ms and 8 ms injected one-way latency, interleaved min-of-N trials.
+    Asserts on every run that pipelined chunking amortizes the latency:
+    the 8 ms round adds far less than the sequential floor of
+    ``n_chunks x RTT``, and that a repeat round with the same owner
+    transfers zero blind-upload bytes (measured, exact-checked).
+  * ``wire_sweep`` — latency x chunk_size wall-clock rows (full runs
+    only; informational, skipped by ``--check``).
   * the engine's invariant — the parallel/chunked round is bit-identical
-    to the serial path — is asserted on every run, not just reported.
+    to the serial path (and, in the wire sections, to the transport
+    engine) — is asserted on every run, not just reported.
 
 CLI (also driven by ``benchmarks.run``):
 
@@ -167,6 +177,127 @@ def _gate_section(gate_n, overlap, group, chunk_size, parallelism):
     }
 
 
+def _wire_round(n, overlap, group, chunk_size, latency_s, *,
+                client=None, worker=None):
+    """One resolve-over-wire round (``federation.psi_transport``).
+    Fresh parties unless ``client``/``worker`` are passed (repeat-round
+    reuse).  Returns (seconds, intersection, wire_stats,
+    client_endpoint, client, worker)."""
+    import threading
+
+    from repro.core.psi import PSIClient, PSIServer
+    from repro.federation import transport
+    from repro.federation.psi_transport import (PSIServerEndpoint,
+                                                wire_psi_round)
+
+    cl_items, sv_items = _mk_sets(n, overlap)
+    if client is None:
+        client = PSIClient(cl_items, group)
+    if worker is None:
+        server = PSIServer(sv_items, group=group)
+    ep_c, ep_s = transport.channel_pair("scientist", "owner0",
+                                        backend="queue",
+                                        latency_s=latency_s)
+    if worker is None:
+        worker = PSIServerEndpoint("owner0", server, ep_s)
+    else:
+        # same actor, fresh channel: the owner-side caches persist
+        worker = PSIServerEndpoint("owner0", worker.server, ep_s,
+                                   blind_cache=worker._blind_cache)
+    th = threading.Thread(target=worker.run, daemon=True)
+    th.start()
+    try:
+        t0 = time.perf_counter()
+        inter, stats = wire_psi_round(client, ep_c, worker=worker,
+                                      chunk_size=chunk_size)
+        dt = time.perf_counter() - t0
+    finally:
+        ep_c.send("psi_stop", {})
+        th.join(timeout=10.0)
+    expect = len(set(cl_items) & set(sv_items))
+    assert len(inter) == expect, "wire PSI mismatch"
+    return dt, inter, stats, ep_c, client, worker
+
+
+def _wire_gate_section(n=256, overlap=0.5, group="modp512",
+                       chunk_size=16, latency_s=8e-3, trials=3):
+    """Resolve-over-wire gate: in-process vs queue at 0 ms and the
+    injected latency, interleaved min-of-``trials`` (this host's
+    throughput drifts ~25% between runs — see ROADMAP).  Hard-asserts
+    the two properties the wire engine exists for: pipelined chunks
+    amortize latency (wall-clock far under sequential chunks x RTT) and
+    the blinded upload is reused across owner rounds (zero re-upload
+    bytes, measured)."""
+    n_chunks = -(-n // chunk_size)
+    direct_s, q0_s, qlat_s = [], [], []
+    inters = set()
+    for _ in range(trials):
+        dt, inter, _ = _one_round(n, overlap, group, chunk_size, 0)
+        direct_s.append(dt)
+        inters.add(tuple(inter))
+        dt, inter, _, _, _, _ = _wire_round(n, overlap, group, chunk_size,
+                                            0.0)
+        q0_s.append(dt)
+        inters.add(tuple(inter))
+        dt, inter, _, _, _, _ = _wire_round(n, overlap, group, chunk_size,
+                                            latency_s)
+        qlat_s.append(dt)
+        inters.add(tuple(inter))
+    assert len(inters) == 1, \
+        "wire engine diverged from the in-process path"
+
+    # repeat round against the SAME owner: the server caches the upload
+    # by content tag, so round 2 ships zero psi_blind_chunk bytes
+    _, _, st1, ep1, client, worker = _wire_round(n, overlap, group,
+                                                 chunk_size, 0.0)
+    up1 = ep1.sent_stats["by_kind"]["psi_blind_chunk"]["wire_bytes"]
+    t0 = time.perf_counter()
+    _, _, st2, ep2, _, _ = _wire_round(n, overlap, group, chunk_size, 0.0,
+                                       client=client, worker=worker)
+    repeat_s = time.perf_counter() - t0
+    up2 = ep2.sent_stats["by_kind"].get(
+        "psi_blind_chunk", {"wire_bytes": 0})["wire_bytes"]
+    assert st2["upload_skipped"] and up2 == 0, \
+        "blinded-upload reuse lost on the wire"
+
+    direct, q0, qlat = min(direct_s), min(q0_s), min(qlat_s)
+    seq_floor = n_chunks * 2 * latency_s          # one RTT per chunk
+    added = qlat - q0
+    assert added < 0.6 * seq_floor, \
+        (f"pipelined chunking no longer amortizes latency: "
+         f"{1e3 * added:.0f} ms added vs sequential floor "
+         f"{1e3 * seq_floor:.0f} ms")
+    return {
+        "n": n, "chunk_size": chunk_size, "n_chunks": n_chunks,
+        "latency_ms": 1e3 * latency_s,
+        "direct_round_ms": 1e3 * direct,
+        "queue_round_ms": 1e3 * q0,
+        "queue_latency_round_ms": 1e3 * qlat,
+        "sequential_floor_ms": 1e3 * seq_floor,
+        # headroom >= 1: what a chunk-synchronous client would pay at
+        # this latency, over what the pipelined round measured
+        "latency_amortization": (q0 + seq_floor) / max(qlat, 1e-9),
+        "repeat_round_ms": 1e3 * repeat_s,
+        "upload_wire_bytes": up1,
+        "repeat_upload_wire_bytes": up2,
+        "round_upload_bytes": st1["client_upload_bytes"],
+    }
+
+
+def _wire_sweep(n=1024, overlap=0.5, group="modp512",
+                latencies=(0.0, 2e-3, 8e-3), chunks=(32, 128, 512)):
+    """latency x chunk_size wall-clock surface (informational)."""
+    sweep = {}
+    for lat in latencies:
+        for c in chunks:
+            dt, _, stats, _, _, _ = _wire_round(n, overlap, group, c, lat)
+            sweep[f"lat{1e3 * lat:g}ms_chunk{c}"] = {
+                "round_ms": 1e3 * dt,
+                "n_chunks": stats["n_chunks"],
+            }
+    return sweep
+
+
 def run(sizes=(10_000, 100_000, 1_000_000), overlap=0.5, group="modp512",
         chunk_size=DEFAULT_CHUNK, parallelism=DEFAULT_PAR,
         gate_n=10_000, compare_n=100_000, trajectory=True,
@@ -187,6 +318,15 @@ def run(sizes=(10_000, 100_000, 1_000_000), overlap=0.5, group="modp512",
     rows.append((f"psi_marginal_owner_n{gate_n}",
                  1e3 * g["marginal_owner_round_ms"],
                  f"amortization={g['owner_round_amortization']:.2f}x"))
+
+    report["wire_gate"] = w = _wire_gate_section(group=group)
+    rows.append((f"psi_wire_n{w['n']}",
+                 1e3 * w["queue_latency_round_ms"],
+                 f"latency_amortization={w['latency_amortization']:.2f}x "
+                 f"reuse_upload={w['repeat_upload_wire_bytes']}B"))
+
+    if trajectory:
+        report["wire_sweep"] = _wire_sweep(group=group)
 
     if trajectory:
         traj: dict = {}

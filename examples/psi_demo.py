@@ -1,7 +1,9 @@
 """Private Set Intersection walkthrough — every message of both engine
 variants (classic ECDH-PSI and the Bloom-compressed Angelou et al.
-protocol PyVertical uses), with sizes, plus the 3-party resolution of
-paper §3.1 through the streaming/parallel engine.
+protocol PyVertical uses), with sizes, the 3-party resolution of paper
+§3.1 through the streaming/parallel engine, and the same resolution
+*over the transport layer* (``backend="queue"``) with per-party
+**measured** wire bytes.
 
     PYTHONPATH=src python examples/psi_demo.py
 
@@ -76,9 +78,39 @@ def resolution_demo():
           "everywhere")
 
 
+def wire_demo():
+    print("\n=== resolve over the wire (backend='queue'), measured bytes")
+    from repro.federation import VerticalSession
+    from repro.federation.parties import DataOwner, DataScientist
+
+    rng = np.random.default_rng(0)
+    ids = [f"id{i}" for i in range(40)]
+    sci = DataScientist(ids, rng.integers(0, 10, 40))
+    owners = [DataOwner("hospital", ids[:30], rng.normal(size=(30, 3))),
+              DataOwner("pharmacy", ids[10:], rng.normal(size=(30, 2)))]
+    session = VerticalSession(sci, owners)
+    stats = session.resolve(group=GROUP, backend="queue", chunk_size=8)
+    print(f"  global intersection: {stats['global_intersection']} IDs")
+    for name, wire in stats["per_party_wire"].items():
+        print(f"  scientist <-> {name}: "
+              f"uploaded {wire['sent_wire_bytes']} B, "
+              f"downloaded {wire['recv_wire_bytes']} B "
+              f"({wire['messages']} framed messages)")
+    reuse = [m for m in session.transcript
+             if m["kind"] == "psi_blind_reuse"]
+    assert [m["to"] for m in reuse] == ["pharmacy"]
+    print(f"  blinded upload computed once, reused for {reuse[0]['to']} "
+          f"({reuse[0]['reused_upload_bytes']} B of modexp output)")
+    r0, r1 = stats["rounds"]
+    assert r0["upload_wire_bytes"] == r1["upload_wire_bytes"]
+    print("  every leg crossed as a framed transport Message — byte "
+          "counts above are measured from the serialized frames")
+
+
 def main():
     assert pairwise_demo("noinv") == pairwise_demo("bloom")
     resolution_demo()
+    wire_demo()
 
 
 if __name__ == "__main__":

@@ -232,6 +232,30 @@ class PSIClient:
         hits = bloom.query_batch(els)
         return [self.items[lo + j] for j in range(len(els)) if hits[j]]
 
+    # -- per-chunk leg hooks (shared with the wire engine) -----------------
+    #
+    # ``federation/psi_transport.py`` runs the protocol one transport
+    # Message per chunk.  Its client legs submit the same ``pow_chunk``
+    # task shape the in-process rounds below do (exp/prime/width from
+    # this object), and finish through these match methods — the two
+    # engines share their per-chunk compute, so bit-identity is by
+    # construction.
+
+    def match_bloom_chunk(self, unblinded: bytes, bloom,
+                          base: int) -> List[str]:
+        """bloom leg: probe one unblinded chunk (client items starting at
+        ``base``) against the server's ShardedBloom."""
+        return self._match_packed(unblinded, bloom, base)
+
+    def match_double_blinded(self, d_blob: bytes,
+                             t_blob: bytes) -> List[str]:
+        """noinv finish: exact membership of the double-blinded client
+        set { D_i } in the lifted server set { T_j } — client order,
+        duplicates preserved, no false positives."""
+        import numpy as np
+        hits = _exact_membership(d_blob, t_blob, self._nb)
+        return [self.items[i] for i in np.nonzero(hits)[0]]
+
     def intersect(self, double_blinded: Sequence[int],
                   server_bloom) -> List[str]:
         """Compat surface: recover the intersection from an un-chunked
@@ -307,6 +331,12 @@ class PSIServer:
             rows = np.frombuffer(packed, np.uint8).reshape(-1, nb)
             self._own_packed = rows[rng.permutation(len(rows))].tobytes()
         return self._own_packed
+
+    def respond_chunk(self, packed: bytes) -> bytes:
+        """One packed blinded chunk -> its double-blinded response,
+        B_i = A_i^β (order preserved) — the per-chunk server kernel the
+        wire engine (``federation/psi_transport``) calls per Message."""
+        return pow_chunk((packed, self._beta, self._p, self._nb))
 
     def respond_chunks(self, blinded_packed: bytes,
                        pool: Optional[ModexpPool] = None,
@@ -423,7 +453,6 @@ def _round_bloom(client, server, pool, chunk_size, emit):
 def _round_noinv(client, server, pool, chunk_size, emit):
     """Classic ECDH-PSI: compare in the double-blinded domain — every
     leg short, intersections exact, server set uncompressed."""
-    import numpy as np
     nb, p = client._nb, client._p
     blind_cached = client._blinded_packed is not None
     own_cached = server._own_packed is not None
@@ -452,8 +481,7 @@ def _round_noinv(client, server, pool, chunk_size, emit):
         d_parts.append(packed)
     d_blob = b"".join(d_parts)
 
-    hits = _exact_membership(d_blob, t_blob, nb)
-    inter = [client.items[i] for i in np.nonzero(hits)[0]]
+    inter = client.match_double_blinded(d_blob, t_blob)
     stats = {
         "mode": "noinv",
         "client_upload_bytes": len(blinded),

@@ -9,4 +9,5 @@ from repro.federation.parties import (DataOwner, DataScientist,  # noqa
 from repro.federation.registry import build_adapter, register_model  # noqa
 from repro.federation.session import VerticalSession  # noqa: F401
 from repro.federation import batching  # noqa: F401
+from repro.federation import psi_transport  # noqa: F401
 from repro.federation import transport  # noqa: F401

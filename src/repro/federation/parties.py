@@ -46,6 +46,7 @@ class DataOwner:
         self.name = name
         self._vd = VerticalDataset(list(ids), np.asarray(features))
         self._psi_servers: Dict[tuple, PSIServer] = {}
+        self._psi_blind_caches: Dict[tuple, dict] = {}
 
     # -- public (scientist-visible) surface --------------------------------
     @property
@@ -82,6 +83,26 @@ class DataOwner:
             self._psi_servers[key] = PSIServer(self.ids, fp_rate, group)
         return self._psi_servers[key]
 
+    def psi_endpoint(self, endpoint, group: str, fp_rate: float = 1e-9,
+                     pool=None):
+        """The owner's wire-native PSI actor: wraps the cached
+        :meth:`psi_server` state in a
+        :class:`~repro.federation.psi_transport.PSIServerEndpoint`
+        reacting to protocol messages on ``endpoint``.  The actor object
+        is per-channel, but both memoization layers persist on the owner
+        (β-side response state on the PSIServer, the client-upload byte
+        cache in ``_psi_blind_caches``), so repeat rounds skip the
+        blinded re-upload even across actor re-creation.  Invalidated
+        when the owner's rows change (``_align``).  ``pool`` feeds the
+        actor's own-set chunk kernels (executors are thread-safe, so the
+        session shares one resolve pool across all parties)."""
+        from repro.federation.psi_transport import PSIServerEndpoint
+        cache = self._psi_blind_caches.setdefault((group, fp_rate), {})
+        return PSIServerEndpoint(self.name,
+                                 self.psi_server(group, fp_rate),
+                                 endpoint, blind_cache=cache,
+                                 chunk_kernel_pool=pool)
+
     # -- owner-side surface (runs 'on the owner's device') -----------------
     @property
     def _features(self) -> np.ndarray:
@@ -91,6 +112,7 @@ class DataOwner:
         """Discard non-shared rows and sort by ID (paper §3.1)."""
         self._vd = self._vd.filter_and_sort(keep_ids)
         self._psi_servers.clear()               # rows changed: new session
+        self._psi_blind_caches.clear()
 
 
 class DataScientist:

@@ -1,0 +1,424 @@
+"""Wire-native PSI — entity resolution over the transport layer.
+
+Until this module existed, ``session.resolve`` ran the PSI rounds as
+direct Python calls between the party objects (``core/psi.py``): correct
+and streamed, but nothing actually *crossed* the party boundary the way
+training and serving traffic does.  This module frames every leg of both
+protocol variants as :class:`~repro.federation.transport.Message` s over
+a ``channel_pair``, so the full lifecycle (resolve -> fit -> serve) runs
+over the same measured wire: byte counts come from serialized frames,
+latency injection applies to every chunk, and tests can assert privacy
+properties on the *observed traffic* rather than on code structure.
+
+Cast:
+
+  * :class:`PSIServerEndpoint` — the data owner's actor.  Runs on its
+    own thread (the resolve analogue of ``parties.OwnerComputeEndpoint``)
+    holding a :class:`~repro.core.psi.PSIServer`; everything it does is a
+    reaction to inbox messages, and a crash surfaces on the scientist's
+    side through the same short-poll pattern split training uses.
+  * :func:`wire_psi_round` — the data scientist's driver.  Sends the
+    hello + blinded upload, then consumes the server's legs as they
+    arrive, feeding each chunk's lift/unblind ``pow_chunk`` task through
+    a ``ModexpPool`` so receive, compute, and the server's own modexp
+    work all overlap.
+
+Protocol (kinds in ``WIRE_KINDS``; frame layouts golden-tested in
+``tests/test_psi_transport.py``):
+
+  client -> server:
+    ``psi_hello``         group/mode/n_items/chunk_size/nb + a 16-byte
+                          ``blind_tag`` (sha256 prefix of the packed
+                          blinded set) the server uses to skip a
+                          re-upload it has already seen.
+    ``psi_blind_chunk``   packed A_i = H(x_i)^α, ``seq`` = chunk index,
+                          ``base`` = element offset.  All chunks are
+                          sent without waiting: chunk k+1 rides the wire
+                          while the server exponentiates chunk k.
+    ``psi_stop``          shuts the actor down.
+
+  server -> client:
+    ``psi_hello_ack``       blind_cached flag + server-set leg geometry
+                            (chunk count, or bloom shard parameters).
+    ``psi_server_set_chunk``packed { H(y_j)^β } (noinv; deduplicated +
+                            secret-shuffled before it leaves).
+    ``psi_bloom_shard``     one ShardedBloom shard bitmap (bloom).
+    ``psi_double_chunk``    packed B_i = A_i^β, mirrors the blind seq.
+    ``psi_done``            end-of-round marker (chunk count echoed).
+
+Ordering: within each kind, chunks are strictly sequential (``seq`` is
+verified on both sides — a reordered or dropped chunk fails loudly with
+a "PSI protocol desync" error, never a silently wrong intersection).
+*Across* kinds the client tolerates any interleaving via the endpoint's
+``recv_kind`` stash, which is what lets the server's double-blind
+responses overtake its own server-set stream under latency.
+
+The blinded upload is memoized at both levels: the client computes the
+packed blind once per session (PR 4 behavior, reused against every
+owner), and each server actor caches the uploaded bytes by
+``blind_tag`` — a repeat round with the same owner transfers **zero**
+``psi_blind_chunk`` bytes (asserted on measured channel stats in the
+tests and the ``BENCH_psi.json`` wire gate).
+
+Bit-identity: the chunk kernels are the exact per-chunk compute of the
+in-process engine (``psi_round``), so for any (mode, chunk_size,
+parallelism, latency) the intersection list — order, duplicates and all
+— equals the in-process result (property-tested).
+"""
+from __future__ import annotations
+
+import hashlib
+import queue as _queue
+import threading
+import time
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+from repro.core.bloom import BloomFilter, ShardedBloom
+from repro.core.modexp import ModexpPool, pow_chunk
+from repro.core.psi import (DEFAULT_CHUNK, PSIClient, PSIServer,
+                            _chunk_slices)
+
+__all__ = ["PSIServerEndpoint", "wire_psi_round", "serve_psi",
+           "WIRE_KINDS", "CLIENT_KINDS", "SERVER_KINDS", "blind_tag"]
+
+#: scientist -> owner message kinds
+CLIENT_KINDS = ("psi_hello", "psi_blind_chunk", "psi_stop")
+#: owner -> scientist message kinds
+SERVER_KINDS = ("psi_hello_ack", "psi_server_set_chunk", "psi_bloom_shard",
+                "psi_double_chunk", "psi_done")
+WIRE_KINDS = CLIENT_KINDS + SERVER_KINDS
+
+#: recv poll granularity / default round deadline (mirrors the split
+#: loop's owner-crash surfacing: a dead actor raises within ~1 s)
+POLL_S = 1.0
+DEFAULT_TIMEOUT_S = 120.0
+
+
+def _u8(blob: bytes) -> np.ndarray:
+    """Zero-copy uint8 view of a packed byte blob (the frame payload)."""
+    return np.frombuffer(blob, np.uint8)
+
+
+def _scalar(x) -> int:
+    """Payload scalar -> int.  Scalars ride the wire as shape-(1,)
+    arrays (``ascontiguousarray`` promotes 0-d), so plain ``int()`` is
+    deprecated on them."""
+    return int(np.asarray(x).reshape(-1)[0])
+
+
+def blind_tag(blinded_packed: bytes) -> bytes:
+    """16-byte content tag of the packed blinded upload.  Derived from
+    already-blinded group elements, so it reveals nothing the upload
+    itself doesn't; equal uploads get equal tags, which is what lets a
+    server skip a byte-identical re-upload."""
+    return hashlib.sha256(blinded_packed).digest()[:16]
+
+
+def _desync(kind: str, got, want) -> RuntimeError:
+    return RuntimeError(
+        f"PSI protocol desync: {kind} seq {got} != expected {want}")
+
+
+class PSIServerEndpoint:
+    """A data owner's PSI actor: one thread, one transport endpoint, one
+    :class:`PSIServer`.  Persistent across rounds — β-side memoization
+    (blinded own set / sharded bloom) and the client-upload cache live
+    as long as the actor, so repeat rounds get cheaper in both compute
+    and bytes.
+
+    ``handle`` processes one inbox message and returns False on
+    ``psi_stop``; ``run`` is the thread target, parking any exception in
+    ``self.error`` for the scientist's receive poll to surface (the
+    owner-crash contract split training established)."""
+
+    def __init__(self, name: str, server: PSIServer, endpoint, *,
+                 chunk_kernel_pool: Optional[ModexpPool] = None,
+                 blind_cache: Optional[Dict[bytes, bytes]] = None):
+        self.name = name
+        self.server = server
+        self.endpoint = endpoint
+        self.pool = chunk_kernel_pool or ModexpPool(0)
+        self.error: Optional[BaseException] = None
+        self.rounds_served = 0
+        # client-upload cache by content tag; an owner passes its own
+        # dict here so the byte saving survives actor re-creation
+        self._blind_cache = blind_cache if blind_cache is not None else {}
+        self._pending: Optional[dict] = None
+
+    # -- per-message protocol ----------------------------------------------
+    def handle(self, msg) -> bool:
+        if msg.kind == "psi_stop":
+            return False
+        if msg.kind == "psi_hello":
+            self._on_hello(msg)
+            return True
+        if msg.kind == "psi_blind_chunk":
+            self._on_blind_chunk(msg)
+            return True
+        raise RuntimeError(
+            f"PSI owner {self.name}: unknown message kind {msg.kind!r}")
+
+    def _on_hello(self, msg) -> None:
+        pl = msg.payload
+        mode = bytes(pl["mode"]).decode()
+        group = bytes(pl["group"]).decode()
+        srv = self.server
+        if group != srv.group:
+            raise RuntimeError(f"PSI group mismatch: client {group!r} "
+                               f"!= owner {self.name} {srv.group!r}")
+        if mode not in ("noinv", "bloom"):
+            raise RuntimeError(f"unknown PSI mode {mode!r}")
+        nb = srv._nb
+        if _scalar(pl["nb"]) != nb:
+            raise RuntimeError(f"PSI element width mismatch: client "
+                               f"{_scalar(pl['nb'])} != owner {nb}")
+        n_items = _scalar(pl["n_items"])
+        chunk_size = _scalar(pl["chunk_size"])
+        if chunk_size <= 0:
+            raise RuntimeError(f"chunk_size must be positive: {chunk_size}")
+        tag = bytes(pl["blind_tag"].tobytes())
+        cached = self._blind_cache.get(tag)
+        ep = self.endpoint
+
+        # ack + the server-set leg (variant-specific, streamed)
+        ack = {"blind_cached": np.uint8(cached is not None),
+               "n_server_items": np.int64(len(srv.items))}
+        if mode == "noinv":
+            own = srv.own_blinded_packed(self.pool, chunk_size)
+            cb = chunk_size * nb
+            n_srv = -(-len(own) // cb) if own else 0
+            ack["n_server_chunks"] = np.int64(n_srv)
+            ep.send("psi_hello_ack", ack, seq=0)
+            for k in range(n_srv):
+                ep.send("psi_server_set_chunk",
+                        {"data": _u8(own[k * cb:(k + 1) * cb]),
+                         "base": np.int64(k * chunk_size)}, seq=k)
+        else:
+            bloom = srv.build_bloom(self.pool, chunk_size)
+            ack["n_shards"] = np.int64(bloom.n_shards)
+            ack["shard_n_bits"] = np.int64(bloom.shards[0].m)
+            ack["shard_n_hashes"] = np.int64(bloom.shards[0].k)
+            ep.send("psi_hello_ack", ack, seq=0)
+            for k, frame in enumerate(bloom.shard_frames()):
+                ep.send("psi_bloom_shard", {"data": _u8(frame)}, seq=k)
+
+        n_chunks = -(-n_items // chunk_size) if n_items else 0
+        if cached is not None:
+            # the client skips its upload; replay the double-blind leg
+            # from the cached bytes (β memoized on the PSIServer too)
+            self._respond_all(cached, chunk_size)
+        else:
+            self._pending = {"tag": tag, "chunk_size": chunk_size,
+                             "remaining": n_chunks, "next_seq": 0,
+                             "parts": []}
+            if n_chunks == 0:
+                self._finish_upload()
+
+    def _on_blind_chunk(self, msg) -> None:
+        pend = self._pending
+        if pend is None:
+            raise RuntimeError("PSI protocol desync: blind chunk outside "
+                               "an upload (no hello, or already done)")
+        if int(msg.seq) != pend["next_seq"]:
+            raise _desync("psi_blind_chunk", int(msg.seq),
+                          pend["next_seq"])
+        want_base = pend["next_seq"] * pend["chunk_size"]
+        if _scalar(msg.payload["base"]) != want_base:
+            raise _desync("psi_blind_chunk base", _scalar(msg.payload["base"]),
+                          want_base)
+        blob = msg.payload["data"].tobytes()
+        self.endpoint.send("psi_double_chunk",
+                           {"data": _u8(self.server.respond_chunk(blob)),
+                            "base": np.int64(want_base)},
+                           seq=pend["next_seq"])
+        pend["parts"].append(blob)
+        pend["next_seq"] += 1
+        pend["remaining"] -= 1
+        if pend["remaining"] == 0:
+            self._finish_upload()
+
+    def _finish_upload(self) -> None:
+        pend, self._pending = self._pending, None
+        self._blind_cache[pend["tag"]] = b"".join(pend["parts"])
+        self.endpoint.send("psi_done",
+                           {"n_chunks": np.int64(pend["next_seq"])},
+                           seq=pend["next_seq"])
+        self.rounds_served += 1
+
+    def _respond_all(self, blob: bytes, chunk_size: int) -> None:
+        nb = self.server._nb
+        cb = chunk_size * nb
+        n_chunks = -(-len(blob) // cb) if blob else 0
+        for k in range(n_chunks):
+            self.endpoint.send(
+                "psi_double_chunk",
+                {"data": _u8(self.server.respond_chunk(
+                    blob[k * cb:(k + 1) * cb])),
+                 "base": np.int64(k * chunk_size)}, seq=k)
+        self.endpoint.send("psi_done", {"n_chunks": np.int64(n_chunks)},
+                           seq=n_chunks)
+        self.rounds_served += 1
+
+    # -- thread target -----------------------------------------------------
+    def run(self) -> None:
+        try:
+            while self.handle(self.endpoint.recv()):
+                pass
+        except BaseException as e:          # noqa: BLE001 — surfaced by
+            self.error = e                  # the client's recv poll
+
+
+def _recv_kind(ep, kind: str, worker: Optional[PSIServerEndpoint],
+               timeout: float):
+    """Receive the next ``kind`` message, surfacing a dead owner actor
+    within ~1 s (short poll) instead of after the full timeout."""
+    deadline = time.monotonic() + timeout
+    while True:
+        try:
+            return ep.recv_kind(kind, timeout=POLL_S)
+        except _queue.Empty:
+            if worker is not None and worker.error is not None:
+                raise RuntimeError(
+                    f"PSI owner worker {worker.name!r} failed"
+                ) from worker.error
+            if time.monotonic() > deadline:
+                raise RuntimeError(
+                    f"timed out waiting for {kind!r}"
+                    + (f" from {worker.name!r}" if worker else ""))
+
+
+def wire_psi_round(client: PSIClient, ep, *,
+                   worker: Optional[PSIServerEndpoint] = None,
+                   pool: Optional[ModexpPool] = None,
+                   chunk_size: int = DEFAULT_CHUNK,
+                   timeout: float = DEFAULT_TIMEOUT_S
+                   ) -> Tuple[List[str], dict]:
+    """One full PSI round driven from the scientist's endpoint ``ep``.
+
+    Pipelining: the memoized blinded upload goes out in one burst (chunk
+    k+1 is on the wire while the server exponentiates chunk k), then the
+    server's two response streams are consumed as they arrive, with the
+    client chunk kernels running through ``pool.imap`` so client-side
+    lifting overlaps both the wire and the server's thread.  Wall-clock
+    under injected one-way latency L is therefore ``compute + O(L)``,
+    not ``n_chunks * 2L + compute`` (gated in ``BENCH_psi.json``).
+
+    Returns ``(intersection, stats)`` — the intersection is bit-identical
+    to the in-process ``psi_round`` for the same party item lists, and
+    ``stats`` carries the same protocol-byte keys plus the wire flags
+    (``upload_skipped``)."""
+    pool = pool or ModexpPool(0)
+    nb, p = client._nb, client._p
+    n_items = len(client.items)
+    n_chunks = -(-n_items // chunk_size) if n_items else 0
+    blind_was_cached = client._blinded_packed is not None
+    blinded = client.blind_packed(pool, chunk_size)
+
+    ep.send("psi_hello", {
+        "mode": _u8(client.mode.encode()),
+        "group": _u8(client.group.encode()),
+        "blind_tag": _u8(blind_tag(blinded)),
+        "n_items": np.int64(n_items),
+        "chunk_size": np.int64(chunk_size),
+        "nb": np.int64(nb),
+    }, seq=0)
+    ack = _recv_kind(ep, "psi_hello_ack", worker, timeout)
+    upload_skipped = bool(_scalar(ack.payload["blind_cached"]))
+    n_server_items = _scalar(ack.payload["n_server_items"])
+
+    if not upload_skipped:
+        for k, (lo, hi) in enumerate(_chunk_slices(n_items, chunk_size)):
+            ep.send("psi_blind_chunk",
+                    {"data": _u8(blinded[lo * nb:hi * nb]),
+                     "base": np.int64(lo)}, seq=k)
+
+    stats = {
+        "mode": client.mode,
+        "client_upload_bytes": len(blinded),
+        "blind_cached": blind_was_cached,
+        "upload_skipped": upload_skipped,
+        "chunk_size": chunk_size,
+        "n_chunks": max(1, n_chunks),
+        "peak_inflight_elements": min(n_items, chunk_size * pool.inflight),
+        "parallelism": pool.parallelism if pool.is_parallel else 0,
+        "uncompressed_server_set_bytes": nb * n_server_items,
+    }
+
+    if client.mode == "noinv":
+        # server-set stream, lifted to the double-blinded domain as it
+        # arrives (imap: receive / lift / server-respond all overlap)
+        n_srv = _scalar(ack.payload["n_server_chunks"])
+
+        def _srv_chunks():
+            for k in range(n_srv):
+                m = _recv_kind(ep, "psi_server_set_chunk", worker, timeout)
+                if int(m.seq) != k:
+                    raise _desync("psi_server_set_chunk", int(m.seq), k)
+                yield (m.payload["data"].tobytes(), client._blind_exp,
+                       p, nb)
+
+        t_blob = b"".join(pool.imap(pow_chunk, _srv_chunks()))
+
+        d_parts: List[bytes] = []
+        for k in range(n_chunks):
+            m = _recv_kind(ep, "psi_double_chunk", worker, timeout)
+            if int(m.seq) != k:
+                raise _desync("psi_double_chunk", int(m.seq), k)
+            d_parts.append(m.payload["data"].tobytes())
+        d_blob = b"".join(d_parts)
+        inter = client.match_double_blinded(d_blob, t_blob)
+        stats["server_set_bytes"] = len(t_blob)
+        stats["server_response_bytes"] = len(d_blob) + len(t_blob)
+    else:
+        n_shards = _scalar(ack.payload["n_shards"])
+        m_bits = _scalar(ack.payload["shard_n_bits"])
+        k_hashes = _scalar(ack.payload["shard_n_hashes"])
+        shards = []
+        for k in range(n_shards):
+            m = _recv_kind(ep, "psi_bloom_shard", worker, timeout)
+            if int(m.seq) != k:
+                raise _desync("psi_bloom_shard", int(m.seq), k)
+            shards.append(BloomFilter.from_bytes(
+                m.payload["data"].tobytes(), m_bits, k_hashes))
+        bloom = ShardedBloom(shards) if shards else None
+
+        bases: List[int] = []
+
+        def _dbl_chunks():
+            for k in range(n_chunks):
+                m = _recv_kind(ep, "psi_double_chunk", worker, timeout)
+                if int(m.seq) != k:
+                    raise _desync("psi_double_chunk", int(m.seq), k)
+                bases.append(_scalar(m.payload["base"]))
+                yield (m.payload["data"].tobytes(), client.unblind_exp,
+                       p, nb)
+
+        inter = []
+        for unb in pool.imap(pow_chunk, _dbl_chunks()):
+            inter.extend(client.match_bloom_chunk(unb, bloom,
+                                                  bases.pop(0)))
+        stats["bloom_bytes"] = bloom.nbytes() if bloom else 0
+        stats["bloom_shards"] = n_shards
+        stats["server_response_bytes"] = (len(blinded)
+                                          + stats["bloom_bytes"])
+
+    done = _recv_kind(ep, "psi_done", worker, timeout)
+    if _scalar(done.payload["n_chunks"]) != n_chunks:
+        raise _desync("psi_done n_chunks",
+                      _scalar(done.payload["n_chunks"]), n_chunks)
+    return inter, stats
+
+
+def serve_psi(name: str, server: PSIServer, endpoint
+              ) -> Tuple[PSIServerEndpoint, threading.Thread]:
+    """Spawn a PSI server actor on its own daemon thread (the owner-side
+    analogue of the split loop's worker threads).  Returns
+    ``(worker, thread)``; send ``psi_stop`` on the peer endpoint and
+    join to shut down."""
+    worker = PSIServerEndpoint(name, server, endpoint)
+    th = threading.Thread(target=worker.run, daemon=True,
+                          name=f"psi-{name}")
+    th.start()
+    return worker, th

@@ -132,49 +132,80 @@ class VerticalSession:
     def resolve(self, *, group: str = "modp2048",
                 fp_rate: float = 1e-9, mode: str = DEFAULT_MODE,
                 parallelism: int = 0,
-                chunk_size: int = DEFAULT_CHUNK) -> dict:
+                chunk_size: int = DEFAULT_CHUNK,
+                backend: str = "direct", latency_s: float = 0.0,
+                bandwidth_bps: Optional[float] = None,
+                timeout: float = 120.0) -> dict:
         """The paper's §3.1 protocol: the scientist runs DH-PSI pairwise
         with each owner (scientist = client, so only the scientist learns
         each intersection), intersects globally, broadcasts the shared IDs,
         and every party filter-and-sorts.  Returns the stats dict.
 
         The scientist blinds its set ONCE and reuses the blinded upload
-        for every owner round; each owner's response-side state (sharded
-        Bloom or blinded own set, by ``mode``) is likewise per-session.
-        ``parallelism`` forks that many modexp workers shared across all
-        owner rounds (0 = the bit-identical serial engine);
-        ``chunk_size`` bounds the streamed chunks so million-ID sets
-        never materialize one giant blinded batch."""
+        for every owner round (logged as a ``psi_blind_reuse`` transcript
+        entry from the second round on); each owner's response-side state
+        (sharded Bloom or blinded own set, by ``mode``) is likewise
+        per-session.  ``parallelism`` forks that many modexp workers
+        shared across all owner rounds (0 = the bit-identical serial
+        engine); ``chunk_size`` bounds the streamed chunks so million-ID
+        sets never materialize one giant blinded batch.
+
+        ``backend`` selects the execution engine:
+
+          * ``"direct"`` (default) — the in-process reference engine
+            (``core.psi.psi_round``): party objects exchange chunks by
+            direct call, byte counts are protocol-data tallies.
+          * ``"queue"`` — *wire-native* resolution: each owner runs a
+            ``PSIServerEndpoint`` actor on its own thread behind a
+            serialized ``federation.transport`` channel, every protocol
+            leg crosses as a framed ``Message`` (pipelined, chunk k+1
+            overlapping chunk k's server modexp), and the transcript +
+            stats carry **measured** per-party wire bytes.  ``latency_s``
+            / ``bandwidth_bps`` inject per-message transit time (queue
+            only); ``timeout`` bounds each receive so a wedged owner
+            fails the resolve instead of hanging it.
+
+        The intersection is bit-identical across backends, chunk sizes,
+        and parallelism (property-tested)."""
+        if backend not in ("direct", "queue"):
+            raise ValueError(f"unknown resolve backend {backend!r}")
+        if backend == "direct" and (latency_s or bandwidth_bps):
+            raise ValueError("latency_s/bandwidth_bps model the wire — "
+                             "they require backend='queue'")
         stats: dict = {"rounds": [], "global_intersection": 0,
                        "mode": mode, "parallelism": parallelism,
-                       "chunk_size": chunk_size}
+                       "chunk_size": chunk_size, "backend": backend}
+        if backend == "queue":
+            stats["latency_s"] = latency_s
+            stats["per_party_wire"] = {}
         global_ids = set(self.scientist.ids)
         client = self.scientist.psi_client(group, mode)
         with ModexpPool(parallelism) as pool:
             for owner in self.owners:
-                server = owner.psi_server(group, fp_rate)
-                wire: Dict[str, List[int]] = {}
-
-                def tally(kind, n_bytes, wire=wire):
-                    c = wire.setdefault(kind, [0, 0])
-                    c[0] += 1
-                    c[1] += n_bytes
-
-                inter, rstats = psi_round(
-                    client, server, pool=pool, chunk_size=chunk_size,
-                    on_message=tally)
+                if backend == "queue":
+                    inter, rstats = self._resolve_owner_wire(
+                        client, owner, group=group, fp_rate=fp_rate,
+                        pool=pool, chunk_size=chunk_size,
+                        latency_s=latency_s, bandwidth_bps=bandwidth_bps,
+                        timeout=timeout, stats=stats)
+                else:
+                    inter, rstats = self._resolve_owner_direct(
+                        client, owner, group=group, fp_rate=fp_rate,
+                        pool=pool, chunk_size=chunk_size)
                 # the ENGINE's parallelism (0 when the host can't fork),
                 # not the requested value — stats must not claim a pool
                 # that silently degraded to serial
                 stats["parallelism"] = rstats["parallelism"]
+                if rstats["blind_cached"] or rstats.get("upload_skipped"):
+                    # the memoized-blind reuse is protocol-relevant (it is
+                    # why owner rounds 2..N are cheap) — record it
+                    self._log("scientist", owner.name, "psi_blind_reuse",
+                              reused_upload_bytes=
+                              rstats["client_upload_bytes"],
+                              recompute_skipped=rstats["blind_cached"],
+                              upload_skipped=bool(
+                                  rstats.get("upload_skipped", False)))
                 global_ids &= set(inter)
-                # one transcript entry per wire-message kind, aggregated
-                # (per-chunk entries would swamp the transcript at 1e6)
-                for kind, (n_msgs, n_bytes) in wire.items():
-                    frm, to = (("scientist", owner.name)
-                               if kind == "psi_blind_chunk"
-                               else (owner.name, "scientist"))
-                    self._log(frm, to, kind, bytes=n_bytes, chunks=n_msgs)
                 stats["rounds"].append({
                     "owner": owner.name, "intersection_size": len(inter),
                     "client_upload_bytes": rstats["client_upload_bytes"],
@@ -185,7 +216,12 @@ class VerticalSession:
                     **({"bloom_bytes": rstats["bloom_bytes"],
                         "bloom_shards": rstats["bloom_shards"]}
                        if mode == "bloom" else
-                       {"server_set_bytes": rstats["server_set_bytes"]})})
+                       {"server_set_bytes": rstats["server_set_bytes"]}),
+                    **({"upload_skipped": rstats["upload_skipped"],
+                        "upload_wire_bytes": rstats["upload_wire_bytes"],
+                        "download_wire_bytes":
+                            rstats["download_wire_bytes"]}
+                       if backend == "queue" else {})})
         stats["global_intersection"] = len(global_ids)
         self.scientist._align(global_ids)
         for owner in self.owners:
@@ -198,6 +234,77 @@ class VerticalSession:
         self._resolved = True
         self.resolve_stats = stats
         return stats
+
+    def _resolve_owner_direct(self, client, owner, *, group, fp_rate,
+                              pool, chunk_size):
+        """One in-process PSI round (the PR 4 reference engine), with
+        per-kind transcript tallies from the engine's message callback."""
+        server = owner.psi_server(group, fp_rate)
+        wire: Dict[str, List[int]] = {}
+
+        def tally(kind, n_bytes):
+            c = wire.setdefault(kind, [0, 0])
+            c[0] += 1
+            c[1] += n_bytes
+
+        inter, rstats = psi_round(client, server, pool=pool,
+                                  chunk_size=chunk_size, on_message=tally)
+        # one transcript entry per wire-message kind, aggregated
+        # (per-chunk entries would swamp the transcript at 1e6)
+        for kind, (n_msgs, n_bytes) in wire.items():
+            frm, to = (("scientist", owner.name)
+                       if kind == "psi_blind_chunk"
+                       else (owner.name, "scientist"))
+            self._log(frm, to, kind, bytes=n_bytes, chunks=n_msgs)
+        return inter, rstats
+
+    def _resolve_owner_wire(self, client, owner, *, group, fp_rate, pool,
+                            chunk_size, latency_s, bandwidth_bps, timeout,
+                            stats):
+        """One wire-native PSI round: the owner's actor on its own thread
+        behind a serialized channel, every leg a measured Message.  The
+        transcript gets one aggregated entry per kind per direction with
+        *measured* payload and wire bytes, and ``stats['per_party_wire']``
+        the owner's channel totals."""
+        from repro.federation.psi_transport import wire_psi_round
+
+        ep_sci, ep_own = transport.channel_pair(
+            "scientist", owner.name, backend="queue",
+            latency_s=latency_s, bandwidth_bps=bandwidth_bps)
+        worker = owner.psi_endpoint(ep_own, group, fp_rate, pool=pool)
+        th = threading.Thread(target=worker.run, daemon=True,
+                              name=f"psi-{owner.name}")
+        th.start()
+        try:
+            inter, rstats = wire_psi_round(
+                client, ep_sci, worker=worker, pool=pool,
+                chunk_size=chunk_size, timeout=timeout)
+        finally:
+            ep_sci.send("psi_stop", {})
+            th.join(timeout=10.0)
+
+        sent, rcvd = ep_sci.sent_stats, ep_sci.recv_stats
+        for kind, st in sorted(sent["by_kind"].items()):
+            if kind == "psi_stop":
+                continue
+            self._log("scientist", owner.name, kind, measured=True,
+                      bytes=st["payload_bytes"],
+                      wire_bytes=st["wire_bytes"], chunks=st["count"])
+        for kind, st in sorted(rcvd["by_kind"].items()):
+            self._log(owner.name, "scientist", kind, measured=True,
+                      bytes=st["payload_bytes"],
+                      wire_bytes=st["wire_bytes"], chunks=st["count"])
+        stats["per_party_wire"][owner.name] = {
+            "sent_wire_bytes": sent["wire_bytes"],
+            "recv_wire_bytes": rcvd["wire_bytes"],
+            "messages": sent["messages"] + rcvd["messages"],
+        }
+        # the blind upload specifically (zero when the owner had it
+        # cached) — hello/stop framing lives in per_party_wire totals
+        rstats["upload_wire_bytes"] = sent["by_kind"].get(
+            "psi_blind_chunk", {"wire_bytes": 0})["wire_bytes"]
+        rstats["download_wire_bytes"] = rcvd["wire_bytes"]
+        return inter, rstats
 
     # -------------------------------------------------------------- 2. build
 

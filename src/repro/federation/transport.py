@@ -208,12 +208,17 @@ class Channel:
     def __init__(self, sender: str, receiver: str, *,
                  serialize: bool = True, latency_s: float = 0.0,
                  bandwidth_bps: Optional[float] = None,
-                 spin_s: Optional[float] = None):
+                 spin_s: Optional[float] = None, tap=None):
         self.sender, self.receiver = sender, receiver
         self.serialize = serialize
         self.latency_s = latency_s
         self.bandwidth_bps = bandwidth_bps
         self.spin_s = SPIN_WAIT_S if spin_s is None else spin_s
+        # observation hook: tap(msg, blob) per send, with the serialized
+        # frame (None on the direct backend).  The privacy-on-the-wire
+        # tests capture full transcripts through this without touching
+        # the send path's behavior.
+        self.tap = tap
         self._q: "queue.Queue[Message]" = queue.Queue()
         self._lock = threading.Lock()
         self._sendbuf = bytearray()     # reusable pack scratch
@@ -236,6 +241,7 @@ class Channel:
     def send(self, kind: str, payload: Dict[str, np.ndarray], *,
              seq: int = 0) -> Message:
         pb = _payload_nbytes(payload)
+        blob = None
         if self.serialize:
             used = _pack_into(payload, self._sendbuf)
             blob = bytes(memoryview(self._sendbuf)[:used])
@@ -245,6 +251,8 @@ class Channel:
             wb = pb                                # by-reference handoff
         msg = Message(self.sender, self.receiver, kind, payload, seq=seq,
                       payload_bytes=pb, wire_bytes=wb)
+        if self.tap is not None:
+            self.tap(msg, blob)
         if self.latency_s or self.bandwidth_bps:
             transit = self.latency_s + (wb / self.bandwidth_bps
                                         if self.bandwidth_bps else 0.0)
@@ -311,17 +319,18 @@ class Endpoint:
 def channel_pair(a: str, b: str, *, backend: str = "queue",
                  latency_s: float = 0.0,
                  bandwidth_bps: Optional[float] = None,
-                 spin_s: Optional[float] = None
+                 spin_s: Optional[float] = None, tap=None
                  ) -> Tuple[Endpoint, Endpoint]:
     """Build the duplex boundary between parties ``a`` and ``b``.
-    Returns ``(endpoint_a, endpoint_b)``."""
+    Returns ``(endpoint_a, endpoint_b)``.  ``tap`` observes every send
+    on both directions (see :class:`Channel`)."""
     if backend not in ("queue", "direct"):
         raise ValueError(f"unknown transport backend {backend!r}")
     ser = backend == "queue"
     ab = Channel(a, b, serialize=ser, latency_s=latency_s,
-                 bandwidth_bps=bandwidth_bps, spin_s=spin_s)
+                 bandwidth_bps=bandwidth_bps, spin_s=spin_s, tap=tap)
     ba = Channel(b, a, serialize=ser, latency_s=latency_s,
-                 bandwidth_bps=bandwidth_bps, spin_s=spin_s)
+                 bandwidth_bps=bandwidth_bps, spin_s=spin_s, tap=tap)
     return Endpoint(a, b, ab, ba), Endpoint(b, a, ba, ab)
 
 

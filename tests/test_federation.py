@@ -132,8 +132,10 @@ def test_scientist_path_receives_only_cut_width_payloads():
     # and the reverse direction carries only protocol messages
     from_scientist = {m["kind"] for m in session.transcript
                       if m["from"] == "scientist"}
-    assert from_scientist <= {"psi_blind_chunk", "resolved_ids",
-                              "cut_gradients"}
+    # (psi_blind_reuse is reuse *metadata* the session records, not a
+    # payload-bearing message — no bytes cross for it)
+    assert from_scientist <= {"psi_blind_chunk", "psi_blind_reuse",
+                              "resolved_ids", "cut_gradients"}
 
 
 def test_session_guardrails():

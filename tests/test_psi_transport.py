@@ -1,0 +1,736 @@
+"""Wire-native PSI (ISSUE 5): entity resolution over the transport layer
+must be bit-identical to the in-process engine, survive protocol chaos
+(reordered chunks, mid-round owner crashes, degenerate sets) with correct
+results or clean surfaced errors, keep its frame layouts frozen (golden
+conformance), and leak nothing but blinded bytes onto the wire."""
+import struct
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from repro.testing.hypo import given, settings, strategies as st
+
+from repro.core.modexp import ModexpPool
+from repro.core.psi import GROUPS, PSIClient, PSIServer, psi_round
+from repro.federation import transport
+from repro.federation.psi_transport import (CLIENT_KINDS, SERVER_KINDS,
+                                            WIRE_KINDS, PSIServerEndpoint,
+                                            blind_tag, serve_psi,
+                                            wire_psi_round)
+from repro.federation.transport import _pack, _unpack
+
+GROUP = "modp512"
+NB = GROUPS[GROUP][2]
+
+
+def _wire_round(xs, ys, *, mode="noinv", chunk_size=16, latency_s=0.0,
+                pool=None, timeout=120.0):
+    """One full wire round over a fresh queue channel pair.  Returns
+    (intersection, stats, client_endpoint, worker)."""
+    client = PSIClient(xs, GROUP, mode=mode)
+    server = PSIServer(ys, group=GROUP)
+    ep_c, ep_s = transport.channel_pair("scientist", "owner0",
+                                        backend="queue",
+                                        latency_s=latency_s)
+    worker, th = serve_psi("owner0", server, ep_s)
+    try:
+        inter, stats = wire_psi_round(client, ep_c, worker=worker,
+                                      pool=pool, chunk_size=chunk_size,
+                                      timeout=timeout)
+    finally:
+        ep_c.send("psi_stop", {})
+        th.join(timeout=10.0)
+    return inter, stats, ep_c, worker
+
+
+# ---------------------------------------------------------------------------
+# bit-identity: wire engine == in-process engine
+# ---------------------------------------------------------------------------
+
+
+@given(st.lists(st.text(min_size=1, max_size=8), min_size=0, max_size=40),
+       st.lists(st.text(min_size=1, max_size=8), min_size=0, max_size=40),
+       st.integers(1, 17),
+       st.sampled_from(["noinv", "bloom"]))
+@settings(max_examples=8, deadline=None)
+def test_wire_round_bit_identical_to_in_process(xs, ys, chunk, mode):
+    """Random uneven sets (duplicates allowed), both protocol variants,
+    any chunk size: the wire engine returns the exact intersection list
+    — same elements, same client order, same duplicate multiplicity —
+    as the in-process PR 4 engine."""
+    ref, _ = psi_round(PSIClient(xs, GROUP, mode=mode),
+                       PSIServer(ys, group=GROUP), chunk_size=chunk)
+    got, stats = _wire_round(xs, ys, mode=mode, chunk_size=chunk)[:2]
+    assert got == ref
+    assert sorted(set(got)) == sorted(set(xs) & set(ys))
+    assert stats["n_chunks"] == max(1, -(-len(xs) // chunk))
+
+
+def test_wire_round_parallel_pool_bit_identical():
+    """A parallel client-side modexp pool changes nothing about the
+    intersection the wire engine returns."""
+    xs = [f"id-{i}" for i in range(120)] + ["dup"] * 3
+    ys = [f"id-{i + 40}" for i in range(120)] + ["dup"]
+    ref, _ = psi_round(PSIClient(xs, GROUP), PSIServer(ys, group=GROUP),
+                       chunk_size=32)
+    with ModexpPool(2) as pool:
+        got, stats, _, _ = _wire_round(xs, ys, chunk_size=32, pool=pool)
+    assert got == ref
+    assert got.count("dup") == 3
+
+
+@pytest.mark.parametrize("chunk_size", [13, 64, 4096])
+def test_session_resolve_queue_matches_direct(chunk_size):
+    """session.resolve(backend="queue") aligns every party to the exact
+    ID list the in-process engine produces, at any chunk size."""
+    from repro.data import make_vertical_mnist_parties
+    from repro.federation import VerticalSession, feature_parties
+
+    def build():
+        sci, owners = make_vertical_mnist_parties(180, seed=5,
+                                                  keep_frac=0.8)
+        return VerticalSession(*feature_parties(sci, owners))
+
+    s_d, s_q = build(), build()
+    st_d = s_d.resolve(group=GROUP)
+    st_q = s_q.resolve(group=GROUP, backend="queue",
+                       chunk_size=chunk_size)
+    assert s_d.scientist.ids == s_q.scientist.ids
+    assert (st_d["global_intersection"] == st_q["global_intersection"])
+    for o_d, o_q in zip(s_d.owners, s_q.owners):
+        assert o_d.ids == o_q.ids
+    assert st_q["backend"] == "queue"
+    # protocol-data byte accounting matches the in-process engine's
+    for r_d, r_q in zip(st_d["rounds"], st_q["rounds"]):
+        assert r_q["client_upload_bytes"] == r_d["client_upload_bytes"]
+        assert r_q["upload_wire_bytes"] > 0
+        assert r_q["download_wire_bytes"] > 0
+
+
+def test_session_resolve_queue_parallel_pool_matches_serial():
+    """parallelism on the queue backend: ONE modexp pool is shared by
+    the client driver and every owner actor thread (executors are
+    thread-safe), and the result stays bit-identical to the serial
+    direct engine."""
+    from repro.data import make_vertical_mnist_parties
+    from repro.federation import VerticalSession, feature_parties
+
+    def build():
+        sci, owners = make_vertical_mnist_parties(160, seed=7,
+                                                  keep_frac=0.85)
+        return VerticalSession(*feature_parties(sci, owners))
+
+    s_q, s_d = build(), build()
+    st_q = s_q.resolve(group=GROUP, backend="queue", parallelism=2,
+                       chunk_size=32)
+    s_d.resolve(group=GROUP)
+    assert s_q.scientist.ids == s_d.scientist.ids
+    if st_q["parallelism"]:                      # host allowed workers
+        assert st_q["parallelism"] == 2
+
+
+def test_session_resolve_queue_bloom_mode():
+    from repro.data import make_vertical_mnist_parties
+    from repro.federation import VerticalSession, feature_parties
+    sci, owners = make_vertical_mnist_parties(120, seed=2, keep_frac=0.9)
+    s_d = VerticalSession(*feature_parties(sci, owners))
+    sci2, owners2 = make_vertical_mnist_parties(120, seed=2,
+                                                keep_frac=0.9)
+    s_q = VerticalSession(*feature_parties(sci2, owners2))
+    st_d = s_d.resolve(group=GROUP, mode="bloom")
+    st_q = s_q.resolve(group=GROUP, mode="bloom", backend="queue",
+                       chunk_size=32)
+    assert s_d.scientist.ids == s_q.scientist.ids
+    assert st_q["rounds"][0]["bloom_bytes"] == \
+        st_d["rounds"][0]["bloom_bytes"]
+    kinds = {m["kind"] for m in s_q.transcript}
+    assert "psi_bloom_shard" in kinds
+    assert "psi_server_set_chunk" not in kinds
+
+
+def test_session_resolve_backend_guardrails():
+    from repro.data import make_vertical_mnist_parties
+    from repro.federation import VerticalSession, feature_parties
+    sci, owners = make_vertical_mnist_parties(60, seed=0)
+    session = VerticalSession(*feature_parties(sci, owners))
+    with pytest.raises(ValueError, match="backend"):
+        session.resolve(group=GROUP, backend="carrier-pigeon")
+    with pytest.raises(ValueError, match="queue"):
+        session.resolve(group=GROUP, backend="direct", latency_s=0.01)
+
+
+# ---------------------------------------------------------------------------
+# blinded-upload memoization on the wire (measured bytes, not code)
+# ---------------------------------------------------------------------------
+
+
+def test_repeat_round_same_owner_skips_upload_bytes():
+    """Round 2 against the same owner transfers ZERO psi_blind_chunk
+    bytes: the server cached the upload by content tag.  Asserted on
+    measured channel stats across two owner rounds."""
+    xs = [f"id-{i}" for i in range(90)]
+    ys = [f"id-{i + 30}" for i in range(90)]
+    client = PSIClient(xs, GROUP)
+    server = PSIServer(ys, group=GROUP)
+    ep_c, ep_s = transport.channel_pair("scientist", "owner0",
+                                        backend="queue")
+    worker, th = serve_psi("owner0", server, ep_s)
+    try:
+        i1, st1 = wire_psi_round(client, ep_c, worker=worker,
+                                 chunk_size=16)
+        sent_after_r1 = ep_c.sent_stats["by_kind"]["psi_blind_chunk"].copy()
+        i2, st2 = wire_psi_round(client, ep_c, worker=worker,
+                                 chunk_size=16)
+    finally:
+        ep_c.send("psi_stop", {})
+        th.join(timeout=10.0)
+    assert i1 == i2
+    assert not st1["upload_skipped"] and st2["upload_skipped"]
+    after_r2 = ep_c.sent_stats["by_kind"]["psi_blind_chunk"]
+    # byte saving: round 2 added no blind-chunk traffic at all
+    assert after_r2["payload_bytes"] == sent_after_r1["payload_bytes"]
+    assert after_r2["count"] == sent_after_r1["count"]
+    # and round 1's upload was exactly the packed blinded set (+ the
+    # 8-byte base header per chunk)
+    n_chunks = -(-len(xs) // 16)
+    assert sent_after_r1["payload_bytes"] == \
+        st1["client_upload_bytes"] + 8 * n_chunks
+    assert worker.rounds_served == 2
+
+
+def test_owner_level_blind_cache_survives_actor_recreation():
+    """The upload cache lives on the DataOwner, not the actor: a fresh
+    channel + fresh PSIServerEndpoint for the same owner still skips the
+    re-upload (the session creates actors per resolve)."""
+    from repro.federation.parties import DataOwner
+    owner = DataOwner("o0", [f"id-{i}" for i in range(40)],
+                      np.zeros((40, 2), np.float32))
+    client = PSIClient([f"id-{i + 10}" for i in range(40)], GROUP)
+    uploads = []
+    for _ in range(2):
+        ep_c, ep_s = transport.channel_pair("scientist", "o0",
+                                            backend="queue")
+        worker = owner.psi_endpoint(ep_s, GROUP)
+        th = threading.Thread(target=worker.run, daemon=True)
+        th.start()
+        try:
+            _, stats = wire_psi_round(client, ep_c, worker=worker,
+                                      chunk_size=8)
+        finally:
+            ep_c.send("psi_stop", {})
+            th.join(timeout=10.0)
+        uploads.append(
+            ep_c.sent_stats["by_kind"].get(
+                "psi_blind_chunk", {"payload_bytes": 0})["payload_bytes"])
+    assert uploads[0] > 0 and uploads[1] == 0
+
+
+def test_session_resolve_logs_blind_reuse_transcript_entry():
+    """Owner rounds 2..N reuse the memoized blind — the session must say
+    so in the transcript (the PR 4 gap this PR closes), on both
+    backends."""
+    from repro.data import make_vertical_mnist_parties
+    from repro.federation import VerticalSession, feature_parties
+    for backend in ("direct", "queue"):
+        sci, owners = make_vertical_mnist_parties(100, seed=1, n_owners=4)
+        session = VerticalSession(*feature_parties(sci, owners))
+        stats = session.resolve(group=GROUP, chunk_size=32,
+                                backend=backend)
+        reuse = [m for m in session.transcript
+                 if m["kind"] == "psi_blind_reuse"]
+        assert [m["to"] for m in reuse] == ["owner1", "owner2", "owner3"]
+        for m in reuse:
+            assert m["recompute_skipped"] is True
+            assert m["reused_upload_bytes"] == \
+                stats["rounds"][0]["client_upload_bytes"]
+
+
+# ---------------------------------------------------------------------------
+# chaos: reordering, interleaving, crashes, timeouts, degenerate sets
+# ---------------------------------------------------------------------------
+
+
+class _ScramblingEndpoint:
+    """Wraps an owner-side endpoint, reordering the first two outgoing
+    messages of one kind (chaos: a misbehaving network/owner)."""
+
+    def __init__(self, inner, kind):
+        self._inner, self._kind, self._held = inner, kind, None
+
+    def send(self, kind, payload, *, seq=0):
+        if kind == self._kind and self._held is None:
+            self._held = (kind, payload, seq)
+            return None
+        out = self._inner.send(kind, payload, seq=seq)
+        if self._held is not None and kind == self._kind:
+            k, p, s = self._held
+            self._held = None
+            self._inner.send(k, p, seq=s)
+        return out
+
+    def __getattr__(self, name):
+        return getattr(self._inner, name)
+
+
+@pytest.mark.parametrize("kind", ["psi_double_chunk",
+                                  "psi_server_set_chunk"])
+def test_reordered_chunks_raise_clean_desync(kind):
+    """Swapped same-kind chunks must fail loudly with a protocol-desync
+    error on the scientist side — never a silently wrong intersection."""
+    xs = [f"id-{i}" for i in range(60)]
+    ys = [f"id-{i + 20}" for i in range(60)]
+    client = PSIClient(xs, GROUP)
+    server = PSIServer(ys, group=GROUP)
+    ep_c, ep_s = transport.channel_pair("scientist", "owner0",
+                                        backend="queue")
+    worker = PSIServerEndpoint("owner0", server,
+                               _ScramblingEndpoint(ep_s, kind))
+    th = threading.Thread(target=worker.run, daemon=True)
+    th.start()
+    try:
+        with pytest.raises(RuntimeError, match="desync"):
+            wire_psi_round(client, ep_c, worker=worker, chunk_size=8,
+                           timeout=30.0)
+    finally:
+        ep_c.send("psi_stop", {})
+        th.join(timeout=10.0)
+
+
+class _DelayingEndpoint:
+    """Holds back every message of one kind until ``psi_done`` — the
+    legal-but-hostile arrival order (kinds fully interleaved/inverted)."""
+
+    def __init__(self, inner, kind):
+        self._inner, self._kind, self._held = inner, kind, []
+
+    def send(self, kind, payload, *, seq=0):
+        if kind == self._kind:
+            self._held.append((kind, payload, seq))
+            return None
+        if kind == "psi_done":
+            for k, p, s in self._held:
+                self._inner.send(k, p, seq=s)
+            self._held = []
+        return self._inner.send(kind, payload, seq=seq)
+
+    def __getattr__(self, name):
+        return getattr(self._inner, name)
+
+
+def test_desynchronized_kind_arrival_still_exact():
+    """Cross-kind arrival order is NOT part of the protocol contract:
+    with the whole server-set stream arriving after every double-blind
+    response, the stash-based receive still produces the exact
+    intersection."""
+    xs = [f"id-{i}" for i in range(50)] + ["dup"] * 2
+    ys = [f"id-{i + 15}" for i in range(50)] + ["dup"]
+    ref, _ = psi_round(PSIClient(xs, GROUP), PSIServer(ys, group=GROUP),
+                       chunk_size=8)
+    client = PSIClient(xs, GROUP)
+    server = PSIServer(ys, group=GROUP)
+    ep_c, ep_s = transport.channel_pair("scientist", "owner0",
+                                        backend="queue")
+    worker = PSIServerEndpoint(
+        "owner0", server,
+        _DelayingEndpoint(ep_s, "psi_server_set_chunk"))
+    th = threading.Thread(target=worker.run, daemon=True)
+    th.start()
+    try:
+        inter, _ = wire_psi_round(client, ep_c, worker=worker,
+                                  chunk_size=8, timeout=30.0)
+    finally:
+        ep_c.send("psi_stop", {})
+        th.join(timeout=10.0)
+    assert inter == ref
+
+
+def test_owner_crash_mid_round_surfaces_cleanly(monkeypatch):
+    """An owner actor that dies mid-round (after its first double-blind
+    chunk) surfaces as a named RuntimeError on the scientist side within
+    the poll interval — not a hang, not a full-timeout stall."""
+    calls = {"n": 0}
+    real = PSIServer.respond_chunk
+
+    def flaky(self, packed):
+        calls["n"] += 1
+        if calls["n"] > 1:
+            raise ValueError("owner-side kaboom")
+        return real(self, packed)
+
+    monkeypatch.setattr(PSIServer, "respond_chunk", flaky)
+    t0 = time.monotonic()
+    with pytest.raises(RuntimeError, match="PSI owner worker 'owner0'"):
+        _wire_round([f"id-{i}" for i in range(60)],
+                    [f"id-{i + 20}" for i in range(60)], chunk_size=8,
+                    timeout=60.0)
+    assert time.monotonic() - t0 < 30.0
+
+
+def test_session_resolve_queue_surfaces_owner_crash(monkeypatch):
+    """The same crash through the full session.resolve surface."""
+    from repro.data import make_vertical_mnist_parties
+    from repro.federation import VerticalSession, feature_parties
+
+    def boom(self, packed):
+        raise ValueError("owner-side kaboom")
+
+    monkeypatch.setattr(PSIServer, "respond_chunk", boom)
+    sci, owners = make_vertical_mnist_parties(80, seed=0)
+    session = VerticalSession(*feature_parties(sci, owners))
+    t0 = time.monotonic()
+    with pytest.raises(RuntimeError, match="PSI owner worker"):
+        session.resolve(group=GROUP, backend="queue", chunk_size=16)
+    assert time.monotonic() - t0 < 30.0
+
+
+def test_unresponsive_owner_times_out_cleanly():
+    """A wedged owner (thread never started) bounds the round by the
+    receive deadline instead of hanging the scientist forever."""
+    client = PSIClient(["a", "b"], GROUP)
+    ep_c, ep_s = transport.channel_pair("scientist", "owner0",
+                                        backend="queue")
+    t0 = time.monotonic()
+    with pytest.raises(RuntimeError, match="timed out"):
+        wire_psi_round(client, ep_c, chunk_size=1, timeout=2.5)
+    assert 2.0 < time.monotonic() - t0 < 10.0
+
+
+def test_group_mismatch_surfaces_cleanly():
+    client = PSIClient(["a", "b"], "modp512")
+    server = PSIServer(["b", "c"], group="modp2048")
+    ep_c, ep_s = transport.channel_pair("scientist", "owner0",
+                                        backend="queue")
+    worker, th = serve_psi("owner0", server, ep_s)
+    try:
+        with pytest.raises(RuntimeError, match="PSI owner worker"):
+            wire_psi_round(client, ep_c, worker=worker, chunk_size=1,
+                           timeout=30.0)
+        assert "mismatch" in repr(worker.error)
+    finally:
+        ep_c.send("psi_stop", {})
+        th.join(timeout=10.0)
+
+
+@pytest.mark.parametrize("mode", ["noinv", "bloom"])
+def test_degenerate_sets_over_the_wire(mode):
+    """Empty / disjoint / duplicate-heavy sets round-trip the wire with
+    the exact in-process results."""
+    cases = [([], ["a"]), (["a"], []), ([], []),
+             (["a", "b"], ["c", "d"]),                      # disjoint
+             (["x"] * 5 + ["y"], ["x", "z"]),               # duplicates
+             (["solo"], ["solo"])]
+    for xs, ys in cases:
+        ref, _ = psi_round(PSIClient(xs, GROUP, mode=mode),
+                           PSIServer(ys, group=GROUP), chunk_size=2)
+        got, stats = _wire_round(xs, ys, mode=mode, chunk_size=2)[:2]
+        assert got == ref, (xs, ys, mode)
+        assert stats["client_upload_bytes"] == NB * len(xs)
+
+
+# ---------------------------------------------------------------------------
+# golden wire-frame conformance (frozen layouts)
+# ---------------------------------------------------------------------------
+
+# Byte-exact frames for fixed payloads: any change to the frame format
+# OR to a PSI kind's payload schema (entry names, order, dtypes) fails
+# these.  Layout: [u32 n_entries] then per entry [u16 len][name]
+# [u16 len][dtype.name][u8 ndim][i64 dims...][i64 nbytes][buffer],
+# little-endian throughout (docs/WIRE_PROTOCOL.md §1).
+GOLDEN_FRAMES = {
+    "psi_hello":
+        "0600000004006d6f6465050075696e7438010500000000000000050000000000"
+        "00006e6f696e76050067726f7570050075696e74380107000000000000000700"
+        "0000000000006d6f64703531320900626c696e645f746167050075696e743801"
+        "1000000000000000100000000000000030313233343536373839616263646566"
+        "07006e5f6974656d730500696e74363401010000000000000008000000000000"
+        "0003000000000000000a006368756e6b5f73697a650500696e74363401010000"
+        "00000000000800000000000000020000000000000002006e620500696e743634"
+        "01010000000000000008000000000000004000000000000000",
+    "psi_blind_chunk":
+        "02000000040064617461050075696e7438010800000000000000080000000000"
+        "000000010203040506070400626173650500696e743634010100000000000000"
+        "08000000000000000000000000000000",
+    "psi_hello_ack_noinv":
+        "030000000c00626c696e645f636163686564050075696e743801010000000000"
+        "00000100000000000000000e006e5f7365727665725f6974656d730500696e74"
+        "3634010100000000000000080000000000000003000000000000000f006e5f73"
+        "65727665725f6368756e6b730500696e74363401010000000000000008000000"
+        "000000000200000000000000",
+    "psi_hello_ack_bloom":
+        "050000000c00626c696e645f636163686564050075696e743801010000000000"
+        "00000100000000000000010e006e5f7365727665725f6974656d730500696e74"
+        "36340101000000000000000800000000000000030000000000000008006e5f73"
+        "68617264730500696e7436340101000000000000000800000000000000010000"
+        "00000000000c0073686172645f6e5f626974730500696e743634010100000000"
+        "000000080000000000000080000000000000000e0073686172645f6e5f686173"
+        "6865730500696e74363401010000000000000008000000000000001e00000000"
+        "000000",
+    "psi_server_set_chunk":
+        "02000000040064617461050075696e7438010400000000000000040000000000"
+        "0000000102030400626173650500696e74363401010000000000000008000000"
+        "000000000200000000000000",
+    "psi_double_chunk":
+        "02000000040064617461050075696e7438010400000000000000040000000000"
+        "0000000102030400626173650500696e74363401010000000000000008000000"
+        "000000000200000000000000",
+    "psi_bloom_shard":
+        "01000000040064617461050075696e7438010200000000000000020000000000"
+        "0000ff00",
+    "psi_done":
+        "0100000008006e5f6368756e6b730500696e7436340101000000000000000800"
+        "0000000000000200000000000000",
+    "empty": "00000000",
+}
+
+
+def _u8(b):
+    return np.frombuffer(b, np.uint8)
+
+
+def _canonical_payloads():
+    """The fixed payloads the goldens were frozen from — mirroring the
+    exact dict construction order of the live actors."""
+    return {
+        "psi_hello": {"mode": _u8(b"noinv"), "group": _u8(b"modp512"),
+                      "blind_tag": _u8(b"0123456789abcdef"),
+                      "n_items": np.int64(3), "chunk_size": np.int64(2),
+                      "nb": np.int64(64)},
+        "psi_blind_chunk": {"data": _u8(bytes(range(8))),
+                            "base": np.int64(0)},
+        "psi_hello_ack_noinv": {"blind_cached": np.uint8(0),
+                                "n_server_items": np.int64(3),
+                                "n_server_chunks": np.int64(2)},
+        "psi_hello_ack_bloom": {"blind_cached": np.uint8(1),
+                                "n_server_items": np.int64(3),
+                                "n_shards": np.int64(1),
+                                "shard_n_bits": np.int64(128),
+                                "shard_n_hashes": np.int64(30)},
+        "psi_server_set_chunk": {"data": _u8(bytes(range(4))),
+                                 "base": np.int64(2)},
+        "psi_double_chunk": {"data": _u8(bytes(range(4))),
+                             "base": np.int64(2)},
+        "psi_bloom_shard": {"data": _u8(b"\xff\x00")},
+        "psi_done": {"n_chunks": np.int64(2)},
+        "empty": {},
+    }
+
+
+def _parse_frame(blob):
+    """Independent minimal parser of the documented layout (deliberately
+    NOT _unpack — this is the conformance oracle)."""
+    (n,) = struct.unpack_from("<I", blob, 0)
+    off = 4
+    entries = []
+    for _ in range(n):
+        (ln,) = struct.unpack_from("<H", blob, off)
+        off += 2
+        name = blob[off:off + ln].decode()
+        off += ln
+        (ld,) = struct.unpack_from("<H", blob, off)
+        off += 2
+        dtype = blob[off:off + ld].decode()
+        off += ld
+        (ndim,) = struct.unpack_from("<B", blob, off)
+        off += 1
+        shape = struct.unpack_from(f"<{ndim}q", blob, off)
+        off += 8 * ndim
+        (nbytes,) = struct.unpack_from("<q", blob, off)
+        off += 8
+        entries.append((name, dtype, shape, blob[off:off + nbytes]))
+        off += nbytes
+    assert off == len(blob), "trailing bytes in frame"
+    return entries
+
+
+def test_golden_frames_byte_exact():
+    for kind, payload in _canonical_payloads().items():
+        assert _pack(payload).hex() == GOLDEN_FRAMES[kind], \
+            f"wire frame layout changed for {kind}"
+
+
+def test_golden_frames_parse_and_round_trip():
+    for kind, payload in _canonical_payloads().items():
+        blob = bytes.fromhex(GOLDEN_FRAMES[kind])
+        entries = _parse_frame(blob)
+        assert [e[0] for e in entries] == list(payload)
+        back = _unpack(blob)
+        assert set(back) == set(payload)
+        for name in payload:
+            np.testing.assert_array_equal(np.asarray(back[name]),
+                                          np.asarray(payload[name]))
+            assert back[name].dtype == np.asarray(payload[name]).dtype
+
+
+def test_pack_round_trips_zero_length_and_max_chunk_payloads():
+    # empty payload dict and a zero-length chunk (an owner with no rows)
+    assert _pack({}) == b"\x00\x00\x00\x00"
+    assert _unpack(_pack({})) == {}
+    zero = {"data": np.zeros(0, np.uint8), "base": np.int64(0)}
+    back = _unpack(_pack(zero))
+    assert back["data"].shape == (0,) and back["data"].dtype == np.uint8
+    # a full DEFAULT_CHUNK noinv chunk at modp2048 width (the largest
+    # frame the protocol emits): exact payload + header-overhead budget
+    from repro.core.psi import DEFAULT_CHUNK
+    data = np.arange(DEFAULT_CHUNK * 256, dtype=np.uint64)
+    data = (data % 251).astype(np.uint8)
+    blob = _pack({"data": data, "base": np.int64(12345)})
+    back = _unpack(blob)
+    np.testing.assert_array_equal(back["data"], data)
+    assert back["base"].reshape(-1)[0] == 12345
+    overhead = len(blob) - data.nbytes - 8
+    assert overhead < 128                      # headers stay tiny
+
+
+def test_live_traffic_conforms_to_frame_schema():
+    """Parse every frame of a real round with the independent parser and
+    check each kind's entry schema (names, dtypes) — the conformance
+    gate on actual traffic, not synthetic payloads."""
+    captured = []
+    xs = [f"id-{i}" for i in range(20)]
+    ys = [f"id-{i + 5}" for i in range(20)]
+    client = PSIClient(xs, GROUP)
+    server = PSIServer(ys, group=GROUP)
+    ep_c, ep_s = transport.channel_pair(
+        "scientist", "owner0", backend="queue",
+        tap=lambda msg, blob: captured.append((msg.kind, blob)))
+    worker, th = serve_psi("owner0", server, ep_s)
+    try:
+        wire_psi_round(client, ep_c, worker=worker, chunk_size=4)
+    finally:
+        ep_c.send("psi_stop", {})
+        th.join(timeout=10.0)
+    schema = {
+        "psi_hello": [("mode", "uint8"), ("group", "uint8"),
+                      ("blind_tag", "uint8"), ("n_items", "int64"),
+                      ("chunk_size", "int64"), ("nb", "int64")],
+        "psi_hello_ack": [("blind_cached", "uint8"),
+                          ("n_server_items", "int64"),
+                          ("n_server_chunks", "int64")],
+        "psi_blind_chunk": [("data", "uint8"), ("base", "int64")],
+        "psi_server_set_chunk": [("data", "uint8"), ("base", "int64")],
+        "psi_double_chunk": [("data", "uint8"), ("base", "int64")],
+        "psi_done": [("n_chunks", "int64")],
+        "psi_stop": [],
+    }
+    seen = set()
+    for kind, blob in captured:
+        seen.add(kind)
+        entries = _parse_frame(blob)
+        assert [(e[0], e[1]) for e in entries] == schema[kind], kind
+        assert kind in WIRE_KINDS or kind == "psi_stop"
+    assert {"psi_hello", "psi_hello_ack", "psi_blind_chunk",
+            "psi_server_set_chunk", "psi_double_chunk",
+            "psi_done"} <= seen
+
+
+# ---------------------------------------------------------------------------
+# privacy on the wire (observed traffic, not code inspection)
+# ---------------------------------------------------------------------------
+
+
+def _resolve_with_tap(mode):
+    """session.resolve(backend="queue") with every serialized frame
+    captured.  Returns (session, [(sender, kind, blob)])."""
+    from repro.data import make_vertical_mnist_parties
+    from repro.federation import VerticalSession, feature_parties
+    captured = []
+    orig = transport.channel_pair
+
+    def tapped(a, b, **kw):
+        kw["tap"] = lambda msg, blob: captured.append(
+            (msg.sender, msg.kind, blob))
+        return orig(a, b, **kw)
+
+    transport.channel_pair = tapped
+    try:
+        sci, owners = make_vertical_mnist_parties(80, seed=4,
+                                                  keep_frac=0.9)
+        session = VerticalSession(*feature_parties(sci, owners))
+        session.resolve(group=GROUP, mode=mode, backend="queue",
+                        chunk_size=16)
+    finally:
+        transport.channel_pair = orig
+    return session, captured
+
+
+@pytest.mark.parametrize("mode", ["noinv", "bloom"])
+def test_no_raw_ids_on_the_wire(mode):
+    """Every byte of every frame of a full resolve: raw IDs never cross
+    in any encoding the protocol could accidentally emit — plaintext,
+    sha256(id), or the unblinded group element H(id)."""
+    import hashlib
+    from repro.core.psi import hash_to_group
+    session, captured = _resolve_with_tap(mode)
+    assert captured, "tap captured no traffic"
+    all_ids = set(session.scientist.ids)
+    for o in session.owners:
+        all_ids |= set(o.ids)
+    p = GROUPS[GROUP][0]
+    needles = []
+    for i in sorted(all_ids)[:40]:                    # bound test cost
+        needles.append(i.encode())
+        needles.append(hashlib.sha256(i.encode()).digest())
+        needles.append(hash_to_group(i.encode(), p, NB).to_bytes(NB,
+                                                                 "big"))
+    blobs = b"\x00".join(blob for _, _, blob in captured)
+    for needle in needles:
+        assert needle not in blobs, \
+            f"identifying bytes leaked onto the wire: {needle[:16]!r}"
+
+
+def test_bloom_mode_server_set_crosses_only_compressed():
+    """In bloom mode the owner's set reaches the scientist ONLY as bloom
+    shard bitmaps, within the Angelou et al. byte budget (~12x under the
+    raw packed set) — asserted on the measured frames."""
+    session, captured = _resolve_with_tap("bloom")
+    owner_kinds = {k for s, k, _ in captured if s != "scientist"}
+    assert "psi_server_set_chunk" not in owner_kinds
+    assert "psi_bloom_shard" in owner_kinds
+    for owner in session.owners:
+        raw = NB * owner.n_rows
+        shard_bytes = sum(
+            len(b) for s, k, b in captured
+            if s == owner.name and k == "psi_bloom_shard")
+        assert 0 < shard_bytes < raw / 8, \
+            "bloom frames exceed the compression byte budget"
+
+
+def test_only_protocol_kinds_cross_the_boundary():
+    _, captured = _resolve_with_tap("noinv")
+    assert {k for _, k, _ in captured} <= set(WIRE_KINDS)
+    assert set(CLIENT_KINDS) & {k for s, k, _ in captured
+                                if s == "scientist"}
+    assert set(SERVER_KINDS) & {k for s, k, _ in captured
+                                if s != "scientist"}
+
+
+# ---------------------------------------------------------------------------
+# pipelining under injected latency
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.slow
+def test_pipelined_chunks_amortize_latency():
+    """With 8 ms one-way latency and 12 chunks in flight, the round pays
+    O(1) RTTs, not one RTT per chunk (the sequential floor).  Bounded
+    generously for CI noise; the tight version is the BENCH_psi wire
+    gate."""
+    xs = [f"id-{i}" for i in range(96)]
+    ys = [f"id-{i + 32}" for i in range(96)]
+    lat = 8e-3
+    n_chunks = 12
+
+    def once(latency):
+        t0 = time.perf_counter()
+        inter = _wire_round(xs, ys, chunk_size=8, latency_s=latency)[0]
+        assert sorted(set(inter)) == sorted(set(xs) & set(ys))
+        return time.perf_counter() - t0
+
+    base = min(once(0.0) for _ in range(2))
+    timed = min(once(lat) for _ in range(2))
+    seq_floor = n_chunks * 2 * lat                    # per-chunk RTTs
+    assert timed - base < 0.75 * seq_floor, \
+        (f"latency not amortized: {1e3 * (timed - base):.0f} ms added "
+         f"vs sequential floor {1e3 * seq_floor:.0f} ms")

@@ -1,0 +1,159 @@
+#!/usr/bin/env python
+"""Line-coverage report for the PSI + federation stack (``make coverage``).
+
+Scope: ``src/repro/core/psi.py`` and ``src/repro/federation/*.py`` — the
+modules the wire-native resolution work (ISSUE 5) touches — exercised by
+the protocol-focused test files in ``DEFAULT_TESTS``.
+
+Two engines, same report shape:
+
+  * **pytest-cov** (preferred; in ``requirements-dev.txt``, so CI has
+    it): delegates to ``pytest --cov`` with the scoped targets.
+  * **stdlib fallback** — offline images without pytest-cov get a
+    ``sys.settrace``/``threading.settrace`` tracer restricted to the
+    target files (line events fire only inside target frames, so the
+    rest of the suite runs near full speed).  Executable-line
+    denominators come from walking each module's compiled code objects
+    (``co_lines``), i.e. exactly the lines the tracer could ever hit.
+
+The report is informational, not a gate (the committed baseline lives in
+``docs/BENCHMARKS.md``): the exit code reflects the *test run* only.
+
+    PYTHONPATH=src python tools/coverage_report.py [test paths...]
+"""
+from __future__ import annotations
+
+import os
+import subprocess
+import sys
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+TARGET_FILES = ("src/repro/core/psi.py",)
+TARGET_DIRS = ("src/repro/federation",)
+
+#: the protocol/federation-focused slice of the suite (the full tier-1
+#: run would cover the same targets more slowly; kernels/model tests
+#: don't touch them)
+DEFAULT_TESTS = (
+    "tests/test_psi.py",
+    "tests/test_psi_parallel.py",
+    "tests/test_psi_transport.py",
+    "tests/test_resolution.py",
+    "tests/test_transport.py",
+    "tests/test_federation.py",
+)
+
+
+def target_files():
+    out = [os.path.join(ROOT, f) for f in TARGET_FILES]
+    for d in TARGET_DIRS:
+        full = os.path.join(ROOT, d)
+        out += sorted(os.path.join(full, f) for f in os.listdir(full)
+                      if f.endswith(".py"))
+    return [os.path.realpath(f) for f in out]
+
+
+def _have_pytest_cov() -> bool:
+    try:
+        import pytest_cov  # noqa: F401
+        return True
+    except ImportError:
+        return False
+
+
+def run_pytest_cov(tests) -> int:
+    cmd = [sys.executable, "-m", "pytest", "-q", *tests,
+           "--cov=repro.core.psi", "--cov=repro.federation",
+           "--cov-report=term"]
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(ROOT, "src") + (
+        os.pathsep + env["PYTHONPATH"] if env.get("PYTHONPATH") else "")
+    return subprocess.call(cmd, cwd=ROOT, env=env)
+
+
+# ---------------------------------------------------------------------------
+# stdlib fallback tracer
+# ---------------------------------------------------------------------------
+
+
+def executable_lines(path: str) -> set:
+    """All line numbers the tracer could report for ``path``: walk the
+    compiled module's code objects recursively and collect co_lines."""
+    with open(path) as f:
+        code = compile(f.read(), path, "exec")
+    lines: set = set()
+    stack = [code]
+    while stack:
+        co = stack.pop()
+        lines.update(ln for _, _, ln in co.co_lines() if ln is not None)
+        stack.extend(c for c in co.co_consts if hasattr(c, "co_code"))
+    return lines
+
+
+def run_fallback(tests) -> int:
+    import threading
+
+    import pytest
+
+    targets = set(target_files())
+    hits = {t: set() for t in targets}
+    # co_filename is whatever path the import used; resolve lazily and
+    # memoize so the global trace hook stays cheap
+    resolved: dict = {}
+
+    def resolve(fn):
+        try:
+            return resolved[fn]
+        except KeyError:
+            real = os.path.realpath(fn)
+            out = real if real in targets else None
+            resolved[fn] = out
+            return out
+
+    def local_trace(frame, event, arg):
+        if event == "line":
+            tgt = resolve(frame.f_code.co_filename)
+            if tgt is not None:
+                hits[tgt].add(frame.f_lineno)
+        return local_trace
+
+    def global_trace(frame, event, arg):
+        if resolve(frame.f_code.co_filename) is not None:
+            return local_trace
+        return None
+
+    threading.settrace(global_trace)
+    sys.settrace(global_trace)
+    try:
+        rc = pytest.main(["-q", *tests])
+    finally:
+        sys.settrace(None)
+        threading.settrace(None)
+
+    print("\n--- line coverage (stdlib tracer; pytest-cov absent) ---")
+    print(f"{'file':<44} {'lines':>6} {'hit':>6} {'cover':>7}")
+    tot_lines = tot_hit = 0
+    for t in sorted(targets):
+        exe = executable_lines(t)
+        hit = hits[t] & exe
+        tot_lines += len(exe)
+        tot_hit += len(hit)
+        rel = os.path.relpath(t, ROOT)
+        pct = 100.0 * len(hit) / max(len(exe), 1)
+        print(f"{rel:<44} {len(exe):>6} {len(hit):>6} {pct:>6.1f}%")
+    pct = 100.0 * tot_hit / max(tot_lines, 1)
+    print(f"{'TOTAL':<44} {tot_lines:>6} {tot_hit:>6} {pct:>6.1f}%")
+    return int(rc)
+
+
+def main(argv=None) -> int:
+    tests = list(argv if argv is not None else sys.argv[1:]) \
+        or list(DEFAULT_TESTS)
+    if _have_pytest_cov():
+        return run_pytest_cov(tests)
+    return run_fallback(tests)
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())
