@@ -30,8 +30,9 @@ bench-check:
 docs-check:
 	$(PY) tools/docs_check.py
 
-# Line-coverage report for core/psi.py + federation/ (informational,
-# not a gate — baseline in docs/BENCHMARKS.md).  Uses pytest-cov when
-# installed, a scoped stdlib tracer otherwise.
+# Line-coverage gate for core/psi.py + federation/ (fails below
+# REPRO_COVERAGE_MIN, default 93%; REPRO_COVERAGE_GATE=0 to bypass —
+# baseline in docs/BENCHMARKS.md).  Uses pytest-cov when installed, a
+# scoped stdlib tracer otherwise.
 coverage:
 	$(PY) tools/coverage_report.py

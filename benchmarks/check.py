@@ -31,11 +31,16 @@ from typing import Iterator, Tuple
 TRACKED = {
     "BENCH_transport.json": "transport",
     "BENCH_psi.json": "psi_scaling",
+    "BENCH_parties.json": "parties",
 }
 
 #: informational subtrees: committed by full-size runs, not re-measured
-#: under --check (the PSI trajectory's 1e6-ID row costs minutes)
-SKIP_SUBTREES = ("config", "pipeline_sweep", "trajectory", "wire_sweep")
+#: under --check (the PSI trajectory's 1e6-ID row costs minutes; the
+#: parties owners-sweep spawns dozens of workers, and its
+#: ``informational`` subtree records host-dependent facts like core
+#: count and the single-core speedup)
+SKIP_SUBTREES = ("config", "pipeline_sweep", "trajectory", "wire_sweep",
+                 "owners_sweep", "informational")
 SKIP_KEYS = ("pipelined_microbatches",)
 
 

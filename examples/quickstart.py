@@ -6,21 +6,37 @@ entity resolution, ID alignment, and dual-headed SplitNN training with
 per-party learning rates (Appendix B).
 
 ``--mode split`` runs *true* split execution: each owner's head segment
-computes on its own thread behind a ``federation.transport`` channel
-(optionally latency-injected via ``--latency-ms``), only cut
-activations/gradients cross the boundary, and the traffic report is
-measured wire bytes.  ``--compression fp16|int8`` quantizes the cut
-payloads on the way out.
+computes behind a ``federation.transport`` channel (optionally
+latency-injected via ``--latency-ms``), only cut activations/gradients
+cross the boundary, and the traffic report is measured wire bytes.
+``--backend process`` puts every owner in its own spawned worker
+process over a real OS pipe (``federation/runtime.py``) — same frames,
+same bytes, genuinely parallel head compute; ``--owners N`` scales the
+party count (equal feature widths).  ``--compression fp16|int8``
+quantizes the cut payloads on the way out.
 
     PYTHONPATH=src python examples/quickstart.py
     PYTHONPATH=src python examples/quickstart.py --mode split \
         --latency-ms 1 --compression int8
+    PYTHONPATH=src python examples/quickstart.py --mode split \
+        --backend process --owners 4 --epochs 2
 """
 import argparse
+import dataclasses
 
+from repro.configs.base import SplitConfig
 from repro.configs.pyvertical_mnist import CONFIG
 from repro.data import make_vertical_mnist_parties
 from repro.federation import VerticalSession, feature_parties
+
+
+def _config(owners: int):
+    if owners == CONFIG.split.n_owners:
+        return CONFIG
+    return dataclasses.replace(
+        CONFIG, split=SplitConfig(
+            n_owners=owners, cut_layer=1, combine="concat", cut_dim=64,
+            owner_lr=0.01, scientist_lr=0.1))
 
 
 def main(argv=None):
@@ -28,6 +44,14 @@ def main(argv=None):
     ap.add_argument("--mode", default="joint", choices=["joint", "split"])
     ap.add_argument("--schedule", default="pipelined",
                     choices=["pipelined", "sequential"])
+    ap.add_argument("--backend", default="queue",
+                    choices=["queue", "direct", "process"],
+                    help="split-mode party boundary: thread-backed "
+                         "queue, in-process direct, or one spawned "
+                         "worker process per owner")
+    ap.add_argument("--owners", type=int, default=2,
+                    help="number of data owners (feature dim must "
+                         "divide evenly)")
     ap.add_argument("--compression", default="none",
                     choices=["none", "fp16", "int8"])
     ap.add_argument("--latency-ms", type=float, default=0.0,
@@ -38,7 +62,8 @@ def main(argv=None):
     ap.add_argument("--epochs", type=int, default=10)
     args = ap.parse_args(argv)
 
-    sci, owners = make_vertical_mnist_parties(2000, seed=0, keep_frac=0.9)
+    sci, owners = make_vertical_mnist_parties(
+        2000, n_owners=args.owners, seed=0, keep_frac=0.9)
     session = VerticalSession(*feature_parties(sci, owners))
 
     stats = session.resolve(group="modp512")
@@ -47,12 +72,13 @@ def main(argv=None):
                      f"{r['server_response_bytes'] / 1024:.1f} KiB]"
                      for r in stats["rounds"]))
 
-    session.build(CONFIG)
+    session.build(_config(args.owners))
     history = session.fit(epochs=args.epochs, batch_size=128,
                           eval_frac=0.15, mode=args.mode,
                           schedule=args.schedule,
                           compression=args.compression,
                           microbatches=args.microbatches,
+                          backend=args.backend,
                           latency_s=args.latency_ms * 1e-3)
 
     if args.mode == "split":

@@ -47,19 +47,33 @@ def make_mnist_like(n: int, seed: int = 0, n_classes: int = 10,
 
 
 def make_vertical_mnist_parties(n: int, n_owners: int = 2, seed: int = 0,
-                                keep_frac: float = 0.9):
+                                keep_frac: float = 0.9,
+                                feature_splits=None):
     """The paper's Fig. 2 setup: images vertically split across owners
     (left/right halves for 2 owners), labels held by the data scientist.
     Owners hold random overlapping subject subsets in random order — PSI
     resolution is required before training.
+
+    ``feature_splits`` (paper §5.1 future work, imbalanced verticals):
+    explicit per-owner feature widths summing to the flattened feature
+    dim — the flat 784 vector is cut at those points instead of the
+    image axis, and ``n_owners`` is ignored in favor of its length.
 
     Returns (scientist VerticalDataset(labels), {owner: VerticalDataset}).
     """
     rng = np.random.default_rng(seed)
     X, y = make_mnist_like(n, seed)
     side = int(np.sqrt(X.shape[1]))
-    # left/right halves ≡ contiguous feature slices of the (28, 28) image
-    halves = partition_features(X.reshape(n, side, side), n_owners)
+    if feature_splits is not None:
+        halves = partition_features(X, list(feature_splits))
+    elif side % n_owners == 0:
+        # left/right halves ≡ contiguous feature slices of the (28, 28)
+        # image
+        halves = partition_features(X.reshape(n, side, side), n_owners)
+    else:
+        # owner counts that don't divide the image side (e.g. 8) split
+        # the flattened vector instead — still contiguous equal slices
+        halves = partition_features(X, n_owners)
     halves = [h.reshape(n, -1) for h in halves]
     ids = make_ids(n)
     owners_raw = scatter_to_owners(ids, halves, rng, keep_frac)

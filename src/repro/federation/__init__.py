@@ -3,11 +3,42 @@
 # PSI resolution, SplitNN training, evaluation, and split-inference
 # serving.  Every workflow (examples/, launch/) is a thin client of this
 # package; batch partitioning lives exclusively in federation.batching.
-from repro.federation.parties import (DataOwner, DataScientist,  # noqa
-                                      OwnerComputeEndpoint, PrivacyError,
-                                      feature_parties, sequence_parties)
-from repro.federation.registry import build_adapter, register_model  # noqa
-from repro.federation.session import VerticalSession  # noqa: F401
-from repro.federation import batching  # noqa: F401
-from repro.federation import psi_transport  # noqa: F401
-from repro.federation import transport  # noqa: F401
+#
+# Re-exports are lazy (PEP 562, the same discipline as ``repro.core``):
+# importing the wire-level stack (``transport`` / ``process_transport`` /
+# ``psi_transport`` / ``runtime``) must NOT pull in jax — spawned PSI
+# worker processes (``runtime.psi_worker_main``) run the jax-free PSI
+# protocol in a numpy-light interpreter, and eager session/parties
+# imports here would drag the ~300 MB XLA image into every one of them.
+import importlib
+
+_EXPORTS = {
+    "DataOwner": "parties",
+    "DataScientist": "parties",
+    "OwnerComputeEndpoint": "parties",
+    "PrivacyError": "parties",
+    "feature_parties": "parties",
+    "sequence_parties": "parties",
+    "build_adapter": "registry",
+    "register_model": "registry",
+    "VerticalSession": "session",
+}
+_SUBMODULES = ("batching", "parties", "process_transport", "psi_transport",
+               "registry", "runtime", "session", "transport")
+
+__all__ = sorted(list(_EXPORTS) + list(_SUBMODULES))
+
+
+def __getattr__(name):
+    if name in _EXPORTS:
+        mod = importlib.import_module(
+            f"repro.federation.{_EXPORTS[name]}")
+        return getattr(mod, name)
+    if name in _SUBMODULES:
+        return importlib.import_module(f"repro.federation.{name}")
+    raise AttributeError(
+        f"module {__name__!r} has no attribute {name!r}")
+
+
+def __dir__():
+    return sorted(set(list(globals()) + __all__))

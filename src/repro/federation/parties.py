@@ -195,6 +195,13 @@ class OwnerComputeEndpoint:
                          optimizer state bitwise unchanged.
       ``barrier``        flush marker; the owner acks once every prior
                          message is processed.
+      ``pull_params``    the trusted-runtime param fetch: the owner
+                         ships its current head-segment params as
+                         numbered numpy leaves (``params_dump``).  The
+                         thread backend reads ``self.params`` directly
+                         (shared memory); across a process boundary this
+                         message is the only way the session's
+                         reassembly can see owner state.
       ``stop``           end of training.
 
     FIFO channel order is the protocol's only synchronization: every
@@ -323,6 +330,14 @@ class OwnerComputeEndpoint:
             return False
         if msg.kind == "barrier":
             self.endpoint.send("barrier_ack", {}, seq=msg.seq)
+            return True
+        if msg.kind == "pull_params":
+            import jax
+            leaves = jax.tree_util.tree_leaves(self.params)
+            self.endpoint.send(
+                "params_dump",
+                {str(i): np.asarray(leaf)
+                 for i, leaf in enumerate(leaves)}, seq=msg.seq)
             return True
         if msg.kind == "warmup":
             self._warmup(msg)

@@ -1,0 +1,257 @@
+"""Process-boundary transport: the queue backend's semantics over a real
+OS pipe between party *processes*.
+
+The thread-backed ``queue`` backend made the party boundary real at the
+message level — serialized frames, measured bytes, injected transit time
+— but every party still shared one interpreter, so the GIL serialized
+owner compute against the scientist and "multi-headed" meant threads.
+:class:`ProcessEndpoint` is the same duplex endpoint surface
+(``send`` / ``recv`` / ``recv_kind`` / ``sent_stats`` / ``recv_stats`` /
+``tap``) over a ``multiprocessing.connection.Connection``, so
+``OwnerComputeEndpoint`` and ``PSIServerEndpoint`` run unchanged inside
+spawned worker processes (``federation/runtime.py``) and owner head
+compute genuinely overlaps the scientist on multi-core hosts.
+
+Design notes:
+
+  * **One socket per party, multiplexed.**  All protocol kinds for a
+    party share one duplex ``Pipe`` (a Unix socketpair on Linux); the
+    per-message kind rides a small transport header in front of the
+    payload frame.  ``recv_kind``'s stash provides the same any-kind
+    interleaving tolerance the queue backend's Endpoint has.
+  * **Identical wire accounting.**  The payload frame is the *exact*
+    ``transport._pack`` blob the queue backend serializes, and
+    ``wire_bytes`` counts that blob alone (the transport header plays
+    the role of the in-process ``Message`` envelope, which the queue
+    backend doesn't count either) — so per-kind byte stats are
+    bit-identical across backends (gated in ``BENCH_parties.json``).
+  * **Latency across the boundary.**  The sender stamps a delivery
+    deadline (``latency_s + wire_bytes / bandwidth_bps`` past send time)
+    into the header; the receiver honors it with the same hybrid
+    sleep+spin wait.  ``time.monotonic`` is CLOCK_MONOTONIC, which is
+    system-wide on Linux, so the deadline is meaningful cross-process.
+  * **Non-blocking sends.**  A per-endpoint writer thread drains an
+    unbounded outbox into the pipe, so a full OS socket buffer (both
+    parties mid-burst) can never deadlock the protocol — the pipe
+    applies backpressure to the writer thread, not to the party.
+  * **Crash surfacing.**  A dying worker emits a final
+    ``__worker_error__`` frame carrying its traceback (the poison pill);
+    the peer's next ``recv`` raises it as a ``RuntimeError``, and an
+    unclean death without the pill surfaces as EOF on the pipe.
+"""
+from __future__ import annotations
+
+import queue as _queue
+import struct
+import threading
+import time
+from typing import Dict, Optional, Tuple
+
+import numpy as np
+
+from repro.federation.transport import (Message, _pack, _payload_nbytes,
+                                        _unpack, _wait_until, spin_wait_s)
+
+__all__ = ["ProcessEndpoint", "process_endpoint_pair", "POISON_KIND",
+           "HEADER_FMT"]
+
+#: the worker-lifecycle poison-pill frame (docs/WIRE_PROTOCOL.md §5)
+POISON_KIND = "__worker_error__"
+
+#: transport header preceding every payload frame on the pipe:
+#: [u16 kind_len][kind utf-8][i64 seq][f64 not_before][i64 payload_bytes]
+HEADER_FMT = "<qdq"
+_HEADER_LEN = struct.calcsize(HEADER_FMT)
+
+_CLOSE = object()          # writer-thread shutdown sentinel
+
+
+def _new_stats() -> Dict[str, object]:
+    return {"messages": 0, "payload_bytes": 0, "wire_bytes": 0,
+            "by_kind": {}}
+
+
+def _account(stats: Dict[str, object], kind: str, payload_bytes: int,
+             wire_bytes: int) -> None:
+    stats["messages"] += 1
+    stats["payload_bytes"] += payload_bytes
+    stats["wire_bytes"] += wire_bytes
+    k = stats["by_kind"].setdefault(
+        kind, {"count": 0, "payload_bytes": 0, "wire_bytes": 0})
+    k["count"] += 1
+    k["payload_bytes"] += payload_bytes
+    k["wire_bytes"] += wire_bytes
+
+
+class ProcessEndpoint:
+    """One party's end of a duplex process boundary.
+
+    Same protocol surface as :class:`transport.Endpoint`; ``recv`` raises
+    ``queue.Empty`` on timeout (the poll contract the session's
+    owner-crash surfacing loops rely on) and ``RuntimeError`` when the
+    peer died (poison pill or EOF)."""
+
+    def __init__(self, name: str, peer: str, conn, *,
+                 latency_s: float = 0.0,
+                 bandwidth_bps: Optional[float] = None,
+                 spin_s: Optional[float] = None, tap=None):
+        self.name, self.peer = name, peer
+        self.conn = conn
+        self.latency_s = latency_s
+        self.bandwidth_bps = bandwidth_bps
+        self.spin_s = spin_wait_s() if spin_s is None else spin_s
+        self.tap = tap
+        self.sent_stats = _new_stats()
+        self.recv_stats = _new_stats()
+        #: the peer's poison pill, once seen (checked by WorkerHandle)
+        self.peer_error: Optional[BaseException] = None
+        self._stash: list = []
+        self._lock = threading.Lock()
+        self._outq: "_queue.SimpleQueue" = _queue.SimpleQueue()
+        self._send_error: Optional[BaseException] = None
+        self._writer = threading.Thread(
+            target=self._write_loop, daemon=True,
+            name=f"pt-writer-{name}->{peer}")
+        self._writer.start()
+        self._closed = False
+
+    # -- sending -----------------------------------------------------------
+    def _write_loop(self) -> None:
+        while True:
+            frame = self._outq.get()
+            if frame is _CLOSE:
+                return
+            try:
+                self.conn.send_bytes(frame)
+            except (OSError, ValueError) as e:
+                # peer gone; remember why and drain silently so the
+                # party's send path never blocks on a dead pipe
+                if self._send_error is None:
+                    self._send_error = e
+
+    def send(self, kind: str, payload: Dict[str, np.ndarray], *,
+             seq: int = 0) -> Message:
+        if self._closed:
+            raise RuntimeError(
+                f"{self.name}: endpoint to {self.peer} is closed")
+        pb = _payload_nbytes(payload)
+        blob = _pack(payload)
+        wb = len(blob)
+        msg = Message(self.name, self.peer, kind, {"__blob__": blob},
+                      seq=seq, payload_bytes=pb, wire_bytes=wb)
+        if self.tap is not None:
+            self.tap(msg, blob)
+        not_before = 0.0
+        if self.latency_s or self.bandwidth_bps:
+            not_before = time.monotonic() + self.latency_s + (
+                wb / self.bandwidth_bps if self.bandwidth_bps else 0.0)
+            msg.not_before = not_before
+        with self._lock:
+            _account(self.sent_stats, kind, pb, wb)
+        kb = kind.encode()
+        frame = (struct.pack("<H", len(kb)) + kb
+                 + struct.pack(HEADER_FMT, seq, not_before, pb) + blob)
+        self._outq.put(frame)
+        return msg
+
+    def send_error(self, exc: BaseException, tb: str = "") -> None:
+        """Ship the poison pill: the worker's terminal exception +
+        traceback, as the last frame before the pipe closes."""
+        try:
+            self.send(POISON_KIND, {
+                "error": np.frombuffer(
+                    f"{type(exc).__name__}: {exc}".encode(), np.uint8),
+                "traceback": np.frombuffer(tb.encode(), np.uint8)})
+        except RuntimeError:
+            pass
+
+    # -- receiving ---------------------------------------------------------
+    def _recv_frame(self, timeout: Optional[float]) -> Message:
+        try:
+            if not self.conn.poll(timeout):
+                raise _queue.Empty
+            frame = self.conn.recv_bytes()
+        except (EOFError, ConnectionResetError, BrokenPipeError, OSError
+                ) as e:
+            raise RuntimeError(
+                f"{self.name}: connection to {self.peer!r} closed "
+                f"({type(e).__name__})") from (
+                    self.peer_error if self.peer_error is not None else e)
+        (klen,) = struct.unpack_from("<H", frame, 0)
+        kind = frame[2:2 + klen].decode()
+        seq, not_before, pb = struct.unpack_from(HEADER_FMT, frame,
+                                                 2 + klen)
+        blob = frame[2 + klen + _HEADER_LEN:]
+        if kind == POISON_KIND:
+            pl = _unpack(blob)
+            err = bytes(pl["error"].tobytes()).decode()
+            tb = bytes(pl["traceback"].tobytes()).decode()
+            self.peer_error = RuntimeError(
+                f"party {self.peer!r} died: {err}"
+                + (f"\n--- remote traceback ---\n{tb}" if tb else ""))
+            raise self.peer_error
+        with self._lock:
+            _account(self.recv_stats, kind, int(pb), len(blob))
+        if not_before:
+            _wait_until(not_before, self.spin_s)
+        msg = Message(self.peer, self.name, kind, _unpack(blob),
+                      seq=int(seq), payload_bytes=int(pb),
+                      wire_bytes=len(blob), not_before=not_before)
+        if self.tap is not None:
+            self.tap(msg, blob)
+        return msg
+
+    def recv(self, timeout: Optional[float] = None) -> Message:
+        if self._stash:
+            return self._stash.pop(0)
+        if self.peer_error is not None:
+            raise self.peer_error
+        return self._recv_frame(timeout)
+
+    def recv_kind(self, kind: str, timeout: Optional[float] = None
+                  ) -> Message:
+        """Next message of ``kind``; earlier-arriving other kinds are
+        stashed, exactly like :class:`transport.Endpoint`."""
+        for i, m in enumerate(self._stash):
+            if m.kind == kind:
+                return self._stash.pop(i)
+        while True:
+            msg = self._recv_frame(timeout)
+            if msg.kind == kind:
+                return msg
+            self._stash.append(msg)
+
+    def empty(self) -> bool:
+        return not self._stash and not self.conn.poll(0)
+
+    # -- lifecycle ---------------------------------------------------------
+    def close(self, drain_s: float = 5.0) -> None:
+        """Flush the outbox, stop the writer, close the pipe."""
+        if self._closed:
+            return
+        self._closed = True
+        self._outq.put(_CLOSE)
+        self._writer.join(timeout=drain_s)
+        try:
+            self.conn.close()
+        except OSError:
+            pass
+
+
+def process_endpoint_pair(a: str, b: str, *, latency_s: float = 0.0,
+                          bandwidth_bps: Optional[float] = None,
+                          spin_s: Optional[float] = None, tap=None
+                          ) -> Tuple[ProcessEndpoint, ProcessEndpoint]:
+    """Both ends of a process boundary in the *current* process — the
+    unit-test / single-process harness analogue of ``channel_pair``
+    (real worker spawning builds the far end inside the child; see
+    ``federation/runtime.py``).  ``tap`` observes endpoint ``a``'s
+    traffic in both directions."""
+    import multiprocessing as mp
+    c1, c2 = mp.Pipe(duplex=True)
+    ep_a = ProcessEndpoint(a, b, c1, latency_s=latency_s,
+                           bandwidth_bps=bandwidth_bps, spin_s=spin_s,
+                           tap=tap)
+    ep_b = ProcessEndpoint(b, a, c2, latency_s=latency_s,
+                           bandwidth_bps=bandwidth_bps, spin_s=spin_s)
+    return ep_a, ep_b

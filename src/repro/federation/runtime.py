@@ -1,0 +1,294 @@
+"""Party worker harness: one OS process per data owner.
+
+``process_transport`` provides the boundary; this module provides the
+*parties* on its far side.  Each worker is a spawned process (spawn, not
+fork: the parent holds live XLA/threading state once jax is loaded, and
+spawn re-imports only the target module's dependency chain) that builds
+its party actor from a picklable spec and runs the exact same actor loop
+the thread backend runs:
+
+  * :func:`owner_worker_main` — rebuilds the owner's
+    :class:`~repro.federation.parties.OwnerComputeEndpoint` inside the
+    worker: the registry adapter is reconstructed from the (dataclass)
+    model config, head programs re-jit in the worker's own XLA runtime,
+    and the owner's current head params arrive as numpy leaves.  Only
+    cut activations/gradients ever cross back.
+  * :func:`psi_worker_main` — a jax-free
+    :class:`~repro.federation.psi_transport.PSIServerEndpoint` actor
+    (the PSI stack imports no jax, so these workers stay numpy-light).
+  * :class:`WorkerHandle` — the parent-side view: the duplex
+    :class:`~repro.federation.process_transport.ProcessEndpoint`, the
+    ``Process``, and the crash-surfacing ``error`` property the
+    session's receive polls check (poison-pill frame, or a nonzero exit
+    code for deaths too sudden to send one).
+
+Worker lifecycle (docs/WIRE_PROTOCOL.md §5): spawn -> warmup handshake
+(driven by the session over the pipe, compiling every program before the
+timed region) -> steady-state protocol -> ``stop`` / ``psi_stop`` ->
+drain + exit 0.  A worker that throws ships one final
+``__worker_error__`` frame with its traceback and exits 1.
+
+Chaos hooks: ``REPRO_CHAOS_PARTY="<party>:<action>"`` (actions:
+``crash_fwd`` / ``wedge_fwd`` on the first ``head_fwd``, ``crash_psi`` /
+``wedge_psi`` on the first ``psi_blind_chunk``) injects a fault inside
+the named worker.  Spawned children inherit the parent's environment, so
+tests set it with ``monkeypatch.setenv`` — the only way to reach inside
+a spawned process that a parent-side monkeypatch cannot touch.
+"""
+from __future__ import annotations
+
+import os
+import time
+import traceback
+from dataclasses import dataclass, field
+from typing import List, Optional
+
+import numpy as np
+
+from repro.federation.process_transport import ProcessEndpoint
+
+__all__ = ["OwnerWorkerSpec", "PSIWorkerSpec", "WorkerHandle",
+           "owner_worker_main", "psi_worker_main",
+           "spawn_owner_worker", "spawn_psi_worker"]
+
+SCIENTIST = "scientist"
+
+#: chaos-injection env var (see module docstring); parsed in-worker
+CHAOS_ENV = "REPRO_CHAOS_PARTY"
+
+
+def _chaos_action(name: str) -> Optional[str]:
+    spec = os.environ.get(CHAOS_ENV, "")
+    if not spec:
+        return None
+    who, _, action = spec.partition(":")
+    return action if who == name else None
+
+
+def _mp_context():
+    import multiprocessing as mp
+    return mp.get_context("spawn")
+
+
+# ---------------------------------------------------------------------------
+# Worker specs (picklable: dataclass configs + numpy arrays + scalars)
+# ---------------------------------------------------------------------------
+
+
+@dataclass
+class OwnerWorkerSpec:
+    """Everything a spawned owner worker needs to reconstruct its party.
+
+    ``config`` is the registry model config (``MLPSplitConfig`` /
+    ``ArchConfig`` — frozen dataclasses, cheap pickles); ``param_leaves``
+    are the owner's current head-segment params flattened to numpy in
+    canonical tree-leaf order (the worker rebuilds the tree against the
+    structure of a reference slice from ``adapter.init``, so no treedef
+    crosses the boundary)."""
+
+    name: str
+    ids: List[str]
+    features: np.ndarray
+    owner_index: int
+    config: object
+    init_seed: int
+    param_leaves: List[np.ndarray] = field(default_factory=list)
+    codec: Optional[str] = None
+    microbatches: int = 1
+    ack_steps: bool = False
+    owner_lr: Optional[float] = None
+    latency_s: float = 0.0
+    bandwidth_bps: Optional[float] = None
+
+
+@dataclass
+class PSIWorkerSpec:
+    """A PSI server actor's world: the owner's ID set + group geometry.
+    Import chain is jax-free end to end."""
+
+    name: str
+    ids: List[str]
+    group: str
+    fp_rate: float = 1e-9
+    latency_s: float = 0.0
+    bandwidth_bps: Optional[float] = None
+
+
+# ---------------------------------------------------------------------------
+# Worker mains (top-level functions: spawn pickles them by reference)
+# ---------------------------------------------------------------------------
+
+
+def _run_worker(spec, conn, body) -> None:
+    """Shared worker scaffold: endpoint up, body, poison pill + exit 1
+    on any failure, clean close + exit 0 otherwise.  (The exit code only
+    makes sense process-side; the in-process thread harness just ends
+    the thread after the pill ships.)"""
+    import threading
+
+    ep = ProcessEndpoint(spec.name, SCIENTIST, conn,
+                         latency_s=spec.latency_s,
+                         bandwidth_bps=spec.bandwidth_bps)
+    try:
+        body(spec, ep)
+    except BaseException as e:              # noqa: BLE001 — shipped to
+        ep.send_error(e, traceback.format_exc())   # the parent's poll
+        ep.close()
+        if threading.current_thread() is threading.main_thread():
+            raise SystemExit(1)
+        return
+    ep.close()
+
+
+def _owner_body(spec: OwnerWorkerSpec, ep: ProcessEndpoint) -> None:
+    import jax
+
+    from repro.federation.parties import DataOwner, OwnerComputeEndpoint
+    from repro.federation.registry import build_adapter
+    from repro.federation.transport import get_codec
+
+    adapter = build_adapter(spec.config)
+    p = spec.owner_index
+    # reference slice for the param-tree structure only: init is
+    # deterministic per (config, seed), so the structure — and, for a
+    # fresh session, the values — match the parent's exactly
+    template = adapter.owner_param_slice(
+        adapter.init(jax.random.PRNGKey(spec.init_seed)), p)
+    params = jax.tree_util.tree_unflatten(
+        jax.tree_util.tree_structure(template),
+        [jax.numpy.asarray(leaf) for leaf in spec.param_leaves])
+    owner = DataOwner(spec.name, spec.ids, spec.features)
+    owner_opt, owner_update = adapter.owner_update_rule(spec.owner_lr)
+    head_fwd, head_bwd = adapter.owner_programs(p)
+    worker = OwnerComputeEndpoint(
+        owner, ep, head_fwd, head_bwd, optimizer=owner_opt,
+        params=params, codec=get_codec(spec.codec),
+        ack_steps=spec.ack_steps, microbatches=spec.microbatches,
+        gather=adapter.gather_program(), update_program=owner_update,
+        tail_program=adapter.owner_tail_rule(spec.owner_lr, p))
+    _arm_chaos(worker, spec.name, "fwd", "head_fwd")
+    worker.run()
+    if worker.error is not None:
+        raise worker.error
+
+
+def owner_worker_main(spec: OwnerWorkerSpec, conn) -> None:
+    """Spawn target for an owner compute worker (also runnable on a
+    thread against a pipe end — the in-process harness tests use that to
+    exercise this exact code path under the tracer)."""
+    _run_worker(spec, conn, _owner_body)
+
+
+def _psi_body(spec: PSIWorkerSpec, ep: ProcessEndpoint) -> None:
+    from repro.core.psi import PSIServer
+    from repro.federation.psi_transport import PSIServerEndpoint
+
+    server = PSIServer(spec.ids, spec.fp_rate, spec.group)
+    actor = PSIServerEndpoint(spec.name, server, ep)
+    _arm_chaos(actor, spec.name, "psi", "psi_blind_chunk")
+    actor.run()
+    if actor.error is not None:
+        raise actor.error
+
+
+def psi_worker_main(spec: PSIWorkerSpec, conn) -> None:
+    """Spawn target for a PSI server actor (jax-free)."""
+    _run_worker(spec, conn, _psi_body)
+
+
+def _arm_chaos(actor, name: str, suffix: str, trigger_kind: str) -> None:
+    """Wrap ``actor.handle`` per the chaos env var: raise (``crash_*``)
+    or hang (``wedge_*``) on the first ``trigger_kind`` message."""
+    action = _chaos_action(name)
+    if action not in (f"crash_{suffix}", f"wedge_{suffix}"):
+        return
+    orig = actor.handle
+
+    def handle(msg):
+        if msg.kind == trigger_kind:
+            if action == f"crash_{suffix}":
+                raise RuntimeError(
+                    f"chaos: injected crash in {name} on {msg.kind}")
+            time.sleep(3600.0)              # wedge: never answer
+        return orig(msg)
+
+    actor.handle = handle
+
+
+# ---------------------------------------------------------------------------
+# Parent side
+# ---------------------------------------------------------------------------
+
+
+class WorkerHandle:
+    """The scientist's view of one spawned party worker.
+
+    Duck-types the interfaces the session's crash-surfacing polls
+    already use: ``error`` (the thread actors' parked-exception slot),
+    ``name``, and ``owner`` (the parent-side party object).  ``error``
+    reads the poison pill off the endpoint when one arrived, else maps
+    an unexpected nonzero/dead exit code to a ``RuntimeError``."""
+
+    def __init__(self, name: str, proc, endpoint: ProcessEndpoint,
+                 owner=None):
+        self.name = name
+        self.proc = proc
+        self.endpoint = endpoint
+        self.owner = owner
+
+    @property
+    def error(self) -> Optional[BaseException]:
+        if self.endpoint.peer_error is not None:
+            return self.endpoint.peer_error
+        code = self.proc.exitcode
+        if code not in (None, 0):
+            return RuntimeError(
+                f"party worker {self.name!r} exited with code {code}")
+        return None
+
+    def shutdown(self, timeout: float = 10.0) -> None:
+        """Drain + join; escalate to terminate if the worker is stuck.
+        Idempotent — safe in ``finally`` blocks."""
+        self.proc.join(timeout=timeout)
+        if self.proc.is_alive():
+            self.proc.terminate()
+            self.proc.join(timeout=5.0)
+        self.endpoint.close()
+
+    def __repr__(self):
+        state = ("alive" if self.proc.is_alive()
+                 else f"exit={self.proc.exitcode}")
+        return f"WorkerHandle({self.name!r}, {state})"
+
+
+def _spawn(name: str, main, spec, *, owner=None, tap=None) -> WorkerHandle:
+    ctx = _mp_context()
+    parent_conn, child_conn = ctx.Pipe(duplex=True)
+    proc = ctx.Process(target=main, args=(spec, child_conn), daemon=True,
+                       name=f"party-{name}")
+    proc.start()
+    child_conn.close()          # the child owns its end now
+    ep = ProcessEndpoint(SCIENTIST, name, parent_conn,
+                         latency_s=spec.latency_s,
+                         bandwidth_bps=spec.bandwidth_bps, tap=tap)
+    return WorkerHandle(name, proc, ep, owner=owner)
+
+
+def spawn_owner_worker(spec: OwnerWorkerSpec, *, owner=None, tap=None
+                       ) -> WorkerHandle:
+    """Spawn one owner compute worker; returns the parent-side handle
+    (its ``endpoint`` is the scientist's end of the party boundary)."""
+    return _spawn(spec.name, owner_worker_main, spec, owner=owner,
+                  tap=tap)
+
+
+def spawn_psi_worker(owner, *, group: str, fp_rate: float = 1e-9,
+                     latency_s: float = 0.0,
+                     bandwidth_bps: Optional[float] = None,
+                     tap=None) -> WorkerHandle:
+    """Spawn one PSI server actor for ``owner`` (a
+    :class:`~repro.federation.parties.DataOwner`)."""
+    spec = PSIWorkerSpec(name=owner.name, ids=list(owner.ids),
+                         group=group, fp_rate=fp_rate,
+                         latency_s=latency_s, bandwidth_bps=bandwidth_bps)
+    return _spawn(spec.name, psi_worker_main, spec, owner=owner, tap=tap)

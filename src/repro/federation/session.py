@@ -98,6 +98,8 @@ class VerticalSession:
         self.resolve_stats: Optional[dict] = None
         self.transport_stats: Optional[dict] = None
         self.adapter = None
+        self.config = None
+        self._init_seed = seed
         self.params = None
         self.history: Optional[dict] = None
         self._resolved = False
@@ -161,31 +163,38 @@ class VerticalSession:
             leg crosses as a framed ``Message`` (pipelined, chunk k+1
             overlapping chunk k's server modexp), and the transcript +
             stats carry **measured** per-party wire bytes.  ``latency_s``
-            / ``bandwidth_bps`` inject per-message transit time (queue
-            only); ``timeout`` bounds each receive so a wedged owner
-            fails the resolve instead of hanging it.
+            / ``bandwidth_bps`` inject per-message transit time (wire
+            backends only); ``timeout`` bounds each receive so a wedged
+            owner fails the resolve instead of hanging it.
+          * ``"process"`` — the same wire-native protocol with each
+            owner's actor in its own *spawned worker process*
+            (``federation/runtime.py``): every leg crosses a real OS
+            pipe, the PSI stack's jax-free import chain keeps the
+            workers numpy-light, and a crashed worker surfaces through
+            its poison-pill frame or exit code.
 
         The intersection is bit-identical across backends, chunk sizes,
         and parallelism (property-tested)."""
-        if backend not in ("direct", "queue"):
+        if backend not in ("direct", "queue", "process"):
             raise ValueError(f"unknown resolve backend {backend!r}")
         if backend == "direct" and (latency_s or bandwidth_bps):
             raise ValueError("latency_s/bandwidth_bps model the wire — "
-                             "they require backend='queue'")
+                             "they require a wire backend "
+                             "('queue' or 'process')")
         stats: dict = {"rounds": [], "global_intersection": 0,
                        "mode": mode, "parallelism": parallelism,
                        "chunk_size": chunk_size, "backend": backend}
-        if backend == "queue":
+        if backend != "direct":
             stats["latency_s"] = latency_s
             stats["per_party_wire"] = {}
         global_ids = set(self.scientist.ids)
         client = self.scientist.psi_client(group, mode)
         with ModexpPool(parallelism) as pool:
             for owner in self.owners:
-                if backend == "queue":
+                if backend != "direct":
                     inter, rstats = self._resolve_owner_wire(
-                        client, owner, group=group, fp_rate=fp_rate,
-                        pool=pool, chunk_size=chunk_size,
+                        client, owner, backend=backend, group=group,
+                        fp_rate=fp_rate, pool=pool, chunk_size=chunk_size,
                         latency_s=latency_s, bandwidth_bps=bandwidth_bps,
                         timeout=timeout, stats=stats)
                 else:
@@ -221,7 +230,7 @@ class VerticalSession:
                         "upload_wire_bytes": rstats["upload_wire_bytes"],
                         "download_wire_bytes":
                             rstats["download_wire_bytes"]}
-                       if backend == "queue" else {})})
+                       if backend != "direct" else {})})
         stats["global_intersection"] = len(global_ids)
         self.scientist._align(global_ids)
         for owner in self.owners:
@@ -258,30 +267,49 @@ class VerticalSession:
             self._log(frm, to, kind, bytes=n_bytes, chunks=n_msgs)
         return inter, rstats
 
-    def _resolve_owner_wire(self, client, owner, *, group, fp_rate, pool,
-                            chunk_size, latency_s, bandwidth_bps, timeout,
-                            stats):
+    def _resolve_owner_wire(self, client, owner, *, backend, group,
+                            fp_rate, pool, chunk_size, latency_s,
+                            bandwidth_bps, timeout, stats):
         """One wire-native PSI round: the owner's actor on its own thread
-        behind a serialized channel, every leg a measured Message.  The
-        transcript gets one aggregated entry per kind per direction with
-        *measured* payload and wire bytes, and ``stats['per_party_wire']``
-        the owner's channel totals."""
+        (``backend="queue"``) or in its own spawned process
+        (``backend="process"``, ``federation/runtime.py``) behind a
+        serialized channel, every leg a measured Message.  The transcript
+        gets one aggregated entry per kind per direction with *measured*
+        payload and wire bytes, and ``stats['per_party_wire']`` the
+        owner's channel totals."""
         from repro.federation.psi_transport import wire_psi_round
 
-        ep_sci, ep_own = transport.channel_pair(
-            "scientist", owner.name, backend="queue",
-            latency_s=latency_s, bandwidth_bps=bandwidth_bps)
-        worker = owner.psi_endpoint(ep_own, group, fp_rate, pool=pool)
-        th = threading.Thread(target=worker.run, daemon=True,
-                              name=f"psi-{owner.name}")
-        th.start()
-        try:
-            inter, rstats = wire_psi_round(
-                client, ep_sci, worker=worker, pool=pool,
-                chunk_size=chunk_size, timeout=timeout)
-        finally:
-            ep_sci.send("psi_stop", {})
-            th.join(timeout=10.0)
+        if backend == "process":
+            from repro.federation import runtime
+            handle = runtime.spawn_psi_worker(
+                owner, group=group, fp_rate=fp_rate,
+                latency_s=latency_s, bandwidth_bps=bandwidth_bps)
+            ep_sci = handle.endpoint
+            try:
+                inter, rstats = wire_psi_round(
+                    client, ep_sci, worker=handle, pool=pool,
+                    chunk_size=chunk_size, timeout=timeout)
+            finally:
+                try:
+                    ep_sci.send("psi_stop", {})
+                except RuntimeError:        # worker already gone
+                    pass
+                handle.shutdown()
+        else:
+            ep_sci, ep_own = transport.channel_pair(
+                "scientist", owner.name, backend="queue",
+                latency_s=latency_s, bandwidth_bps=bandwidth_bps)
+            worker = owner.psi_endpoint(ep_own, group, fp_rate, pool=pool)
+            th = threading.Thread(target=worker.run, daemon=True,
+                                  name=f"psi-{owner.name}")
+            th.start()
+            try:
+                inter, rstats = wire_psi_round(
+                    client, ep_sci, worker=worker, pool=pool,
+                    chunk_size=chunk_size, timeout=timeout)
+            finally:
+                ep_sci.send("psi_stop", {})
+                th.join(timeout=10.0)
 
         sent, rcvd = ep_sci.sent_stats, ep_sci.recv_stats
         for kind, st in sorted(sent["by_kind"].items()):
@@ -314,7 +342,11 @@ class VerticalSession:
         (``MLPSplitConfig`` -> MLPSplitNN, ``ArchConfig`` -> SplitModel)
         and initialize per-party parameters."""
         self.adapter = build_adapter(config)
-        key = jax.random.PRNGKey(self.seed if seed is None else seed)
+        # the config + init seed are what a spawned owner worker needs to
+        # rebuild its adapter/programs (federation/runtime.py)
+        self.config = config
+        self._init_seed = self.seed if seed is None else seed
+        key = jax.random.PRNGKey(self._init_seed)
         self.params = self.adapter.init(key)
         self._eval_fn = jax.jit(
             lambda p, b: self.adapter.loss_fn(p, b)[1])
@@ -332,7 +364,8 @@ class VerticalSession:
             schedule: str = "pipelined", microbatches: int = 1,
             compression: Optional[str] = None, backend: str = "queue",
             latency_s: float = 0.0,
-            bandwidth_bps: Optional[float] = None) -> dict:
+            bandwidth_bps: Optional[float] = None,
+            timeout: float = 120.0) -> dict:
         """The SplitNN training loop.
 
         Exactly one of ``epochs`` (feature workloads) / ``steps`` (LM
@@ -359,8 +392,14 @@ class VerticalSession:
         "sequential" is the fully synchronous baseline),
         ``compression`` (None | "fp16" | "int8" cut-payload codec),
         ``backend`` ("queue" = serialized simulated network, "direct" =
-        in-process reference passing), ``latency_s``/``bandwidth_bps``
-        (injected per-message transit time)."""
+        in-process reference passing, "process" = each owner in its own
+        spawned worker process over a real OS pipe —
+        ``federation/runtime.py``), ``latency_s``/``bandwidth_bps``
+        (injected per-message transit time), ``timeout`` (seconds each
+        steady-state cross-party receive may wait before a wedged or
+        dead owner surfaces as a clean error on the scientist side;
+        warmup receives use at least 120 s to absorb worker startup +
+        compile)."""
         self._require(resolved=True, built=True, labels=True)
         if (epochs is None) == (steps is None):
             raise ValueError("pass exactly one of epochs= or steps=")
@@ -387,7 +426,8 @@ class VerticalSession:
                 shuffle_seed=shuffle_seed, verbose=verbose,
                 schedule=schedule, microbatches=microbatches,
                 compression=compression, backend=backend,
-                latency_s=latency_s, bandwidth_bps=bandwidth_bps)
+                latency_s=latency_s, bandwidth_bps=bandwidth_bps,
+                timeout=timeout)
         if microbatches > 1:
             return self._fit_joint_microbatched(
                 epochs=epochs, steps=steps, batch_size=batch_size,
@@ -671,7 +711,10 @@ class VerticalSession:
 
     def _recv_from_owner(self, ep, worker, kind, timeout: float = 120.0):
         """Receive ``kind`` from one owner, surfacing a dead worker
-        immediately (short poll) instead of after the full timeout."""
+        immediately (short poll) instead of after the full timeout.
+        Process-backed workers can also fail *through* the receive — a
+        poison-pill frame or a severed pipe raises out of ``recv_kind``
+        — and get wrapped in the same owner-attributed error."""
         deadline = time.monotonic() + timeout
         while True:
             try:
@@ -685,24 +728,48 @@ class VerticalSession:
                     raise RuntimeError(
                         f"timed out waiting for {kind!r} from "
                         f"{worker.owner.name!r}")
+            except Exception:
+                if getattr(worker, "error", None) is not None:
+                    raise RuntimeError(
+                        f"owner worker {worker.owner.name!r} failed"
+                    ) from worker.error
+                raise
 
-    def _sync_split_params(self, workers, eps, trunk_params):
+    def _sync_split_params(self, workers, eps, trunk_params,
+                           timeout: float = 120.0):
         """Flush every owner's message queue (barrier), then reassemble
         the session-resident param tree from the owners' live segments —
-        the trusted-runtime accessor, mirroring ``_owner_arrays``."""
+        the trusted-runtime accessor, mirroring ``_owner_arrays``.
+        Thread-backed owners expose their params directly; process-backed
+        owners answer a ``pull_params`` request with their numbered
+        numpy leaves, rebuilt here against the session's tree
+        structure."""
         for ep in eps:
             ep.send("barrier", {}, seq=-1)
         for ep, w in zip(eps, workers):
-            self._recv_from_owner(ep, w, "barrier_ack")
+            self._recv_from_owner(ep, w, "barrier_ack", timeout=timeout)
+        head_slices = []
+        for p, (ep, w) in enumerate(zip(eps, workers)):
+            if hasattr(w, "params"):            # in-process actor
+                head_slices.append(w.params)
+                continue
+            ep.send("pull_params", {}, seq=-1)
+            m = self._recv_from_owner(ep, w, "params_dump",
+                                      timeout=timeout)
+            structure = jax.tree_util.tree_structure(
+                self.adapter.owner_param_slice(self.params, p))
+            head_slices.append(jax.tree_util.tree_unflatten(
+                structure, [jnp.asarray(m.payload[str(i)])
+                            for i in range(len(m.payload))]))
         self.params = {
-            "heads": self.adapter.stack_head_params(
-                [w.params for w in workers]),
+            "heads": self.adapter.stack_head_params(head_slices),
             "trunk": trunk_params}
 
     def _fit_split(self, *, epochs, steps, batch_size, eval_frac, owner_lr,
                    scientist_lr, log_every, ckpt_dir, ckpt_every,
                    shuffle_seed, verbose, schedule, microbatches,
-                   compression, backend, latency_s, bandwidth_bps) -> dict:
+                   compression, backend, latency_s, bandwidth_bps,
+                   timeout=120.0) -> dict:
         """True split execution over the transport layer (paper Fig. 2).
 
         Per step t the wire carries exactly four message kinds:
@@ -734,6 +801,8 @@ class VerticalSession:
         if not getattr(adapter, "supports_split", False):
             raise ValueError(f"{type(adapter).__name__} does not support "
                              "split execution")
+        if backend not in ("queue", "direct", "process"):
+            raise ValueError(f"unknown fit backend {backend!r}")
         if schedule not in ("pipelined", "sequential"):
             raise ValueError(f"unknown schedule {schedule!r}")
         sequential = schedule == "sequential"
@@ -775,25 +844,49 @@ class VerticalSession:
 
         owner_opt, owner_update = adapter.owner_update_rule(owner_lr)
         workers, eps, threads = [], [], []
-        for p, owner in enumerate(self.owners):
-            ep_sci, ep_own = transport.channel_pair(
-                "scientist", owner.name, backend=backend,
-                latency_s=latency_s, bandwidth_bps=bandwidth_bps)
-            head_fwd, head_bwd = adapter.owner_programs(p)
-            w = OwnerComputeEndpoint(
-                owner, ep_own, head_fwd, head_bwd,
-                optimizer=owner_opt,
-                params=adapter.owner_param_slice(self.params, p),
-                codec=codec, ack_steps=sequential, microbatches=M,
-                gather=adapter.gather_program(),
-                update_program=owner_update,
-                tail_program=adapter.owner_tail_rule(owner_lr, p))
-            workers.append(w)
-            eps.append(ep_sci)
-            th = threading.Thread(target=w.run, daemon=True,
-                                  name=f"owner-{owner.name}")
-            th.start()
-            threads.append(th)
+        if backend == "process":
+            # each owner's head segment in its own spawned worker
+            # process (federation/runtime.py): the spec carries the
+            # model config + the owner's current param leaves, and the
+            # worker rebuilds the exact OwnerComputeEndpoint the thread
+            # path constructs below
+            from repro.federation import runtime
+            for p, owner in enumerate(self.owners):
+                spec = runtime.OwnerWorkerSpec(
+                    name=owner.name, ids=list(owner.ids),
+                    features=np.asarray(owner._features),
+                    owner_index=p, config=self.config,
+                    init_seed=self._init_seed,
+                    param_leaves=[np.asarray(leaf) for leaf in
+                                  jax.tree_util.tree_leaves(
+                                      adapter.owner_param_slice(
+                                          self.params, p))],
+                    codec=compression, microbatches=M,
+                    ack_steps=sequential, owner_lr=owner_lr,
+                    latency_s=latency_s, bandwidth_bps=bandwidth_bps)
+                handle = runtime.spawn_owner_worker(spec, owner=owner)
+                workers.append(handle)
+                eps.append(handle.endpoint)
+        else:
+            for p, owner in enumerate(self.owners):
+                ep_sci, ep_own = transport.channel_pair(
+                    "scientist", owner.name, backend=backend,
+                    latency_s=latency_s, bandwidth_bps=bandwidth_bps)
+                head_fwd, head_bwd = adapter.owner_programs(p)
+                w = OwnerComputeEndpoint(
+                    owner, ep_own, head_fwd, head_bwd,
+                    optimizer=owner_opt,
+                    params=adapter.owner_param_slice(self.params, p),
+                    codec=codec, ack_steps=sequential, microbatches=M,
+                    gather=adapter.gather_program(),
+                    update_program=owner_update,
+                    tail_program=adapter.owner_tail_rule(owner_lr, p))
+                workers.append(w)
+                eps.append(ep_sci)
+                th = threading.Thread(target=w.run, daemon=True,
+                                      name=f"owner-{owner.name}")
+                th.start()
+                threads.append(th)
 
         labels = self.scientist.labels
         rng = np.random.default_rng(self.seed if shuffle_seed is None
@@ -820,7 +913,8 @@ class VerticalSession:
             jitted trunk programs as-is (stacking happens in-program)."""
             cuts, aux = [], 0.0
             for ep, w in zip(eps, workers):
-                m = self._recv_from_owner(ep, w, "cut_activations")
+                m = self._recv_from_owner(ep, w, "cut_activations",
+                                          timeout=timeout)
                 if m.seq != seq:
                     raise RuntimeError(f"protocol desync: cut seq {m.seq} "
                                        f"!= expected {seq}")
@@ -836,6 +930,11 @@ class VerticalSession:
         old_switch = _sys.getswitchinterval()
         _sys.setswitchinterval(5e-4)
 
+        # warmup receives tolerate worker startup + compile (a spawned
+        # process imports jax and jits every program before its first
+        # cut) — the user's ``timeout`` governs steady-state receives
+        warmup_timeout = max(timeout, 120.0)
+
         # ---------------- warmup: compile both sides before the clock
         try:
             widx = np.zeros(batch_size, np.int32)
@@ -845,7 +944,8 @@ class VerticalSession:
             for m in range(M):
                 cuts = []
                 for ep, w in zip(eps, workers):
-                    mm = self._recv_from_owner(ep, w, "warmup_cuts")
+                    mm = self._recv_from_owner(ep, w, "warmup_cuts",
+                                               timeout=warmup_timeout)
                     cuts.append(codec.decode(mm.payload))
                 lab_m = jnp.asarray(wlab[m * bm:(m + 1) * bm])
                 if sequential:
@@ -863,7 +963,8 @@ class VerticalSession:
                 trunk_params, trunk_state,
                 jax.tree.map(jnp.zeros_like, trunk_params), 0)
             for ep, w in zip(eps, workers):
-                self._recv_from_owner(ep, w, "warmup_done")
+                self._recv_from_owner(ep, w, "warmup_done",
+                                      timeout=warmup_timeout)
 
             # ---------------- the timed training region
             history: dict = {"train": [], "eval": []}
@@ -873,7 +974,8 @@ class VerticalSession:
             metrics: dict = {}
 
             def sync():
-                self._sync_split_params(workers, eps, trunk_params)
+                self._sync_split_params(workers, eps, trunk_params,
+                                        timeout=timeout)
 
             if total_steps > 0:
                 send_fwd(next(gen), 0)
@@ -902,7 +1004,8 @@ class VerticalSession:
                         ep.send("cut_gradients", codec.encode(cg[p]),
                                 seq=t)
                     for ep, w in zip(eps, workers):
-                        self._recv_from_owner(ep, w, "step_done")
+                        self._recv_from_owner(ep, w, "step_done",
+                                              timeout=timeout)
                     if t + 1 < total_steps:
                         send_fwd(next(gen), t + 1)
                     parts_list = [parts]
@@ -956,15 +1059,23 @@ class VerticalSession:
                 overhead_s += time.time() - tb
 
             wall_s = time.time() - t0
-            self._sync_split_params(workers, eps, trunk_params)
+            self._sync_split_params(workers, eps, trunk_params,
+                                    timeout=timeout)
             if steps is not None and len(self._eval_idx):
                 history["eval"].append({"step": steps, **self.evaluate()})
         finally:
             _sys.setswitchinterval(old_switch)
             for ep in eps:
-                ep.send("stop", {})
+                try:
+                    ep.send("stop", {})
+                except RuntimeError:        # worker already gone
+                    pass
             for th in threads:
                 th.join(timeout=10.0)
+            for w in workers:
+                shutdown = getattr(w, "shutdown", None)
+                if shutdown is not None:    # process-backed handle
+                    shutdown()
 
         # ------------------------------------- measured traffic accounting
         per_owner: Dict[str, dict] = {}

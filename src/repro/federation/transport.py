@@ -39,6 +39,7 @@ payload is a single ``(rows, K+4)`` byte frame, values + bitcast scale.
 """
 from __future__ import annotations
 
+import os
 import queue
 import struct
 import threading
@@ -49,13 +50,44 @@ from typing import Dict, Optional, Tuple
 import numpy as np
 
 __all__ = ["Message", "Channel", "Endpoint", "channel_pair",
-           "Codec", "get_codec", "CODECS", "SPIN_WAIT_S"]
+           "Codec", "get_codec", "CODECS", "SPIN_WAIT_S", "spin_wait_s"]
 
 # Hybrid-wait margin: sleep until this close to a delivery deadline, then
 # spin on the monotonic clock.  ``time.sleep`` alone overshoots by the
 # kernel timer slack (measured 1.5 ms mean / 3 ms p90 here), which would
 # put milliseconds of scheduling noise on every simulated-latency hop.
 SPIN_WAIT_S = 3e-3
+
+#: single-core default: a long spin can't reclaim precision when the
+#: sender needs the same core to make progress — it only burns the GIL
+#: quantum the peer was waiting for, so CI boxes pinned to one core get
+#: a much shorter spin window by default.
+SPIN_WAIT_SINGLE_CORE_S = 5e-4
+
+
+def _effective_cores() -> int:
+    try:
+        return len(os.sched_getaffinity(0))
+    except (AttributeError, OSError):       # pragma: no cover - non-Linux
+        return os.cpu_count() or 1
+
+
+def spin_wait_s() -> float:
+    """The spin-wait margin in effect: the ``REPRO_SPIN_WAIT_S`` env var
+    when set to a valid non-negative float, else ``SPIN_WAIT_S``
+    (``SPIN_WAIT_SINGLE_CORE_S`` on hosts with one effective core).
+    Read at channel construction, so tests and deployments tune it
+    without touching code."""
+    raw = os.environ.get("REPRO_SPIN_WAIT_S")
+    if raw is not None:
+        try:
+            v = float(raw)
+            if v >= 0.0:
+                return v
+        except ValueError:
+            pass
+    return (SPIN_WAIT_S if _effective_cores() > 1
+            else SPIN_WAIT_SINGLE_CORE_S)
 
 
 def _wait_until(deadline: float, spin_s: float = SPIN_WAIT_S) -> None:
@@ -213,7 +245,7 @@ class Channel:
         self.serialize = serialize
         self.latency_s = latency_s
         self.bandwidth_bps = bandwidth_bps
-        self.spin_s = SPIN_WAIT_S if spin_s is None else spin_s
+        self.spin_s = spin_wait_s() if spin_s is None else spin_s
         # observation hook: tap(msg, blob) per send, with the serialized
         # frame (None on the direct backend).  The privacy-on-the-wire
         # tests capture full transcripts through this without touching

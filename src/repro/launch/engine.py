@@ -47,11 +47,14 @@ class ServingEngine:
                  pad_token: int = 0, transport: Optional[str] = None,
                  latency_s: float = 0.0,
                  bandwidth_bps: Optional[float] = None):
-        """``transport`` ("direct" | "queue") routes every cut activation
-        through a real ``federation.transport`` channel: prefill and
-        decode run as separate owner/scientist segment programs and
-        ``stats`` reports *measured* cut bytes off the wire instead of
-        the analytic ``cut_layer_traffic`` estimate."""
+        """``transport`` ("direct" | "queue" | "process") routes every
+        cut activation through a real ``federation.transport`` channel:
+        prefill and decode run as separate owner/scientist segment
+        programs and ``stats`` reports *measured* cut bytes off the wire
+        instead of the analytic ``cut_layer_traffic`` estimate
+        ("process" carries the frames over a real OS pipe —
+        ``federation.process_transport`` — with identical byte
+        accounting)."""
         cfg = model.cfg
         if cfg.modality != "text":
             raise ValueError("ServingEngine drives text archs")
@@ -70,9 +73,16 @@ class ServingEngine:
             if cfg.enc_dec:
                 raise ValueError("transport-backed serving supports "
                                  "decoder-only text archs")
-            self._ep_owner, self._ep_sci = transport_mod.channel_pair(
-                "owners", "scientist", backend=transport,
-                latency_s=latency_s, bandwidth_bps=bandwidth_bps)
+            if transport == "process":
+                from repro.federation.process_transport import \
+                    process_endpoint_pair
+                self._ep_owner, self._ep_sci = process_endpoint_pair(
+                    "owners", "scientist", latency_s=latency_s,
+                    bandwidth_bps=bandwidth_bps)
+            else:
+                self._ep_owner, self._ep_sci = transport_mod.channel_pair(
+                    "owners", "scientist", backend=transport,
+                    latency_s=latency_s, bandwidth_bps=bandwidth_bps)
             self._prefill_heads = jax.jit(model.prefill_heads)
             self._prefill_trunk = jax.jit(model.prefill_trunk)
             self._decode_heads = jax.jit(model.decode_heads)

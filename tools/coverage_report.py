@@ -16,8 +16,12 @@ Two engines, same report shape:
     denominators come from walking each module's compiled code objects
     (``co_lines``), i.e. exactly the lines the tracer could ever hit.
 
-The report is informational, not a gate (the committed baseline lives in
-``docs/BENCHMARKS.md``): the exit code reflects the *test run* only.
+The report is a **gate**: total coverage below ``REPRO_COVERAGE_MIN``
+(default 93, in percent) fails the run.  Set ``REPRO_COVERAGE_GATE=0``
+to drop back to informational mode (the escape hatch for exploratory
+branches); the committed baseline lives in ``docs/BENCHMARKS.md``.
+Slow-marked tests run too — the process-backend fit tests are what
+exercise the parent-side worker-lifecycle branches in ``session.py``.
 
     PYTHONPATH=src python tools/coverage_report.py [test paths...]
 """
@@ -28,6 +32,10 @@ import subprocess
 import sys
 
 ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+#: minimum total line coverage (percent) unless REPRO_COVERAGE_GATE=0
+COVERAGE_MIN = float(os.environ.get("REPRO_COVERAGE_MIN", "93"))
+GATED = os.environ.get("REPRO_COVERAGE_GATE", "1") != "0"
 
 TARGET_FILES = ("src/repro/core/psi.py",)
 TARGET_DIRS = ("src/repro/federation",)
@@ -42,6 +50,7 @@ DEFAULT_TESTS = (
     "tests/test_resolution.py",
     "tests/test_transport.py",
     "tests/test_federation.py",
+    "tests/test_process_transport.py",
 )
 
 
@@ -66,6 +75,8 @@ def run_pytest_cov(tests) -> int:
     cmd = [sys.executable, "-m", "pytest", "-q", *tests,
            "--cov=repro.core.psi", "--cov=repro.federation",
            "--cov-report=term"]
+    if GATED:
+        cmd.append(f"--cov-fail-under={COVERAGE_MIN}")
     env = dict(os.environ)
     env["PYTHONPATH"] = os.path.join(ROOT, "src") + (
         os.pathsep + env["PYTHONPATH"] if env.get("PYTHONPATH") else "")
@@ -144,7 +155,14 @@ def run_fallback(tests) -> int:
         print(f"{rel:<44} {len(exe):>6} {len(hit):>6} {pct:>6.1f}%")
     pct = 100.0 * tot_hit / max(tot_lines, 1)
     print(f"{'TOTAL':<44} {tot_lines:>6} {tot_hit:>6} {pct:>6.1f}%")
-    return int(rc)
+    if int(rc):
+        return int(rc)
+    if GATED and pct < COVERAGE_MIN:
+        print(f"FAIL coverage gate: total {pct:.1f}% < "
+              f"REPRO_COVERAGE_MIN={COVERAGE_MIN:g}% "
+              f"(set REPRO_COVERAGE_GATE=0 to bypass)")
+        return 1
+    return 0
 
 
 def main(argv=None) -> int:

@@ -105,7 +105,18 @@ def run_one(label, code, argv) -> bool:
                 "w", suffix=".py", delete=False) as f:
             f.write(code)
             tmp = f.name
-        cmd = [sys.executable, tmp]
+        # launch via a ``-c`` + exec shim: snippets are unguarded (no
+        # ``if __name__ == "__main__"``), and multiprocessing *spawn*
+        # children re-execute the parent's main-module file — which
+        # would re-run the whole snippet recursively.  Under ``-c`` the
+        # real ``sys.modules['__main__']`` has no ``__file__`` (runpy
+        # would temporarily install the snippet there, so it is no
+        # help), spawn ships no main module, and process-backend
+        # snippets fork out cleanly.
+        shim = ("import sys; p = sys.argv[1]; "
+                "exec(compile(open(p).read(), p, 'exec'), "
+                "{'__name__': '__main__', '__file__': p})")
+        cmd = [sys.executable, "-c", shim, tmp]
     else:
         tmp = None
         cmd = [sys.executable, *argv]
