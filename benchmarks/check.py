@@ -32,6 +32,7 @@ TRACKED = {
     "BENCH_transport.json": "transport",
     "BENCH_psi.json": "psi_scaling",
     "BENCH_parties.json": "parties",
+    "BENCH_serving.json": "serving",
 }
 
 #: informational subtrees: committed by full-size runs, not re-measured
@@ -40,7 +41,7 @@ TRACKED = {
 #: ``informational`` subtree records host-dependent facts like core
 #: count and the single-core speedup)
 SKIP_SUBTREES = ("config", "pipeline_sweep", "trajectory", "wire_sweep",
-                 "owners_sweep", "informational")
+                 "owners_sweep", "informational", "serving_sweep")
 SKIP_KEYS = ("pipelined_microbatches",)
 
 
@@ -51,7 +52,10 @@ def _rule(key: str):
     if "accuracy" in key:
         return ("abs", 0.08)
     if key in ("n", "bloom_shards", "n_chunks", "chunk_size",
-               "parallelism", "peak_inflight_elements"):
+               "parallelism", "peak_inflight_elements",
+               "bit_identical", "cut_cache_hits", "slot_refills",
+               "repeat_head_prefills", "repeat_token_bitwise",
+               "meets_1p3_floor"):
         return ("exact", None)      # deterministic protocol structure
     if "bytes" in key:
         return ("exact", None)

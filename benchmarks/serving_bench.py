@@ -1,0 +1,233 @@
+"""Continuous-batching serving benchmark (``BENCH_serving.json``).
+
+Three questions about the serving engine (``launch/engine.py``):
+
+  1. **continuous vs wave** — a paired, interleaved A/B of the *same*
+     mixed-length request set (one long request per 4-slot wave, the
+     rest short) through both schedulers over the queue transport at
+     8 ms injected wire latency.  Wave batching pays the slowest
+     request's ticks for every wave; continuous batching refills freed
+     slots immediately and overlaps the refill's prefill ship with the
+     decode ship's latency window, so sustained requests/s must beat
+     wave by >= 1.3x (the gate re-asserts the floor on every
+     ``make bench-check`` run — min-of-``pairs`` walls on each side,
+     so the box's scheduling noise cancels).
+  2. **repeat-entity cut cache** — a returning entity's request must
+     ship *zero* cut-upload bytes and recompute nothing owner-side
+     (transcript-asserted cache hit; exact-gated byte metric).
+  3. **bit-identity** — both schedulers generate identical greedy
+     tokens for the gate's request set (exact-gated flag).
+
+The informational ``serving_sweep`` subtree (committed by full runs,
+skipped under ``--check``) crosses injected latency (0/2/8 ms) x cut
+compression (none/fp16/int8) x transport backend (direct/queue/process)
+and records sustained req/s + honest per-request p50/p99 latency.
+Compiles land outside every timed region (a warmup drain first).
+"""
+from __future__ import annotations
+
+import json
+import time
+
+import numpy as np
+
+#: committed-baseline gate geometry: 4 slots, 8 requests, one long
+#: request per wave-of-4 (the wave scheduler's worst honest case)
+GATE_B, GATE_CTX, GATE_N = 4, 32, 8
+GATE_MAX_NEW = 12
+GATE_MIX = (12, 1, 1, 1, 12, 1, 1, 1)
+GATE_LATENCY_S = 0.008
+SPEEDUP_FLOOR = 1.3
+
+SWEEP_LATENCIES_MS = (0, 2, 8)
+SWEEP_COMPRESSIONS = (None, "fp16", "int8")
+SWEEP_BACKENDS = ("direct", "queue", "process")
+
+
+def _build():
+    import jax
+    from repro.configs import get_config
+    from repro.models.model import SplitModel
+    cfg = get_config("llama3.2-3b", reduced=True)
+    model = SplitModel(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    return cfg, model, params
+
+
+def _contexts(cfg, n, seed=0):
+    rng = np.random.default_rng(seed)
+    return [rng.integers(0, cfg.vocab, GATE_CTX) for _ in range(n)]
+
+
+def _serve(model, params, ctxs, mix, *, scheduler, transport="queue",
+           latency_s=0.0, compression=None, cut_cache=None,
+           batch_slots=GATE_B):
+    """One timed drain: warmup (compiles) then the measured run.
+    Returns (wall_s, {rid: generated}, latencies_s, engine)."""
+    from repro.launch.engine import ServingEngine
+    eng = ServingEngine(model, params, batch_slots=batch_slots,
+                        ctx_len=GATE_CTX, max_new=GATE_MAX_NEW,
+                        scheduler=scheduler, transport=transport,
+                        latency_s=latency_s, compression=compression,
+                        cut_cache=cut_cache)
+    for c in ctxs[:batch_slots]:             # warmup: prefill + decode
+        eng.submit(c, max_new=2)             # programs compile here
+    eng.run()
+    t0 = time.perf_counter()
+    rids = [eng.submit(c, max_new=m) for c, m in zip(ctxs, mix)]
+    out = eng.run()
+    wall = time.perf_counter() - t0
+    gens = {r: out[r].generated for r in rids}
+    lats = [out[r].latency_s for r in rids]
+    return wall, gens, lats, eng
+
+
+def _gate(model, params, cfg, pairs: int):
+    """Paired interleaved A/B (wave, continuous, wave, ...) + the
+    repeat-entity and bit-identity sections, at the committed size."""
+    ctxs = _contexts(cfg, GATE_N)
+    w_walls, c_walls = [], []
+    w_gens = c_gens = None
+    c_lats = None
+    for _ in range(pairs):
+        w, w_gens, _, ew = _serve(model, params, ctxs, GATE_MIX,
+                                  scheduler="wave",
+                                  latency_s=GATE_LATENCY_S)
+        ew.close()
+        c, c_gens, c_lats, ec = _serve(model, params, ctxs, GATE_MIX,
+                                       scheduler="continuous",
+                                       latency_s=GATE_LATENCY_S)
+        refills = ec.stats["slot_refills"]
+        ec.close()
+        w_walls.append(w)
+        c_walls.append(c)
+    wave_wall, cont_wall = min(w_walls), min(c_walls)
+    speedup = wave_wall / max(cont_wall, 1e-9)
+    identical = int(w_gens == c_gens)
+
+    # repeat entity: second visit ships zero cut-upload bytes and
+    # recomputes no head prefill (one admission control frame only)
+    from repro.launch.engine import ServingEngine
+    eng = ServingEngine(model, params, batch_slots=GATE_B,
+                        ctx_len=GATE_CTX, max_new=GATE_MAX_NEW,
+                        scheduler="continuous", transport="queue",
+                        cut_cache=True)
+    eng.submit(ctxs[0], max_new=4)
+    first = eng.run()
+    pb, pc = eng.stats["cut_payload_bytes"], eng.stats["prefill_calls"]
+    rid2 = eng.submit(ctxs[0], max_new=1)
+    second = eng.run()
+    repeat_bytes = eng.stats["cut_payload_bytes"] - pb
+    repeat_prefills = eng.stats["prefill_calls"] - pc
+    hit = int(any(e[0] == "cut_cache_hit" and e[1] == rid2
+                  for e in eng.transcript))
+    tok_match = int(second[rid2].generated[0]
+                    == first[min(first)].generated[0])
+    eng.close()
+
+    gate = {
+        "wave_wall_ms": 1e3 * wave_wall,
+        "continuous_wall_ms": 1e3 * cont_wall,
+        "continuous_vs_wave_speedup": speedup,
+        "meets_1p3_floor": int(speedup >= SPEEDUP_FLOOR),
+        "continuous_req_per_s": GATE_N / max(cont_wall, 1e-9),
+        "wave_req_per_s": GATE_N / max(wave_wall, 1e-9),
+        "p50_latency_ms": 1e3 * float(np.percentile(c_lats, 50)),
+        "p99_latency_ms": 1e3 * float(np.percentile(c_lats, 99)),
+        "slot_refills": refills,
+        "bit_identical": identical,
+        "repeat_cut_upload_bytes": repeat_bytes,
+        "repeat_head_prefills": repeat_prefills,
+        "cut_cache_hits": hit,
+        "repeat_token_bitwise": tok_match,
+    }
+    failures = []
+    if speedup < SPEEDUP_FLOOR:
+        failures.append(f"continuous/wave speedup {speedup:.2f} < "
+                        f"{SPEEDUP_FLOOR} at 8 ms injected latency")
+    if not identical:
+        failures.append("wave and continuous generations differ")
+    if repeat_bytes != 0 or repeat_prefills != 0 or not hit:
+        failures.append(
+            f"repeat entity not free: bytes={repeat_bytes} "
+            f"prefills={repeat_prefills} transcript_hit={hit}")
+    if failures:
+        raise RuntimeError("serving gate failed: " + "; ".join(failures))
+    return gate
+
+
+def _sweep(model, params, cfg):
+    """latency x compression x backend cross, continuous scheduler.
+    Informational (host-dependent walls; committed by full runs)."""
+    ctxs = _contexts(cfg, GATE_N, seed=1)
+    tree: dict = {}
+    rows = []
+    for lat_ms in SWEEP_LATENCIES_MS:
+        for comp in SWEEP_COMPRESSIONS:
+            for backend in SWEEP_BACKENDS:
+                wall, _, lats, eng = _serve(
+                    model, params, ctxs, GATE_MIX,
+                    scheduler="continuous", transport=backend,
+                    latency_s=lat_ms * 1e-3, compression=comp)
+                cell = {
+                    "req_per_s": GATE_N / max(wall, 1e-9),
+                    "p50_latency_ms": 1e3 * float(np.percentile(lats, 50)),
+                    "p99_latency_ms": 1e3 * float(np.percentile(lats, 99)),
+                    "cut_wire_bytes": eng.stats["cut_wire_bytes"],
+                }
+                eng.close()
+                key = f"{lat_ms}ms_{comp or 'none'}_{backend}"
+                tree[key] = cell
+                rows.append((f"serving_{key}",
+                             round(1e3 * wall, 1),
+                             f"req/s={cell['req_per_s']:.1f}"))
+    return tree, rows
+
+
+def run(out: str = "BENCH_serving.json", *, sweep: bool = True,
+        pairs: int = 3):
+    cfg, model, params = _build()
+    report: dict = {"config": {
+        "batch_slots": GATE_B, "ctx_len": GATE_CTX, "n_requests": GATE_N,
+        "max_new_mix": list(GATE_MIX), "latency_ms": 1e3 * GATE_LATENCY_S,
+        "pairs": pairs, "arch": "llama3.2-3b (reduced)"}}
+    rows = []
+
+    gate = _gate(model, params, cfg, pairs)
+    report["gate"] = gate
+    rows.append(("serving_gate_wave_wall",
+                 round(gate["wave_wall_ms"] * 1e3, 1),
+                 f"req/s={gate['wave_req_per_s']:.1f}"))
+    rows.append(("serving_gate_continuous_wall",
+                 round(gate["continuous_wall_ms"] * 1e3, 1),
+                 f"req/s={gate['continuous_req_per_s']:.1f} "
+                 f"speedup={gate['continuous_vs_wave_speedup']:.2f}"))
+    rows.append(("serving_gate_repeat_upload",
+                 gate["repeat_cut_upload_bytes"],
+                 f"cache_hit={gate['cut_cache_hits']} "
+                 f"bit_identical={gate['bit_identical']}"))
+
+    if sweep:
+        report["serving_sweep"], srows = _sweep(model, params, cfg)
+        rows.extend(srows)
+
+    with open(out, "w") as f:
+        json.dump(report, f, indent=2)
+    return rows
+
+
+def run_fast(out: str = "BENCH_serving.json"):
+    return run(out, sweep=False, pairs=1)
+
+
+def run_check(out: str = "BENCH_serving.json"):
+    """The bench-check section: gate geometry only, no sweep — the
+    1.3x floor, bit-identity, and the free repeat entity are
+    re-asserted (hard failures), then compared against the committed
+    baseline with the usual tolerances."""
+    return run(out, sweep=False, pairs=3)
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(",".join(str(x) for x in r))

@@ -5,19 +5,81 @@ queues every aligned request, and the engine serves them in waves against
 one resident model.
 
 By default the engine serves through a transport-backed boundary
-(``--transport direct|queue``): every cut activation crosses a real
-``federation.transport`` channel, and the cut bytes reported at the end
-are *measured* off that channel — not the analytic ``cut_traffic``
+(``--transport direct|queue|process``): every cut activation crosses a
+real ``federation.transport`` channel, and the cut bytes reported at the
+end are *measured* off that channel — not the analytic ``cut_traffic``
 estimate.  ``--transport none`` restores the fused joint program.
 
+``--continuous`` switches the engine from drain-by-waves to
+slot-level continuous batching (freed slots are refilled immediately),
+and ``--sessions N`` with N > 1 multiplexes N independent serving
+sessions over ONE shared owner<->scientist channel via
+``ServingService`` — each session's frames ride the same wire under a
+session-scoped kind prefix, and repeat contexts across sessions hit the
+shared cut cache.
+
     PYTHONPATH=src python examples/serve_split.py [--arch llama3.2-3b]
+    PYTHONPATH=src python examples/serve_split.py --continuous \\
+        --sessions 2 --transport process --latency-ms 2
 """
 import argparse
+import threading
 import time
+
+import numpy as np
 
 from repro.configs import get_config
 from repro.data import make_token_dataset
 from repro.federation import VerticalSession, sequence_parties
+
+
+def _serve_multiplexed(session, contexts, args):
+    """N engine sessions sharing one channel through ServingService."""
+    from repro.launch.engine import ServingService
+    transport = "queue" if args.transport in ("none", "direct") \
+        else args.transport
+    svc = ServingService(session.adapter.model, session.params,
+                         transport=transport,
+                         latency_s=args.latency_ms * 1e-3,
+                         scheduler="continuous" if args.continuous
+                         else "wave")
+    engines = [svc.session(batch_slots=args.batch,
+                           ctx_len=contexts.shape[1], max_new=args.new)
+               for _ in range(args.sessions)]
+    shards = [contexts[i::args.sessions] for i in range(args.sessions)]
+    results = [None] * args.sessions
+
+    def drain(i):
+        for row in shards[i]:
+            engines[i].submit(row)
+        results[i] = engines[i].run()
+
+    t0 = time.time()
+    threads = [threading.Thread(target=drain, args=(i,))
+               for i in range(args.sessions)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    dt = time.time() - t0
+
+    total_req = sum(len(r) for r in results)
+    total_tok = sum(e.stats["tokens_generated"] for e in engines)
+    print(f"multiplexed {args.sessions} sessions over one {transport} "
+          f"channel: {total_req} requests, {total_tok} tokens "
+          f"in {dt:.1f}s")
+    for i, eng in enumerate(engines):
+        st = eng.stats
+        print(f"  session {i}: {st['requests']} requests, "
+              f"{st['slot_refills']} slot refills, "
+              f"{st['cut_payload_bytes']} cut payload B")
+    ch = svc.channel_stats
+    print(f"shared channel totals: {ch['wire_bytes']} wire B "
+          f"across {ch['messages']} frames "
+          f"(cache: {svc.cut_cache.hits} hits / "
+          f"{svc.cut_cache.misses} misses)")
+    svc.close()
+    return {i: r for i, r in enumerate(results)}
 
 
 def main(argv=None):
@@ -28,11 +90,17 @@ def main(argv=None):
     ap.add_argument("--new", type=int, default=24)
     ap.add_argument("--n-batches", type=int, default=3)
     ap.add_argument("--transport", default="direct",
-                    choices=["direct", "queue", "none"],
+                    choices=["direct", "queue", "process", "none"],
                     help="channel backend for the cut boundary "
                          "(none = fused joint program, no measurement)")
     ap.add_argument("--latency-ms", type=float, default=0.0,
                     help="injected per-message channel latency")
+    ap.add_argument("--continuous", action="store_true",
+                    help="slot-level continuous batching instead of "
+                         "drain-by-waves")
+    ap.add_argument("--sessions", type=int, default=1,
+                    help="N > 1 multiplexes N serving sessions over one "
+                         "shared channel (ServingService)")
     args = ap.parse_args(argv)
 
     cfg = get_config(args.arch, reduced=True)
@@ -44,18 +112,24 @@ def main(argv=None):
     session.resolve(group="modp512")
     session.build(cfg)
 
+    sched = "continuous" if args.continuous else "wave"
     print(f"serving {cfg.name} (reduced): {cfg.split.n_owners} owner heads "
-          f"+ trunk, ctx {args.ctx}, {args.new} new tokens/request")
+          f"+ trunk, ctx {args.ctx}, {args.new} new tokens/request "
+          f"({sched} scheduler)")
+    if args.sessions > 1:
+        return _serve_multiplexed(session, np.asarray(contexts), args)
     transport = None if args.transport == "none" else args.transport
     t0 = time.time()
     results, engine = session.serve_dataset(
         max_new=args.new, batch_slots=args.batch, transport=transport,
-        latency_s=args.latency_ms * 1e-3)
+        latency_s=args.latency_ms * 1e-3, scheduler=sched)
     dt = time.time() - t0
     st = engine.stats
     for rid in sorted(results)[:3]:
         print(f"  request {rid}: sample {results[rid].generated[:10]}")
-    print(f"served {st['requests']} requests in {st['waves']} waves, "
+    batches = (f"{st['waves']} waves" if sched == "wave"
+               else f"{st['ticks']} ticks, {st['slot_refills']} refills")
+    print(f"served {st['requests']} requests in {batches}, "
           f"{st['tokens_generated']} tokens in {dt:.1f}s "
           f"({st['tokens_generated'] / dt:.1f} tok/s)")
     if transport is not None:

@@ -72,13 +72,21 @@ class BloomFilter:
         h1 = int.from_bytes(d[0:8], "big")
         h2 = int.from_bytes(d[8:16], "big") | 1
         for i in range(self.k):
-            yield ((h1 + i * h2) & _MASK64) % self.m
+            # enhanced double hashing (Dillinger-Manolios): the cubic
+            # term keeps the k probes well-spread even when h2 shares a
+            # factor with a small composite m — plain h1 + i*h2 then
+            # cycles through m/gcd(h2, m) slots and the real fp rate
+            # blows past the sizing target on tiny filters
+            yield ((h1 + i * h2 + (i * i * i - i) // 6) & _MASK64) % self.m
 
     def _probe_matrix(self, h1: np.ndarray, h2: np.ndarray) -> np.ndarray:
         """(B, k) probe indices — uint64 wraparound matches the scalar
-        path's explicit ``& MASK64``."""
+        path's explicit ``& MASK64`` (enhanced double hashing, same
+        closed form as ``_indices``)."""
         i = np.arange(self.k, dtype=np.uint64)
-        return (h1[:, None] + i[None, :] * h2[:, None]) % np.uint64(self.m)
+        off = (i * i * i - i) // np.uint64(6)
+        return ((h1[:, None] + i[None, :] * h2[:, None] + off[None, :])
+                % np.uint64(self.m))
 
     # -- scalar API --------------------------------------------------------
     def add(self, item: bytes):

@@ -131,3 +131,21 @@ def pad_contexts(contexts: Sequence[Array], n_slots: int, length: int,
 def serving_owner_slices(batch_tokens: Array, n_owners: int) -> jnp.ndarray:
     """Padded (B, S) wave -> (P, B, S_p) device-ready owner slices."""
     return jnp.asarray(sequence_owner_slices(batch_tokens, n_owners))
+
+
+def pad_context_row(tokens: Array, length: int, pad: int = 0,
+                    pad_side: str = "left") -> Array:
+    """One request's padded (length,) row — the slot-level unit of the
+    serving layout (continuous batching admits one slot at a time)."""
+    return pad_contexts([tokens], 1, length, pad=pad, pad_side=pad_side)[0]
+
+
+def context_tag(row: Array) -> str:
+    """sha256 content tag of a padded context row — the PSI blind-upload
+    dedup trick (entity resolution's content addressing) applied to
+    serving: two requests with byte-identical padded contexts are the
+    same entity-context, whoever submits them.  Keys the repeat-entity
+    cut cache (``launch/engine.py``)."""
+    import hashlib
+    a = np.ascontiguousarray(np.asarray(row, np.int32))
+    return hashlib.sha256(a.tobytes()).hexdigest()

@@ -107,6 +107,10 @@ class ProcessEndpoint:
         self.peer_error: Optional[BaseException] = None
         self._stash: list = []
         self._lock = threading.Lock()
+        # stash + pipe-read serialization: multiplexed serving sessions
+        # may block in recv_kind on one shared endpoint concurrently
+        # (same discipline as transport.Endpoint)
+        self._rlock = threading.RLock()
         self._outq: "_queue.SimpleQueue" = _queue.SimpleQueue()
         self._send_error: Optional[BaseException] = None
         self._writer = threading.Thread(
@@ -201,25 +205,39 @@ class ProcessEndpoint:
             self.tap(msg, blob)
         return msg
 
+    _POLL_S = 0.05
+
     def recv(self, timeout: Optional[float] = None) -> Message:
-        if self._stash:
-            return self._stash.pop(0)
-        if self.peer_error is not None:
-            raise self.peer_error
-        return self._recv_frame(timeout)
+        with self._rlock:
+            if self._stash:
+                return self._stash.pop(0)
+            if self.peer_error is not None:
+                raise self.peer_error
+            return self._recv_frame(timeout)
 
     def recv_kind(self, kind: str, timeout: Optional[float] = None
                   ) -> Message:
         """Next message of ``kind``; earlier-arriving other kinds are
-        stashed, exactly like :class:`transport.Endpoint`."""
-        for i, m in enumerate(self._stash):
-            if m.kind == kind:
-                return self._stash.pop(i)
+        stashed, exactly like :class:`transport.Endpoint`.  Short-poll
+        under the lock so concurrent sessions sharing this endpoint
+        each end up with their own frames."""
+        deadline = None if timeout is None else time.monotonic() + timeout
         while True:
-            msg = self._recv_frame(timeout)
-            if msg.kind == kind:
-                return msg
-            self._stash.append(msg)
+            with self._rlock:
+                for i, m in enumerate(self._stash):
+                    if m.kind == kind:
+                        return self._stash.pop(i)
+                try:
+                    msg = self._recv_frame(self._POLL_S)
+                except _queue.Empty:
+                    msg = None
+                if msg is not None:
+                    if msg.kind == kind:
+                        return msg
+                    self._stash.append(msg)
+                    continue
+            if deadline is not None and time.monotonic() >= deadline:
+                raise _queue.Empty
 
     def empty(self) -> bool:
         return not self._stash and not self.conn.poll(0)

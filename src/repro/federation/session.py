@@ -1174,9 +1174,15 @@ class VerticalSession:
         """Wrap the resident split model in a ``ServingEngine`` (LM archs).
         Kwargs are forwarded: ``batch_slots, ctx_len, max_new, eos_token,
         ring_cache, pad_token``, plus the transport boundary knobs
-        ``transport`` ("direct" | "queue" routes every cut activation
-        through a measured ``federation.transport`` channel),
-        ``latency_s``, and ``bandwidth_bps``."""
+        ``transport`` ("direct" | "queue" | "process" routes every cut
+        activation through a measured ``federation.transport`` channel),
+        ``latency_s``, ``bandwidth_bps``, and ``compression``
+        (None | "fp16" | "int8" cut codec), and the serving knobs
+        ``scheduler`` ("wave" drains in fixed waves; "continuous"
+        refills freed slots per tick), ``max_queue`` (bounded admission
+        — ``submit`` raises ``QueueFull`` beyond it), and ``cut_cache``
+        (True or a ``CutCache`` — repeat contexts skip head recompute
+        and cut upload entirely)."""
         self._require(built=True)
         if not getattr(self.adapter, "supports_serving", False):
             raise ValueError(

@@ -49,8 +49,9 @@ from typing import Dict, Optional, Tuple
 
 import numpy as np
 
-__all__ = ["Message", "Channel", "Endpoint", "channel_pair",
-           "Codec", "get_codec", "CODECS", "SPIN_WAIT_S", "spin_wait_s"]
+__all__ = ["Message", "Channel", "Endpoint", "ScopedEndpoint",
+           "channel_pair", "Codec", "get_codec", "CODECS", "SPIN_WAIT_S",
+           "spin_wait_s"]
 
 # Hybrid-wait margin: sleep until this close to a delivery deadline, then
 # spin on the monotonic clock.  ``time.sleep`` alone overshoots by the
@@ -253,6 +254,9 @@ class Channel:
         self.tap = tap
         self._q: "queue.Queue[Message]" = queue.Queue()
         self._lock = threading.Lock()
+        # serializes access to the shared pack scratch: multiplexed
+        # serving sessions send on one channel from several threads
+        self._send_lock = threading.Lock()
         self._sendbuf = bytearray()     # reusable pack scratch
         self.stats: Dict[str, object] = {
             "messages": 0, "payload_bytes": 0, "wire_bytes": 0,
@@ -275,8 +279,9 @@ class Channel:
         pb = _payload_nbytes(payload)
         blob = None
         if self.serialize:
-            used = _pack_into(payload, self._sendbuf)
-            blob = bytes(memoryview(self._sendbuf)[:used])
+            with self._send_lock:
+                used = _pack_into(payload, self._sendbuf)
+                blob = bytes(memoryview(self._sendbuf)[:used])
             wb = used
             payload = {"__blob__": blob}           # only bytes travel
         else:
@@ -310,34 +315,52 @@ class Endpoint:
 
     ``recv_kind`` stashes messages of other kinds instead of dropping
     them — in a pipelined schedule the next step's cut activations can
-    already be in flight when the scientist waits for a barrier ack."""
+    already be in flight when the scientist waits for a barrier ack.
+    The stash is lock-protected with a short-poll receive loop, so
+    several multiplexed serving sessions can block in ``recv_kind`` on
+    one shared endpoint concurrently: whichever thread drains a frame
+    either consumes it or stashes it for the session it belongs to."""
+
+    _POLL_S = 0.05
 
     def __init__(self, name: str, peer: str, outbox: Channel, inbox: Channel):
         self.name, self.peer = name, peer
         self.outbox, self.inbox = outbox, inbox
         self._stash: list = []
+        self._rlock = threading.RLock()
 
     def send(self, kind: str, payload: Dict[str, np.ndarray], *,
              seq: int = 0) -> Message:
         return self.outbox.send(kind, payload, seq=seq)
 
     def recv(self, timeout: Optional[float] = None) -> Message:
-        if self._stash:
-            return self._stash.pop(0)
+        with self._rlock:
+            if self._stash:
+                return self._stash.pop(0)
         return self.inbox.recv(timeout=timeout)
 
     def recv_kind(self, kind: str, timeout: Optional[float] = None
                   ) -> Message:
         """Receive the next message of protocol kind ``kind``, keeping
-        any earlier-arriving messages of other kinds for later."""
-        for i, m in enumerate(self._stash):
-            if m.kind == kind:
-                return self._stash.pop(i)
+        any earlier-arriving messages of other kinds for later.  Raises
+        ``queue.Empty`` when ``timeout`` elapses first."""
+        deadline = None if timeout is None else time.monotonic() + timeout
         while True:
-            msg = self.inbox.recv(timeout=timeout)
-            if msg.kind == kind:
-                return msg
-            self._stash.append(msg)
+            with self._rlock:
+                for i, m in enumerate(self._stash):
+                    if m.kind == kind:
+                        return self._stash.pop(i)
+                try:
+                    msg = self.inbox.recv(timeout=self._POLL_S)
+                except queue.Empty:
+                    msg = None
+                if msg is not None:
+                    if msg.kind == kind:
+                        return msg
+                    self._stash.append(msg)
+                    continue
+            if deadline is not None and time.monotonic() >= deadline:
+                raise queue.Empty
 
     @property
     def sent_stats(self) -> Dict[str, object]:
@@ -346,6 +369,55 @@ class Endpoint:
     @property
     def recv_stats(self) -> Dict[str, object]:
         return self.inbox.stats
+
+
+class ScopedEndpoint:
+    """A kind-prefixed view of a shared endpoint — session multiplexing.
+
+    Many serving sessions share one owner<->scientist boundary; each
+    session's frames ride the same channel with the session scope
+    (e.g. ``"s3:"``) prepended to the protocol kind.  Works over both
+    :class:`Endpoint` and ``process_transport.ProcessEndpoint`` (the
+    kind already travels in the multiplex header on the pipe), and the
+    base endpoint's locked stash absorbs cross-session interleaving.
+    ``sent_stats``/``recv_stats`` are the prefix-filtered slice of the
+    shared totals, with the scope stripped from ``by_kind`` keys — a
+    session sees exactly its own traffic."""
+
+    def __init__(self, base, scope: str):
+        self.base, self.scope = base, scope
+        self.name = getattr(base, "name", "?")
+        self.peer = getattr(base, "peer", "?")
+
+    def send(self, kind: str, payload: Dict[str, np.ndarray], *,
+             seq: int = 0) -> Message:
+        return self.base.send(self.scope + kind, payload, seq=seq)
+
+    def recv_kind(self, kind: str, timeout: Optional[float] = None
+                  ) -> Message:
+        return self.base.recv_kind(self.scope + kind, timeout)
+
+    def empty(self) -> bool:
+        return self.base.empty()
+
+    def _filter(self, stats: Dict[str, object]) -> Dict[str, object]:
+        out = {"messages": 0, "payload_bytes": 0, "wire_bytes": 0,
+               "by_kind": {}}
+        for k, v in stats["by_kind"].items():
+            if k.startswith(self.scope):
+                out["by_kind"][k[len(self.scope):]] = v
+                out["messages"] += v["count"]
+                out["payload_bytes"] += v["payload_bytes"]
+                out["wire_bytes"] += v["wire_bytes"]
+        return out
+
+    @property
+    def sent_stats(self) -> Dict[str, object]:
+        return self._filter(self.base.sent_stats)
+
+    @property
+    def recv_stats(self) -> Dict[str, object]:
+        return self._filter(self.base.recv_stats)
 
 
 def channel_pair(a: str, b: str, *, backend: str = "queue",

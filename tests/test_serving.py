@@ -1,0 +1,389 @@
+"""Continuous-batching serving: scheduler bit-identity, slot refill,
+repeat-entity cut cache, session multiplexing, admission control, and
+the per-run stats/latency contracts (ISSUE 7)."""
+import queue as queue_mod
+import threading
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.federation import batching
+from repro.federation.transport import ScopedEndpoint, channel_pair
+from repro.launch.engine import (CutCache, QueueFull, ServingEngine,
+                                 ServingService)
+from repro.models.model import SplitModel
+
+TRANSPORTS = [None, "direct", "queue", "process"]
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = get_config("llama3.2-3b", reduced=True)
+    model = SplitModel(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    return cfg, model, params
+
+
+def _engine(setup, **kw):
+    cfg, model, params = setup
+    kw.setdefault("batch_slots", 2)
+    kw.setdefault("ctx_len", 32)
+    kw.setdefault("max_new", 6)
+    return ServingEngine(model, params, **kw)
+
+
+def _contexts(setup, n, seed=0, length=32):
+    cfg = setup[0]
+    rng = np.random.default_rng(seed)
+    return [rng.integers(0, cfg.vocab, length) for _ in range(n)]
+
+
+# ---------------------------------------------------------------- edge cases
+
+
+@pytest.mark.parametrize("transport", TRANSPORTS)
+def test_queue_longer_than_slots_refills(setup, transport):
+    """5 requests through 2 slots: continuous batching must refill freed
+    slots (not wave-drain) and still return every request."""
+    eng = _engine(setup, scheduler="continuous", transport=transport)
+    mixed = [2, 6, 3, 6, 4]
+    rids = [eng.submit(c, max_new=m)
+            for c, m in zip(_contexts(setup, 5), mixed)]
+    out = eng.run()
+    eng.close()
+    assert sorted(out) == sorted(rids)
+    assert [len(out[r].generated) for r in rids] == mixed
+    assert eng.stats["slot_refills"] >= 3
+    assert eng.stats["requests"] == 5
+    # continuous ticks track total tokens / slots, not 3 waves x max_new
+    assert eng.stats["ticks"] < 3 * 6
+
+
+@pytest.mark.parametrize("transport", TRANSPORTS)
+def test_eos_on_first_decoded_token(setup, transport):
+    """A request whose very first greedy token is EOS finishes at length
+    1 without a decode step, and its slot refills immediately."""
+    (ctx,) = _contexts(setup, 1, seed=3)
+    probe = _engine(setup, scheduler="continuous")
+    rid = probe.submit(ctx)
+    first = probe.run()[rid].generated[0]
+    eng = _engine(setup, scheduler="continuous", transport=transport,
+                  eos_token=first)
+    rids = [eng.submit(ctx, max_new=6) for _ in range(3)]
+    out = eng.run()
+    eng.close()
+    assert all(out[r].generated == [first] for r in rids)
+    assert eng.stats["slot_refills"] >= 1
+
+
+@pytest.mark.parametrize("transport", TRANSPORTS)
+def test_submit_after_run(setup, transport):
+    """The engine is a service, not a one-shot: new submissions after a
+    drained run() are served by the next run()."""
+    eng = _engine(setup, scheduler="continuous", transport=transport)
+    c1, c2 = _contexts(setup, 2, seed=4)
+    r1 = eng.submit(c1, max_new=3)
+    out1 = eng.run()
+    r2 = eng.submit(c2, max_new=3)
+    out2 = eng.run()
+    eng.close()
+    assert list(out1) == [r1] and list(out2) == [r2]
+    assert len(out2[r2].generated) == 3
+
+
+@pytest.mark.parametrize("transport", TRANSPORTS)
+def test_context_exactly_ctx_len(setup, transport):
+    """A context of exactly ctx_len is admitted (no padding left)."""
+    eng = _engine(setup, scheduler="continuous", transport=transport)
+    (ctx,) = _contexts(setup, 1, seed=5, length=32)
+    assert len(ctx) == eng.S
+    rid = eng.submit(ctx, max_new=2)
+    out = eng.run()
+    eng.close()
+    assert len(out[rid].generated) == 2
+    with pytest.raises(ValueError):
+        eng.submit(np.zeros(33, np.int32))
+
+
+@pytest.mark.parametrize("transport", TRANSPORTS)
+def test_empty_queue_run(setup, transport):
+    """run() with nothing queued is a no-op returning {} (no compile,
+    no wire traffic)."""
+    eng = _engine(setup, scheduler="continuous", transport=transport)
+    assert eng.run() == {}
+    assert eng.stats["ticks"] == 0
+    assert eng.stats["cut_messages"] == 0
+    eng.close()
+
+
+# ------------------------------------------------------- scheduler identity
+
+
+@pytest.mark.parametrize("transport", [None, "queue"])
+def test_continuous_matches_wave_bitwise(setup, transport):
+    """Greedy decode property: the same request set generates
+    bit-identical tokens under wave and continuous scheduling, mixed
+    max_new, more requests than slots."""
+    mixed = [2, 6, 1, 5, 6, 3]
+    ctxs = _contexts(setup, 6, seed=6)
+
+    def run(sched):
+        eng = _engine(setup, scheduler=sched, transport=transport)
+        rids = [eng.submit(c, max_new=m) for c, m in zip(ctxs, mixed)]
+        out = eng.run()
+        eng.close()
+        return [out[r].generated for r in rids]
+
+    assert run("wave") == run("continuous")
+
+
+@pytest.mark.slow
+def test_continuous_queue_matches_process(setup):
+    """Backend property: continuous scheduling generates identical
+    tokens and identical measured cut bytes over the thread-backed queue
+    and the OS-pipe process transports."""
+    mixed = [2, 5, 3]
+    ctxs = _contexts(setup, 3, seed=7)
+
+    def run(tr):
+        eng = _engine(setup, scheduler="continuous", transport=tr)
+        rids = [eng.submit(c, max_new=m) for c, m in zip(ctxs, mixed)]
+        out = eng.run()
+        stats = dict(eng.stats)
+        eng.close()
+        return [out[r].generated for r in rids], stats
+
+    gq, sq = run("queue")
+    gp, sp = run("process")
+    assert gq == gp
+    assert sq["cut_wire_bytes"] == sp["cut_wire_bytes"]
+    assert sq["cut_messages"] == sp["cut_messages"]
+
+
+# -------------------------------------------------------------- stats fixes
+
+
+def test_per_request_latency(setup):
+    """Satellite: latency is submit->finish per request, not the wave's
+    wall time — a 1-token request in the same wave as a 6-token request
+    must report strictly less latency."""
+    for sched in ("wave", "continuous"):
+        eng = _engine(setup, scheduler=sched)
+        ctxs = _contexts(setup, 2, seed=8)
+        r_short = eng.submit(ctxs[0], max_new=1)
+        r_long = eng.submit(ctxs[1], max_new=6)
+        out = eng.run()
+        assert 0.0 < out[r_short].latency_s < out[r_long].latency_s
+
+
+def test_cut_stats_are_per_engine_deltas(setup):
+    """Satellite regression: stats accumulate per-engine deltas and
+    match the channel's by_kind totals exactly — two runs double the
+    first run's traffic instead of overwriting with cumulative totals."""
+    eng = _engine(setup, scheduler="continuous", transport="queue")
+    ctxs = _contexts(setup, 2, seed=9)
+    for c in ctxs:
+        eng.submit(c, max_new=3)
+    eng.run()
+    first = (eng.stats["cut_payload_bytes"], eng.stats["cut_wire_bytes"],
+             eng.stats["cut_messages"])
+    assert first[0] > 0
+    for c in ctxs:
+        eng.submit(c, max_new=3)
+    eng.run()
+    assert eng.stats["cut_payload_bytes"] == 2 * first[0]
+    assert eng.stats["cut_wire_bytes"] == 2 * first[1]
+    assert eng.stats["cut_messages"] == 2 * first[2]
+    bk = eng._ep_sci.recv_stats["by_kind"]
+    total = sum(bk.get(k, {}).get("payload_bytes", 0)
+                for k in ("cut_activations", "cut_prefill"))
+    assert eng.stats["cut_payload_bytes"] == total
+    eng.close()
+
+
+def test_wave_stats_delta_regression(setup):
+    """The original overwrite bug, pinned on the wave path too: N waves
+    of identical traffic report N x one wave's bytes."""
+    eng = _engine(setup, batch_slots=1, scheduler="wave",
+                  transport="queue")
+    ctxs = _contexts(setup, 2, seed=10)
+    eng.submit(ctxs[0], max_new=2)
+    eng.run()
+    one = eng.stats["cut_payload_bytes"]
+    eng.submit(ctxs[0], max_new=2)
+    eng.run()
+    assert eng.stats["cut_payload_bytes"] == 2 * one
+    eng.close()
+
+
+# ---------------------------------------------------------------- cut cache
+
+
+def test_repeat_entity_zero_upload(setup):
+    """Acceptance: a returning entity's request ships zero cut-upload
+    bytes and recomputes nothing owner-side — the admission control
+    frame is the only wire traffic, and the cache hit is transcripted."""
+    eng = _engine(setup, scheduler="continuous", transport="queue",
+                  cut_cache=True)
+    (ctx,) = _contexts(setup, 1, seed=11)
+    r1 = eng.submit(ctx, max_new=4)
+    out1 = eng.run()
+    pc, pb, pm = (eng.stats["prefill_calls"], eng.stats["cut_payload_bytes"],
+                  eng.stats["cut_messages"])
+    r2 = eng.submit(ctx, max_new=1)
+    out2 = eng.run()
+    eng.close()
+    assert eng.stats["prefill_calls"] == pc          # zero head recompute
+    assert eng.stats["cut_payload_bytes"] == pb      # zero upload bytes
+    assert eng.stats["cut_messages"] == pm
+    assert eng.stats["cut_cache_hits"] == 1
+    assert any(e[0] == "cut_cache_hit" and e[1] == r2
+               for e in eng.transcript)
+    # and the cached-path token is bitwise the fresh-path token
+    assert out2[r2].generated[0] == out1[r1].generated[0]
+
+
+def test_cache_hit_preserves_bit_identity(setup):
+    """A cache-hit continuation decodes bitwise like a fresh request:
+    full generations match between a cache-hitting engine and a cold
+    wave engine."""
+    (ctx,) = _contexts(setup, 1, seed=12)
+    eng = _engine(setup, scheduler="continuous", transport="queue",
+                  cut_cache=True)
+    r1 = eng.submit(ctx, max_new=5)
+    first = eng.run()[r1].generated
+    r2 = eng.submit(ctx, max_new=5)          # repeat entity: cache hit
+    second = eng.run()[r2].generated
+    eng.close()
+    assert eng.stats["cut_cache_hits"] == 1
+    assert second == first
+
+
+def test_cut_cache_lru_eviction():
+    cache = CutCache(max_entries=2)
+    for t in ("a", "b", "c"):
+        cache.put(t, {"v": t})
+    assert len(cache) == 2 and cache.evictions == 1
+    assert cache.get("a") is None            # evicted (oldest)
+    assert cache.get("c")["v"] == "c"
+    assert (cache.hits, cache.misses) == (1, 1)
+
+
+def test_context_tag_content_addressing():
+    a = batching.pad_context_row(np.arange(5), 8)
+    b = batching.pad_context_row(np.arange(5), 8)
+    c = batching.pad_context_row(np.arange(1, 6), 8)
+    assert batching.context_tag(a) == batching.context_tag(b)
+    assert batching.context_tag(a) != batching.context_tag(c)
+
+
+# ------------------------------------------------------ admission control
+
+
+def test_bounded_queue_backpressure(setup):
+    eng = _engine(setup, scheduler="continuous", max_queue=2)
+    ctxs = _contexts(setup, 3, seed=13)
+    eng.submit(ctxs[0])
+    eng.submit(ctxs[1])
+    with pytest.raises(QueueFull):
+        eng.submit(ctxs[2])
+    assert eng.stats["rejected"] == 1
+    assert eng.stats["submitted"] == 2
+    assert eng.stats["peak_queue_depth"] == 2
+    eng.run()                                # drains; capacity returns
+    eng.submit(ctxs[2], max_new=1)
+    assert eng.stats["submitted"] == 3
+
+
+# --------------------------------------------------- session multiplexing
+
+
+def test_scoped_endpoint_stats_filtering():
+    a, b = channel_pair("owners", "scientist", backend="queue")
+    s0a, s1a = ScopedEndpoint(a, "s0:"), ScopedEndpoint(a, "s1:")
+    s0b, s1b = ScopedEndpoint(b, "s0:"), ScopedEndpoint(b, "s1:")
+    s0a.send("cut", {"x": np.zeros(4, np.float32)})
+    s1a.send("cut", {"x": np.zeros(8, np.float32)})
+    s1a.send("grad", {"x": np.zeros(2, np.float32)})
+    # interleaved kinds resolve to the right scope, stash absorbing
+    assert s1b.recv_kind("grad").payload["x"].nbytes == 8
+    assert s0b.recv_kind("cut").payload["x"].nbytes == 16
+    assert s1b.recv_kind("cut").payload["x"].nbytes == 32
+    assert s0a.sent_stats["by_kind"]["cut"]["payload_bytes"] == 16
+    assert s1a.sent_stats["by_kind"]["cut"]["payload_bytes"] == 32
+    assert s0a.sent_stats["messages"] == 1
+    assert s1a.sent_stats["messages"] == 2
+    assert "s0:cut" in a.sent_stats["by_kind"]       # raw view keeps scope
+
+
+@pytest.mark.slow
+def test_multiplexed_sessions_concurrent(setup):
+    """Two engine sessions on threads over ONE shared queue channel
+    generate exactly what dedicated-channel engines generate, and each
+    session's stats see only its own frames."""
+    cfg, model, params = setup
+    svc = ServingService(model, params, transport="queue", batch_slots=2,
+                         ctx_len=32, max_new=6)
+    s1, s2 = svc.session(), svc.session()
+    ca = _contexts(setup, 3, seed=14)
+    cb = _contexts(setup, 3, seed=15)
+    res = {}
+
+    def drive(s, cs, key):
+        rids = [s.submit(c, max_new=4) for c in cs]
+        out = s.run()
+        res[key] = [out[r].generated for r in rids]
+
+    t1 = threading.Thread(target=drive, args=(s1, ca, "a"))
+    t2 = threading.Thread(target=drive, args=(s2, cb, "b"))
+    t1.start(); t2.start()
+    t1.join(180); t2.join(180)
+    assert not t1.is_alive() and not t2.is_alive()
+
+    def ref(cs):
+        eng = _engine(setup, scheduler="continuous", transport="queue")
+        rids = [eng.submit(c, max_new=4) for c in cs]
+        out = eng.run()
+        eng.close()
+        return [out[r].generated for r in rids], dict(eng.stats)
+
+    ra, sa = ref(ca)
+    rb, _ = ref(cb)
+    assert res["a"] == ra and res["b"] == rb
+    # per-session accounting == a dedicated engine's accounting
+    assert s1.stats["cut_payload_bytes"] == sa["cut_payload_bytes"]
+    assert s1.stats["cut_messages"] == sa["cut_messages"]
+    # the shared channel saw both sessions' scoped kinds
+    kinds = set(svc.channel_stats["by_kind"])
+    assert any(k.startswith("s0:") for k in kinds)
+    assert any(k.startswith("s1:") for k in kinds)
+    svc.close()
+
+
+def test_service_shared_cut_cache(setup):
+    """The cut cache is service-wide: an entity seen by session A is a
+    cache hit when it returns through session B."""
+    cfg, model, params = setup
+    svc = ServingService(model, params, transport="queue", batch_slots=2,
+                         ctx_len=32, max_new=6)
+    (ctx,) = _contexts(setup, 1, seed=16)
+    s1 = svc.session()
+    r1 = s1.submit(ctx, max_new=3)
+    g1 = s1.run()[r1].generated
+    s2 = svc.session()
+    r2 = s2.submit(ctx, max_new=3)
+    g2 = s2.run()[r2].generated
+    assert s2.stats["cut_cache_hits"] == 1
+    # zero context-upload bytes: no cut_prefill frames in session B's
+    # scoped traffic (decode-tick ships are generation, not upload)
+    assert "cut_prefill" not in s2._ep_sci.recv_stats["by_kind"]
+    assert g2 == g1
+    svc.close()
+
+
+def test_recv_kind_timeout_raises():
+    a, b = channel_pair("x", "y", backend="queue")
+    with pytest.raises(queue_mod.Empty):
+        b.recv_kind("never", timeout=0.15)

@@ -51,6 +51,7 @@ DEFAULT_TESTS = (
     "tests/test_transport.py",
     "tests/test_federation.py",
     "tests/test_process_transport.py",
+    "tests/test_serving.py",
 )
 
 

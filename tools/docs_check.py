@@ -34,6 +34,9 @@ DOCSTRING_MODULES = ("src/repro/federation/session.py",)
 EXAMPLES = (
     ("examples/psi_demo.py", ()),
     ("examples/multihead_scaling.py", ("--fast",)),
+    ("examples/serve_split.py",
+     ("--ctx", "32", "--new", "4", "--batch", "2", "--n-batches", "2",
+      "--continuous", "--sessions", "2", "--transport", "queue")),
 )
 SKIP_MARK = "<!-- docs-check: skip -->"
 TIMEOUT_S = 1200
