@@ -33,6 +33,7 @@ TRACKED = {
     "BENCH_psi.json": "psi_scaling",
     "BENCH_parties.json": "parties",
     "BENCH_serving.json": "serving",
+    "BENCH_recovery.json": "recovery",
 }
 
 #: informational subtrees: committed by full-size runs, not re-measured
@@ -55,7 +56,7 @@ def _rule(key: str):
                "parallelism", "peak_inflight_elements",
                "bit_identical", "cut_cache_hits", "slot_refills",
                "repeat_head_prefills", "repeat_token_bitwise",
-               "meets_1p3_floor"):
+               "meets_1p3_floor", "n_recoveries"):
         return ("exact", None)      # deterministic protocol structure
     if "bytes" in key:
         return ("exact", None)

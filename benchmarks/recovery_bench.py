@@ -1,0 +1,121 @@
+"""Crash-recovery benchmark (``BENCH_recovery.json``).
+
+Two questions about the supervised federation runtime
+(``federation/supervisor.py`` + ``fit(supervise=True)``):
+
+  1. correctness under fire — a supervised split fit with a
+     chaos-injected mid-run owner crash must finish with *bitwise* the
+     fault-free run's final params (the ``bit_identical`` leaves are
+     exactly gated per backend, like the transport suite's byte
+     parity).  The same cell records how many recoveries the run
+     needed (``n_recoveries``, exact).
+  2. cost — what supervision itself costs while nothing fails (the
+     marker/snapshot/heartbeat machinery rides the hot path:
+     ``supervision_overhead_ratio`` = supervised / unsupervised step
+     time, ratio-gated), and what one crash costs end to end (the
+     faulted run's wall clock vs the clean supervised run's,
+     timing-gated).
+
+Writes ``BENCH_recovery.json`` and returns the usual CSV rows.
+"""
+from __future__ import annotations
+
+import json
+import os
+
+import numpy as np
+
+from repro.configs.pyvertical_mnist import CONFIG
+from repro.data import make_vertical_mnist_parties
+from repro.federation import VerticalSession, faults, feature_parties
+
+#: committed-baseline gate geometry
+GATE_N, GATE_BATCH, GATE_STEPS = 300, 64, 8
+#: the injected fault: owner0 dies when it sees the step-4 forward
+CRASH = faults.Fault("owner0", "crash", "head_fwd",
+                     occurrence=None, step=4)
+
+
+def _fit(backend: str, *, supervise: bool, fault=None):
+    old = os.environ.pop(faults.CHAOS_ENV, None)
+    if fault is not None:
+        os.environ[faults.CHAOS_ENV] = faults.FaultPlan([fault]).to_env()
+    try:
+        sci, raw = make_vertical_mnist_parties(GATE_N, seed=0,
+                                               keep_frac=0.9)
+        s = VerticalSession(*feature_parties(sci, raw))
+        s.resolve(group="modp512")
+        s.build(CONFIG)
+        s.fit(steps=GATE_STEPS, batch_size=GATE_BATCH, verbose=False,
+              mode="split", backend=backend, supervise=supervise,
+              timeout=60.0)
+    finally:
+        os.environ.pop(faults.CHAOS_ENV, None)
+        if old is not None:
+            os.environ[faults.CHAOS_ENV] = old
+    import jax
+    ts = s.transport_stats
+    return {
+        "leaves": [np.asarray(x)
+                   for x in jax.tree_util.tree_leaves(s.params)],
+        "step_ms": ts["steady_step_ms"],
+        "wall_ms": 1e3 * ts["wall_s"],
+        "recoveries": ts["recoveries"],
+    }
+
+
+def _identical(a, b) -> int:
+    return int(len(a) == len(b)
+               and all(np.array_equal(x, y) for x, y in zip(a, b)))
+
+
+def run(out: str = "BENCH_recovery.json"):
+    report: dict = {"config": {"n": GATE_N, "batch": GATE_BATCH,
+                               "steps": GATE_STEPS,
+                               "fault": "owner0 crash head_fwd@4"}}
+    rows = []
+
+    plain = _fit("queue", supervise=False)
+    gate: dict = {
+        "supervision_overhead_ratio": 1.0,   # filled from queue cell
+        "unsupervised_step_ms": plain["step_ms"],
+    }
+    for backend in ("queue", "process"):
+        clean = _fit(backend, supervise=True)
+        faulted = _fit(backend, supervise=True, fault=CRASH)
+        cell = {
+            "bit_identical": _identical(clean["leaves"],
+                                        faulted["leaves"]),
+            "n_recoveries": faulted["recoveries"],
+            "clean_step_ms": clean["step_ms"],
+            "clean_wall_ms": clean["wall_ms"],
+            "faulted_wall_ms": faulted["wall_ms"],
+        }
+        gate[backend] = cell
+        if backend == "queue":
+            gate["supervision_overhead_ratio"] = (
+                clean["step_ms"] / max(plain["step_ms"], 1e-9))
+        rows.append((f"recovery_{backend}_bit_identical",
+                     cell["bit_identical"],
+                     f"crash@4 recoveries={cell['n_recoveries']}"))
+        rows.append((f"recovery_{backend}_clean_step",
+                     round(1e3 * cell["clean_step_ms"], 1),
+                     f"faulted_wall_ms={cell['faulted_wall_ms']:.0f}"))
+
+    report["gate"] = gate
+    rows.append(("recovery_supervision_overhead",
+                 round(gate["supervision_overhead_ratio"], 3),
+                 f"unsup_step_ms={plain['step_ms']:.2f}"))
+
+    with open(out, "w") as f:
+        json.dump(report, f, indent=2)
+    return rows
+
+
+def run_check(out: str = "BENCH_recovery.json"):
+    return run(out)
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(",".join(str(x) for x in r))

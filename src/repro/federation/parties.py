@@ -216,7 +216,7 @@ class OwnerComputeEndpoint:
     def __init__(self, owner: DataOwner, endpoint, head_fwd, head_bwd, *,
                  optimizer, params, codec, ack_steps: bool = False,
                  microbatches: int = 1, gather=None, update_program=None,
-                 tail_program=None):
+                 tail_program=None, opt_state=None, start_step: int = 0):
         import jax
         import jax.numpy as jnp
 
@@ -225,16 +225,23 @@ class OwnerComputeEndpoint:
         self.head_fwd, self.head_bwd = head_fwd, head_bwd
         self.opt = optimizer
         self.params = params
-        self.opt_state = optimizer.init(params)
+        # a respawned worker resumes snapshotted optimizer state and the
+        # step counter it rolled back to; fresh endpoints init both
+        self.opt_state = (optimizer.init(params) if opt_state is None
+                          else opt_state)
         self.codec = codec
         self.ack_steps = ack_steps
         self.micro = int(microbatches)
-        self.steps_done = 0
+        self.steps_done = int(start_step)
         self.error: Optional[BaseException] = None
         self._inflight: Dict[int, object] = {}   # seq -> owner-side inputs
         self._plan: Dict[int, list] = {}         # step -> staged fwd chunks
         self._grad_acc = None
         self._grads_seen = 0
+        # step -> (np params, np opt_state): host copies (donated device
+        # buffers get reused by later updates), kept for the supervised
+        # fit's rollback protocol
+        self._snaps: Dict[int, tuple] = {}
 
         if update_program is None:
             # one jitted program per segment op — update+apply compiled
@@ -387,6 +394,57 @@ class OwnerComputeEndpoint:
                         self._run_fwd(self.steps_done)
             if self.ack_steps:
                 self.endpoint.send("step_done", {}, seq=seq)
+            return True
+        if msg.kind == "heartbeat":
+            # liveness probe (federation/supervisor.py): answering
+            # inline between protocol messages is exactly the signal —
+            # a wedged actor stops answering
+            self.endpoint.send("heartbeat_ack", {}, seq=msg.seq)
+            return True
+        if msg.kind == "snapshot":
+            # step marker s: params/opt_state are at step-s-start state
+            # by FIFO order.  Keep a host copy (device buffers are
+            # donated by later updates) and ack it back with the leaves,
+            # so the scientist can respawn this owner from step s.
+            import jax
+            s = int(msg.seq)
+            snap = (jax.tree.map(lambda a: np.array(a), self.params),
+                    jax.tree.map(lambda a: np.array(a), self.opt_state))
+            self._snaps[s] = snap
+            # keep the 4 newest markers (NOT a step-distance window:
+            # with sparse resync the pipeline's FIFO lag still needs
+            # the previous marker around for recovery)
+            for old in sorted(self._snaps)[:-4]:
+                del self._snaps[old]
+            payload = {f"p{i}": leaf for i, leaf in
+                       enumerate(jax.tree_util.tree_leaves(snap[0]))}
+            payload.update(
+                {f"o{i}": leaf for i, leaf in
+                 enumerate(jax.tree_util.tree_leaves(snap[1]))})
+            self.endpoint.send("snapshot_ack", payload, seq=s)
+            return True
+        if msg.kind == "rollback":
+            # another party failed: restore step-s-start state, discard
+            # every staged/in-flight chunk, and let the scientist replay
+            # from s.  One update per step still holds — the replayed
+            # step's update is the only one applied for it.
+            import jax
+            import jax.numpy as jnp
+            s = int(msg.seq)
+            if s not in self._snaps:
+                raise RuntimeError(
+                    f"owner {self.owner.name}: no snapshot for step {s}")
+            p_np, o_np = self._snaps[s]
+            self.params = jax.tree.map(jnp.asarray, p_np)
+            self.opt_state = jax.tree.map(jnp.asarray, o_np)
+            self._plan.clear()
+            self._inflight.clear()
+            self._grad_acc, self._grads_seen = None, 0
+            self.steps_done = s
+            self._snaps = {s: (p_np, o_np)}
+            if hasattr(self.endpoint, "reset_dedup"):
+                self.endpoint.reset_dedup()
+            self.endpoint.send("rollback_ack", {}, seq=s)
             return True
         raise RuntimeError(
             f"owner {self.owner.name}: unknown message kind {msg.kind!r}")

@@ -45,22 +45,28 @@ import queue as _queue
 import struct
 import threading
 import time
+import zlib
 from typing import Dict, Optional, Tuple
 
 import numpy as np
 
-from repro.federation.transport import (Message, _pack, _payload_nbytes,
-                                        _unpack, _wait_until, spin_wait_s)
+from repro.federation.transport import (FrameCorrupt, Message, _pack,
+                                        _payload_nbytes, _unpack,
+                                        _wait_until, spin_wait_s)
 
 __all__ = ["ProcessEndpoint", "process_endpoint_pair", "POISON_KIND",
-           "HEADER_FMT"]
+           "HEADER_FMT", "FrameCorrupt"]
 
 #: the worker-lifecycle poison-pill frame (docs/WIRE_PROTOCOL.md §5)
 POISON_KIND = "__worker_error__"
 
 #: transport header preceding every payload frame on the pipe:
 #: [u16 kind_len][kind utf-8][i64 seq][f64 not_before][i64 payload_bytes]
-HEADER_FMT = "<qdq"
+#: [u32 crc32-of-blob] — the CRC makes corruption on the real OS
+#: boundary (or injected via faults.arm_endpoint) a loud FrameCorrupt
+#: instead of a silent bad gradient.  Header bytes stay uncounted, so
+#: wire accounting is still bit-identical to the queue backend.
+HEADER_FMT = "<qdqI"
 _HEADER_LEN = struct.calcsize(HEADER_FMT)
 
 _CLOSE = object()          # writer-thread shutdown sentinel
@@ -94,18 +100,31 @@ class ProcessEndpoint:
     def __init__(self, name: str, peer: str, conn, *,
                  latency_s: float = 0.0,
                  bandwidth_bps: Optional[float] = None,
-                 spin_s: Optional[float] = None, tap=None):
+                 spin_s: Optional[float] = None, tap=None,
+                 dedup: bool = False):
         self.name, self.peer = name, peer
         self.conn = conn
         self.latency_s = latency_s
         self.bandwidth_bps = bandwidth_bps
         self.spin_s = spin_wait_s() if spin_s is None else spin_s
         self.tap = tap
+        # fault hook: fault_hook(kind, seq) -> (action, delay_s) | None,
+        # installed by faults.arm_endpoint (drop/corrupt/delay)
+        self.fault_hook = None
+        # opt-in seq-based duplicate drop: a reconnecting peer may
+        # replay its last frame per kind; with dedup on, a frame whose
+        # seq equals the last delivered seq for its kind is dropped
+        # (protocol seqs only — negative control seqs are exempt).  Off
+        # by default: serving reuses per-tick seqs legitimately.
+        self._dedup = dedup
+        self._last_seq: Dict[str, int] = {}
         self.sent_stats = _new_stats()
         self.recv_stats = _new_stats()
         #: the peer's poison pill, once seen (checked by WorkerHandle)
         self.peer_error: Optional[BaseException] = None
         self._stash: list = []
+        # corrupt frames routed to the kind that owns them (recv_kind)
+        self._corrupt: Dict[str, FrameCorrupt] = {}
         self._lock = threading.Lock()
         # stash + pipe-read serialization: multiplexed serving sessions
         # may block in recv_kind on one shared endpoint concurrently
@@ -141,20 +160,40 @@ class ProcessEndpoint:
         pb = _payload_nbytes(payload)
         blob = _pack(payload)
         wb = len(blob)
+        crc = zlib.crc32(blob) & 0xFFFFFFFF
         msg = Message(self.name, self.peer, kind, {"__blob__": blob},
-                      seq=seq, payload_bytes=pb, wire_bytes=wb)
+                      seq=seq, payload_bytes=pb, wire_bytes=wb, crc=crc)
         if self.tap is not None:
             self.tap(msg, blob)
+        fault = (self.fault_hook(kind, seq)
+                 if self.fault_hook is not None else None)
+        transit = self.latency_s + (
+            wb / self.bandwidth_bps if self.bandwidth_bps else 0.0)
+        if fault is not None and fault[0] == "delay":
+            transit += fault[1]
         not_before = 0.0
-        if self.latency_s or self.bandwidth_bps:
-            not_before = time.monotonic() + self.latency_s + (
-                wb / self.bandwidth_bps if self.bandwidth_bps else 0.0)
+        if transit:
+            not_before = time.monotonic() + transit
             msg.not_before = not_before
         with self._lock:
             _account(self.sent_stats, kind, pb, wb)
+        if fault is not None:
+            action = fault[0]
+            if action == "drop_frame":
+                with self._lock:
+                    self.sent_stats["dropped_frames"] = \
+                        self.sent_stats.get("dropped_frames", 0) + 1
+                return msg                     # lost on the wire
+            if action == "corrupt_frame":
+                # flip one blob byte AFTER the crc was taken: the far
+                # side's integrity check raises FrameCorrupt
+                bad = bytearray(blob)
+                bad[len(bad) // 2] ^= 0xFF
+                blob = bytes(bad)
         kb = kind.encode()
         frame = (struct.pack("<H", len(kb)) + kb
-                 + struct.pack(HEADER_FMT, seq, not_before, pb) + blob)
+                 + struct.pack(HEADER_FMT, seq, not_before, pb, crc)
+                 + blob)
         self._outq.put(frame)
         return msg
 
@@ -171,39 +210,61 @@ class ProcessEndpoint:
 
     # -- receiving ---------------------------------------------------------
     def _recv_frame(self, timeout: Optional[float]) -> Message:
-        try:
-            if not self.conn.poll(timeout):
-                raise _queue.Empty
-            frame = self.conn.recv_bytes()
-        except (EOFError, ConnectionResetError, BrokenPipeError, OSError
-                ) as e:
-            raise RuntimeError(
-                f"{self.name}: connection to {self.peer!r} closed "
-                f"({type(e).__name__})") from (
-                    self.peer_error if self.peer_error is not None else e)
-        (klen,) = struct.unpack_from("<H", frame, 0)
-        kind = frame[2:2 + klen].decode()
-        seq, not_before, pb = struct.unpack_from(HEADER_FMT, frame,
-                                                 2 + klen)
-        blob = frame[2 + klen + _HEADER_LEN:]
-        if kind == POISON_KIND:
-            pl = _unpack(blob)
-            err = bytes(pl["error"].tobytes()).decode()
-            tb = bytes(pl["traceback"].tobytes()).decode()
-            self.peer_error = RuntimeError(
-                f"party {self.peer!r} died: {err}"
-                + (f"\n--- remote traceback ---\n{tb}" if tb else ""))
-            raise self.peer_error
-        with self._lock:
-            _account(self.recv_stats, kind, int(pb), len(blob))
-        if not_before:
-            _wait_until(not_before, self.spin_s)
-        msg = Message(self.peer, self.name, kind, _unpack(blob),
-                      seq=int(seq), payload_bytes=int(pb),
-                      wire_bytes=len(blob), not_before=not_before)
-        if self.tap is not None:
-            self.tap(msg, blob)
-        return msg
+        deadline = (None if timeout is None
+                    else time.monotonic() + timeout)
+        while True:
+            try:
+                if not self.conn.poll(timeout):
+                    raise _queue.Empty
+                frame = self.conn.recv_bytes()
+            except (EOFError, ConnectionResetError, BrokenPipeError,
+                    OSError) as e:
+                raise RuntimeError(
+                    f"{self.name}: connection to {self.peer!r} closed "
+                    f"({type(e).__name__})") from (
+                        self.peer_error if self.peer_error is not None
+                        else e)
+            (klen,) = struct.unpack_from("<H", frame, 0)
+            kind = frame[2:2 + klen].decode()
+            seq, not_before, pb, crc = struct.unpack_from(
+                HEADER_FMT, frame, 2 + klen)
+            blob = frame[2 + klen + _HEADER_LEN:]
+            if kind == POISON_KIND:
+                pl = _unpack(blob)
+                err = bytes(pl["error"].tobytes()).decode()
+                tb = bytes(pl["traceback"].tobytes()).decode()
+                self.peer_error = RuntimeError(
+                    f"party {self.peer!r} died: {err}"
+                    + (f"\n--- remote traceback ---\n{tb}" if tb else ""))
+                raise self.peer_error
+            if (zlib.crc32(blob) & 0xFFFFFFFF) != crc:
+                raise FrameCorrupt(kind, int(seq), self.peer, self.name)
+            if self._dedup and seq >= 0:
+                if self._last_seq.get(kind) == int(seq):
+                    with self._lock:
+                        self.recv_stats["dup_dropped"] = \
+                            self.recv_stats.get("dup_dropped", 0) + 1
+                    if deadline is not None:
+                        timeout = max(0.0, deadline - time.monotonic())
+                    continue                   # replayed frame: drop
+                self._last_seq[kind] = int(seq)
+            with self._lock:
+                _account(self.recv_stats, kind, int(pb), len(blob))
+            if not_before:
+                _wait_until(not_before, self.spin_s)
+            msg = Message(self.peer, self.name, kind, _unpack(blob),
+                          seq=int(seq), payload_bytes=int(pb),
+                          wire_bytes=len(blob), not_before=not_before,
+                          crc=int(crc))
+            if self.tap is not None:
+                self.tap(msg, blob)
+            return msg
+
+    def reset_dedup(self) -> None:
+        """Forget per-kind last-delivered seqs — called after a rollback
+        so the replayed step's frames (which legitimately reuse seqs)
+        are not mistaken for duplicates."""
+        self._last_seq.clear()
 
     _POLL_S = 0.05
 
@@ -224,6 +285,8 @@ class ProcessEndpoint:
         deadline = None if timeout is None else time.monotonic() + timeout
         while True:
             with self._rlock:
+                if kind in self._corrupt:
+                    raise self._corrupt.pop(kind)
                 for i, m in enumerate(self._stash):
                     if m.kind == kind:
                         return self._stash.pop(i)
@@ -231,6 +294,11 @@ class ProcessEndpoint:
                     msg = self._recv_frame(self._POLL_S)
                 except _queue.Empty:
                     msg = None
+                except FrameCorrupt as e:
+                    if e.kind == kind:
+                        raise
+                    self._corrupt[e.kind] = e    # another kind's problem
+                    continue
                 if msg is not None:
                     if msg.kind == kind:
                         return msg
@@ -238,6 +306,13 @@ class ProcessEndpoint:
                     continue
             if deadline is not None and time.monotonic() >= deadline:
                 raise _queue.Empty
+
+    def flush_pending(self) -> None:
+        """Discard stashed out-of-kind messages and routed corrupt
+        markers (see ``transport.Endpoint.flush_pending``)."""
+        with self._rlock:
+            self._stash.clear()
+            self._corrupt.clear()
 
     def empty(self) -> bool:
         return not self._stash and not self.conn.poll(0)
@@ -258,18 +333,20 @@ class ProcessEndpoint:
 
 def process_endpoint_pair(a: str, b: str, *, latency_s: float = 0.0,
                           bandwidth_bps: Optional[float] = None,
-                          spin_s: Optional[float] = None, tap=None
+                          spin_s: Optional[float] = None, tap=None,
+                          dedup: bool = False
                           ) -> Tuple[ProcessEndpoint, ProcessEndpoint]:
     """Both ends of a process boundary in the *current* process — the
     unit-test / single-process harness analogue of ``channel_pair``
     (real worker spawning builds the far end inside the child; see
     ``federation/runtime.py``).  ``tap`` observes endpoint ``a``'s
-    traffic in both directions."""
+    traffic in both directions; ``dedup`` enables seq-based duplicate
+    drop on endpoint ``a``'s receive path."""
     import multiprocessing as mp
     c1, c2 = mp.Pipe(duplex=True)
     ep_a = ProcessEndpoint(a, b, c1, latency_s=latency_s,
                            bandwidth_bps=bandwidth_bps, spin_s=spin_s,
-                           tap=tap)
+                           tap=tap, dedup=dedup)
     ep_b = ProcessEndpoint(b, a, c2, latency_s=latency_s,
                            bandwidth_bps=bandwidth_bps, spin_s=spin_s)
     return ep_a, ep_b

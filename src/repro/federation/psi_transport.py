@@ -157,6 +157,10 @@ class PSIServerEndpoint:
         if msg.kind == "psi_blind_chunk":
             self._on_blind_chunk(msg)
             return True
+        if msg.kind == "heartbeat":
+            # liveness probe (federation/supervisor.py)
+            self.endpoint.send("heartbeat_ack", {}, seq=msg.seq)
+            return True
         raise RuntimeError(
             f"PSI owner {self.name}: unknown message kind {msg.kind!r}")
 

@@ -28,41 +28,44 @@ timed region) -> steady-state protocol -> ``stop`` / ``psi_stop`` ->
 drain + exit 0.  A worker that throws ships one final
 ``__worker_error__`` frame with its traceback and exits 1.
 
-Chaos hooks: ``REPRO_CHAOS_PARTY="<party>:<action>"`` (actions:
-``crash_fwd`` / ``wedge_fwd`` on the first ``head_fwd``, ``crash_psi`` /
-``wedge_psi`` on the first ``psi_blind_chunk``) injects a fault inside
-the named worker.  Spawned children inherit the parent's environment, so
-tests set it with ``monkeypatch.setenv`` — the only way to reach inside
-a spawned process that a parent-side monkeypatch cannot touch.
+Chaos hooks: ``REPRO_CHAOS_PARTY`` carries a ``federation.faults``
+:class:`~repro.federation.faults.FaultPlan` (legacy single tokens like
+``"<party>:crash_fwd"``, comma-separated multi-party specs, or a
+``json:`` plan) injected inside the named workers.  Spawned children
+inherit the parent's environment, so tests set it with
+``monkeypatch.setenv`` — the only way to reach inside a spawned process
+that a parent-side monkeypatch cannot touch.
 """
 from __future__ import annotations
 
-import os
-import time
 import traceback
 from dataclasses import dataclass, field
 from typing import List, Optional
 
 import numpy as np
 
+from repro.federation import faults
+from repro.federation.faults import CHAOS_ENV  # noqa: F401 — re-export
 from repro.federation.process_transport import ProcessEndpoint
 
 __all__ = ["OwnerWorkerSpec", "PSIWorkerSpec", "WorkerHandle",
            "owner_worker_main", "psi_worker_main",
-           "spawn_owner_worker", "spawn_psi_worker"]
+           "spawn_owner_worker", "spawn_psi_worker", "CHAOS_ENV"]
 
 SCIENTIST = "scientist"
 
-#: chaos-injection env var (see module docstring); parsed in-worker
-CHAOS_ENV = "REPRO_CHAOS_PARTY"
-
 
 def _chaos_action(name: str) -> Optional[str]:
-    spec = os.environ.get(CHAOS_ENV, "")
-    if not spec:
-        return None
-    who, _, action = spec.partition(":")
-    return action if who == name else None
+    """Back-compat view of the env fault plan: the legacy action token
+    (``crash_fwd`` / ``wedge_fwd`` / ``crash_psi`` / ``wedge_psi``) for
+    ``name``, or ``None``.  Accepts comma-separated multi-party specs —
+    the plan *is* the serialization now; this is just its one-token
+    projection."""
+    for f in faults.plan_from_env().for_party(name):
+        key = (f.action, f.kind)
+        if key in faults._LEGACY_INV:
+            return faults._LEGACY_INV[key]
+    return None
 
 
 def _mp_context():
@@ -99,6 +102,15 @@ class OwnerWorkerSpec:
     owner_lr: Optional[float] = None
     latency_s: float = 0.0
     bandwidth_bps: Optional[float] = None
+    #: optimizer-state leaves for a respawn resuming mid-run (None: the
+    #: worker initializes fresh state from its params, the PR 6 path)
+    opt_state_leaves: Optional[List[np.ndarray]] = None
+    #: the step counter to resume at (respawned workers must stage the
+    #: replayed step's forwards, not step 0's)
+    start_step: int = 0
+    #: worker generation: 0 for first launch; respawns bump it, so
+    #: generation-0 faults (the legacy default) don't re-fire
+    generation: int = 0
 
 
 @dataclass
@@ -112,6 +124,7 @@ class PSIWorkerSpec:
     fp_rate: float = 1e-9
     latency_s: float = 0.0
     bandwidth_bps: Optional[float] = None
+    generation: int = 0
 
 
 # ---------------------------------------------------------------------------
@@ -129,6 +142,9 @@ def _run_worker(spec, conn, body) -> None:
     ep = ProcessEndpoint(spec.name, SCIENTIST, conn,
                          latency_s=spec.latency_s,
                          bandwidth_bps=spec.bandwidth_bps)
+    # wire faults (drop/corrupt/delay) on everything this worker sends
+    faults.arm_endpoint(ep, spec.name,
+                        generation=getattr(spec, "generation", 0))
     try:
         body(spec, ep)
     except BaseException as e:              # noqa: BLE001 — shipped to
@@ -160,13 +176,20 @@ def _owner_body(spec: OwnerWorkerSpec, ep: ProcessEndpoint) -> None:
     owner = DataOwner(spec.name, spec.ids, spec.features)
     owner_opt, owner_update = adapter.owner_update_rule(spec.owner_lr)
     head_fwd, head_bwd = adapter.owner_programs(p)
+    opt_state = None
+    if spec.opt_state_leaves is not None:
+        # a respawn resumes the snapshotted optimizer state verbatim
+        opt_state = jax.tree_util.tree_unflatten(
+            jax.tree_util.tree_structure(owner_opt.init(params)),
+            [jax.numpy.asarray(leaf) for leaf in spec.opt_state_leaves])
     worker = OwnerComputeEndpoint(
         owner, ep, head_fwd, head_bwd, optimizer=owner_opt,
         params=params, codec=get_codec(spec.codec),
         ack_steps=spec.ack_steps, microbatches=spec.microbatches,
         gather=adapter.gather_program(), update_program=owner_update,
-        tail_program=adapter.owner_tail_rule(spec.owner_lr, p))
-    _arm_chaos(worker, spec.name, "fwd", "head_fwd")
+        tail_program=adapter.owner_tail_rule(spec.owner_lr, p),
+        opt_state=opt_state, start_step=spec.start_step)
+    _arm_chaos(worker, spec.name, generation=spec.generation)
     worker.run()
     if worker.error is not None:
         raise worker.error
@@ -185,7 +208,7 @@ def _psi_body(spec: PSIWorkerSpec, ep: ProcessEndpoint) -> None:
 
     server = PSIServer(spec.ids, spec.fp_rate, spec.group)
     actor = PSIServerEndpoint(spec.name, server, ep)
-    _arm_chaos(actor, spec.name, "psi", "psi_blind_chunk")
+    _arm_chaos(actor, spec.name, generation=spec.generation)
     actor.run()
     if actor.error is not None:
         raise actor.error
@@ -196,23 +219,12 @@ def psi_worker_main(spec: PSIWorkerSpec, conn) -> None:
     _run_worker(spec, conn, _psi_body)
 
 
-def _arm_chaos(actor, name: str, suffix: str, trigger_kind: str) -> None:
-    """Wrap ``actor.handle`` per the chaos env var: raise (``crash_*``)
-    or hang (``wedge_*``) on the first ``trigger_kind`` message."""
-    action = _chaos_action(name)
-    if action not in (f"crash_{suffix}", f"wedge_{suffix}"):
-        return
-    orig = actor.handle
-
-    def handle(msg):
-        if msg.kind == trigger_kind:
-            if action == f"crash_{suffix}":
-                raise RuntimeError(
-                    f"chaos: injected crash in {name} on {msg.kind}")
-            time.sleep(3600.0)              # wedge: never answer
-        return orig(msg)
-
-    actor.handle = handle
+def _arm_chaos(actor, name: str, *, generation: int = 0) -> None:
+    """Wrap ``actor.handle`` with the env fault plan's crash/wedge
+    faults for ``name`` (kind targeting lives in the plan — an owner
+    actor armed with a ``psi_blind_chunk`` fault simply never sees the
+    kind, matching the old suffix dispatch)."""
+    faults.arm_actor(actor, name, generation=generation)
 
 
 # ---------------------------------------------------------------------------
@@ -261,7 +273,8 @@ class WorkerHandle:
         return f"WorkerHandle({self.name!r}, {state})"
 
 
-def _spawn(name: str, main, spec, *, owner=None, tap=None) -> WorkerHandle:
+def _spawn(name: str, main, spec, *, owner=None, tap=None,
+           dedup: bool = False) -> WorkerHandle:
     ctx = _mp_context()
     parent_conn, child_conn = ctx.Pipe(duplex=True)
     proc = ctx.Process(target=main, args=(spec, child_conn), daemon=True,
@@ -270,25 +283,31 @@ def _spawn(name: str, main, spec, *, owner=None, tap=None) -> WorkerHandle:
     child_conn.close()          # the child owns its end now
     ep = ProcessEndpoint(SCIENTIST, name, parent_conn,
                          latency_s=spec.latency_s,
-                         bandwidth_bps=spec.bandwidth_bps, tap=tap)
+                         bandwidth_bps=spec.bandwidth_bps, tap=tap,
+                         dedup=dedup)
     return WorkerHandle(name, proc, ep, owner=owner)
 
 
-def spawn_owner_worker(spec: OwnerWorkerSpec, *, owner=None, tap=None
-                       ) -> WorkerHandle:
+def spawn_owner_worker(spec: OwnerWorkerSpec, *, owner=None, tap=None,
+                       dedup: bool = False) -> WorkerHandle:
     """Spawn one owner compute worker; returns the parent-side handle
-    (its ``endpoint`` is the scientist's end of the party boundary)."""
+    (its ``endpoint`` is the scientist's end of the party boundary).
+    ``dedup`` turns on seq-based duplicate drop on the parent's receive
+    path — the supervised fit path uses it so a restarted worker's
+    replayed frames are idempotent."""
     return _spawn(spec.name, owner_worker_main, spec, owner=owner,
-                  tap=tap)
+                  tap=tap, dedup=dedup)
 
 
 def spawn_psi_worker(owner, *, group: str, fp_rate: float = 1e-9,
                      latency_s: float = 0.0,
                      bandwidth_bps: Optional[float] = None,
-                     tap=None) -> WorkerHandle:
+                     tap=None, generation: int = 0) -> WorkerHandle:
     """Spawn one PSI server actor for ``owner`` (a
-    :class:`~repro.federation.parties.DataOwner`)."""
+    :class:`~repro.federation.parties.DataOwner`).  ``generation``
+    increments on retry, so generation-0 faults don't re-fire."""
     spec = PSIWorkerSpec(name=owner.name, ids=list(owner.ids),
                          group=group, fp_rate=fp_rate,
-                         latency_s=latency_s, bandwidth_bps=bandwidth_bps)
+                         latency_s=latency_s, bandwidth_bps=bandwidth_bps,
+                         generation=generation)
     return _spawn(spec.name, psi_worker_main, spec, owner=owner, tap=tap)

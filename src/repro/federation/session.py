@@ -52,6 +52,7 @@ from __future__ import annotations
 import queue as _queue
 import threading
 import time
+import warnings
 from collections import deque
 from typing import Dict, List, Optional, Sequence, Union
 
@@ -63,10 +64,12 @@ from repro.core.modexp import ModexpPool
 from repro.core.psi import DEFAULT_CHUNK, DEFAULT_MODE, psi_round
 from repro.core.splitnn import (cut_layer_traffic, make_split_train_step,
                                 train_state_init)
-from repro.federation import batching, transport
+from repro.federation import batching, faults, transport
 from repro.federation.parties import (DataOwner, DataScientist,
                                       OwnerComputeEndpoint, PrivacyError)
 from repro.federation.registry import build_adapter
+from repro.federation.supervisor import OwnerFailure, Supervisor
+from repro.federation.transport import FrameCorrupt
 
 
 def _scalars(m):
@@ -75,6 +78,28 @@ def _scalars(m):
 
 def _tree_add(a, b):
     return jax.tree.map(lambda x, y: x + y, a, b)
+
+
+#: leaked-actor accounting: party threads that outlived their join
+#: deadline (process-wide — a wedged actor sleeping through its stop is
+#: the common producer; tests reset this between cases)
+leak_stats = {"leaked_threads": 0}
+
+
+def _join_or_warn(th, timeout: float, context: str) -> bool:
+    """``th.join(timeout)`` that *surfaces* the leak: a party thread
+    still alive after its deadline (a wedged actor mid-sleep, a stuck
+    receive) gets a loud ``RuntimeWarning`` and a ``leak_stats`` bump
+    instead of silently outliving the session."""
+    th.join(timeout=timeout)
+    if th.is_alive():
+        leak_stats["leaked_threads"] += 1
+        warnings.warn(
+            f"{context}: thread {th.name!r} still alive after "
+            f"{timeout:.1f}s join — leaked (wedged actor?)",
+            RuntimeWarning, stacklevel=2)
+        return False
+    return True
 
 
 class VerticalSession:
@@ -97,6 +122,8 @@ class VerticalSession:
         self.transcript: List[dict] = []
         self.resolve_stats: Optional[dict] = None
         self.transport_stats: Optional[dict] = None
+        #: one entry per supervised-fit recovery / PSI round retry
+        self.recovery_events: List[dict] = []
         self.adapter = None
         self.config = None
         self._init_seed = seed
@@ -137,7 +164,8 @@ class VerticalSession:
                 chunk_size: int = DEFAULT_CHUNK,
                 backend: str = "direct", latency_s: float = 0.0,
                 bandwidth_bps: Optional[float] = None,
-                timeout: float = 120.0) -> dict:
+                timeout: float = 120.0, retries: int = 0,
+                retry_backoff_s: float = 0.05) -> dict:
         """The paper's §3.1 protocol: the scientist runs DH-PSI pairwise
         with each owner (scientist = client, so only the scientist learns
         each intersection), intersects globally, broadcasts the shared IDs,
@@ -174,7 +202,16 @@ class VerticalSession:
             its poison-pill frame or exit code.
 
         The intersection is bit-identical across backends, chunk sizes,
-        and parallelism (property-tested)."""
+        and parallelism (property-tested).
+
+        ``retries`` re-runs a *failed* owner round (crashed or wedged
+        PSI worker) up to that many extra times with exponential backoff
+        (``retry_backoff_s`` base), respawning the owner's actor at
+        generation ``attempt`` so generation-0 injected faults don't
+        re-fire.  The scientist's sha256-memoized blinded upload
+        survives the retry, so any chunk the owner already cached ships
+        zero repeat bytes (queue backend: the owner-side cache also
+        survives actor re-creation)."""
         if backend not in ("direct", "queue", "process"):
             raise ValueError(f"unknown resolve backend {backend!r}")
         if backend == "direct" and (latency_s or bandwidth_bps):
@@ -191,16 +228,37 @@ class VerticalSession:
         client = self.scientist.psi_client(group, mode)
         with ModexpPool(parallelism) as pool:
             for owner in self.owners:
-                if backend != "direct":
-                    inter, rstats = self._resolve_owner_wire(
-                        client, owner, backend=backend, group=group,
-                        fp_rate=fp_rate, pool=pool, chunk_size=chunk_size,
-                        latency_s=latency_s, bandwidth_bps=bandwidth_bps,
-                        timeout=timeout, stats=stats)
-                else:
-                    inter, rstats = self._resolve_owner_direct(
-                        client, owner, group=group, fp_rate=fp_rate,
-                        pool=pool, chunk_size=chunk_size)
+                for attempt in range(max(0, retries) + 1):
+                    try:
+                        if backend != "direct":
+                            inter, rstats = self._resolve_owner_wire(
+                                client, owner, backend=backend,
+                                group=group, fp_rate=fp_rate, pool=pool,
+                                chunk_size=chunk_size,
+                                latency_s=latency_s,
+                                bandwidth_bps=bandwidth_bps,
+                                timeout=timeout, stats=stats,
+                                generation=attempt)
+                        else:
+                            inter, rstats = self._resolve_owner_direct(
+                                client, owner, group=group,
+                                fp_rate=fp_rate, pool=pool,
+                                chunk_size=chunk_size)
+                        break
+                    except RuntimeError as e:
+                        # a crashed/wedged PSI round costs one retry:
+                        # the client's blinded upload is memoized, so
+                        # the rerun re-ships only what the owner never
+                        # cached (0 bytes when the round died late)
+                        if attempt >= retries:
+                            raise
+                        self._log("scientist", owner.name,
+                                  "psi_round_retry", attempt=attempt + 1,
+                                  error=str(e))
+                        self.recovery_events.append(
+                            {"party": owner.name, "action": "psi_retry",
+                             "attempt": attempt + 1, "error": str(e)})
+                        time.sleep(retry_backoff_s * (2 ** attempt))
                 # the ENGINE's parallelism (0 when the host can't fork),
                 # not the requested value — stats must not claim a pool
                 # that silently degraded to serial
@@ -269,7 +327,8 @@ class VerticalSession:
 
     def _resolve_owner_wire(self, client, owner, *, backend, group,
                             fp_rate, pool, chunk_size, latency_s,
-                            bandwidth_bps, timeout, stats):
+                            bandwidth_bps, timeout, stats,
+                            generation=0):
         """One wire-native PSI round: the owner's actor on its own thread
         (``backend="queue"``) or in its own spawned process
         (``backend="process"``, ``federation/runtime.py``) behind a
@@ -283,7 +342,8 @@ class VerticalSession:
             from repro.federation import runtime
             handle = runtime.spawn_psi_worker(
                 owner, group=group, fp_rate=fp_rate,
-                latency_s=latency_s, bandwidth_bps=bandwidth_bps)
+                latency_s=latency_s, bandwidth_bps=bandwidth_bps,
+                generation=generation)
             ep_sci = handle.endpoint
             try:
                 inter, rstats = wire_psi_round(
@@ -300,6 +360,10 @@ class VerticalSession:
                 "scientist", owner.name, backend="queue",
                 latency_s=latency_s, bandwidth_bps=bandwidth_bps)
             worker = owner.psi_endpoint(ep_own, group, fp_rate, pool=pool)
+            # same chaos surface as the spawned workers: the env plan's
+            # crash/wedge + wire faults land on the in-process actor too
+            faults.arm_actor(worker, owner.name, generation=generation)
+            faults.arm_endpoint(ep_own, owner.name, generation=generation)
             th = threading.Thread(target=worker.run, daemon=True,
                                   name=f"psi-{owner.name}")
             th.start()
@@ -309,7 +373,7 @@ class VerticalSession:
                     chunk_size=chunk_size, timeout=timeout)
             finally:
                 ep_sci.send("psi_stop", {})
-                th.join(timeout=10.0)
+                _join_or_warn(th, 10.0, f"resolve({owner.name})")
 
         sent, rcvd = ep_sci.sent_stats, ep_sci.recv_stats
         for kind, st in sorted(sent["by_kind"].items()):
@@ -365,7 +429,9 @@ class VerticalSession:
             compression: Optional[str] = None, backend: str = "queue",
             latency_s: float = 0.0,
             bandwidth_bps: Optional[float] = None,
-            timeout: float = 120.0) -> dict:
+            timeout: float = 120.0, supervise: bool = False,
+            max_restarts: int = 2, resync_every: int = 1,
+            heartbeat_s: float = 0.5) -> dict:
         """The SplitNN training loop.
 
         Exactly one of ``epochs`` (feature workloads) / ``steps`` (LM
@@ -399,7 +465,24 @@ class VerticalSession:
         steady-state cross-party receive may wait before a wedged or
         dead owner surfaces as a clean error on the scientist side;
         warmup receives use at least 120 s to absorb worker startup +
-        compile)."""
+        compile).
+
+        ``supervise=True`` (split mode, wire backends) turns on the
+        crash-recovery protocol: every ``resync_every`` steps the
+        scientist ships a ``snapshot`` marker — each owner keeps a host
+        copy of its step-start params/optimizer state and acks the
+        leaves back — and a ``federation.supervisor.Supervisor`` runs
+        heartbeat liveness probes alongside the step loop.  When an
+        owner crashes, wedges past ``timeout``, or a frame fails its
+        CRC, the session rolls every survivor back to the newest marker
+        the failed party acked, respawns the dead owner from its
+        snapshotted leaves (bounded exponential backoff, at most
+        ``max_restarts`` per party), replays the in-flight steps from
+        the cached batch-index log, and continues — the final params
+        are bit-identical to the fault-free run (property-tested; the
+        zero-grad recovery warmup is a bitwise no-op for SGD-family
+        owner optimizers, the paper's case).  Each recovery appends to
+        ``session.recovery_events``."""
         self._require(resolved=True, built=True, labels=True)
         if (epochs is None) == (steps is None):
             raise ValueError("pass exactly one of epochs= or steps=")
@@ -417,6 +500,16 @@ class VerticalSession:
                 raise ValueError(
                     f"{type(self.adapter).__name__} does not support "
                     "microbatched training")
+        if supervise:
+            if mode != "split":
+                raise ValueError("supervise=True requires mode='split' "
+                                 "(recovery is a wire protocol)")
+            if backend == "direct":
+                raise ValueError("supervise=True requires a wire "
+                                 "backend ('queue' or 'process')")
+            if int(resync_every) < 1:
+                raise ValueError(
+                    f"resync_every must be >= 1: {resync_every}")
         if mode == "split":
             return self._fit_split(
                 epochs=epochs, steps=steps, batch_size=batch_size,
@@ -427,7 +520,10 @@ class VerticalSession:
                 schedule=schedule, microbatches=microbatches,
                 compression=compression, backend=backend,
                 latency_s=latency_s, bandwidth_bps=bandwidth_bps,
-                timeout=timeout)
+                timeout=timeout, supervise=supervise,
+                max_restarts=max_restarts,
+                resync_every=int(resync_every),
+                heartbeat_s=heartbeat_s)
         if microbatches > 1:
             return self._fit_joint_microbatched(
                 epochs=epochs, steps=steps, batch_size=batch_size,
@@ -714,25 +810,29 @@ class VerticalSession:
         immediately (short poll) instead of after the full timeout.
         Process-backed workers can also fail *through* the receive — a
         poison-pill frame or a severed pipe raises out of ``recv_kind``
-        — and get wrapped in the same owner-attributed error."""
+        — and get wrapped in the same owner-attributed error.  Failures
+        raise :class:`~repro.federation.supervisor.OwnerFailure` (a
+        ``RuntimeError`` carrying ``.party``), so the supervised fit
+        knows whom to restart; message strings are unchanged."""
         deadline = time.monotonic() + timeout
         while True:
             try:
                 return ep.recv_kind(kind, timeout=1.0)
             except _queue.Empty:
                 if worker.error is not None:
-                    raise RuntimeError(
-                        f"owner worker {worker.owner.name!r} failed"
-                    ) from worker.error
+                    raise OwnerFailure(
+                        f"owner worker {worker.owner.name!r} failed",
+                        party=worker.owner.name) from worker.error
                 if time.monotonic() > deadline:
-                    raise RuntimeError(
+                    raise OwnerFailure(
                         f"timed out waiting for {kind!r} from "
-                        f"{worker.owner.name!r}")
+                        f"{worker.owner.name!r}",
+                        party=worker.owner.name)
             except Exception:
                 if getattr(worker, "error", None) is not None:
-                    raise RuntimeError(
-                        f"owner worker {worker.owner.name!r} failed"
-                    ) from worker.error
+                    raise OwnerFailure(
+                        f"owner worker {worker.owner.name!r} failed",
+                        party=worker.owner.name) from worker.error
                 raise
 
     def _sync_split_params(self, workers, eps, trunk_params,
@@ -769,7 +869,8 @@ class VerticalSession:
                    scientist_lr, log_every, ckpt_dir, ckpt_every,
                    shuffle_seed, verbose, schedule, microbatches,
                    compression, backend, latency_s, bandwidth_bps,
-                   timeout=120.0) -> dict:
+                   timeout=120.0, supervise=False, max_restarts=2,
+                   resync_every=1, heartbeat_s=0.5) -> dict:
         """True split execution over the transport layer (paper Fig. 2).
 
         Per step t the wire carries exactly four message kinds:
@@ -844,49 +945,85 @@ class VerticalSession:
 
         owner_opt, owner_update = adapter.owner_update_rule(owner_lr)
         workers, eps, threads = [], [], []
-        if backend == "process":
-            # each owner's head segment in its own spawned worker
-            # process (federation/runtime.py): the spec carries the
-            # model config + the owner's current param leaves, and the
-            # worker rebuilds the exact OwnerComputeEndpoint the thread
-            # path constructs below
+
+        def spawn_proc(p, *, param_leaves, opt_state_leaves=None,
+                       start_step=0, generation=0):
+            # one spawned worker process per owner (federation/
+            # runtime.py): the spec carries the model config + the
+            # owner's param leaves (and, on respawn, its snapshotted
+            # optimizer state + resume step), and the worker rebuilds
+            # the exact OwnerComputeEndpoint the thread path constructs
             from repro.federation import runtime
-            for p, owner in enumerate(self.owners):
-                spec = runtime.OwnerWorkerSpec(
-                    name=owner.name, ids=list(owner.ids),
-                    features=np.asarray(owner._features),
-                    owner_index=p, config=self.config,
-                    init_seed=self._init_seed,
-                    param_leaves=[np.asarray(leaf) for leaf in
-                                  jax.tree_util.tree_leaves(
-                                      adapter.owner_param_slice(
-                                          self.params, p))],
-                    codec=compression, microbatches=M,
-                    ack_steps=sequential, owner_lr=owner_lr,
-                    latency_s=latency_s, bandwidth_bps=bandwidth_bps)
-                handle = runtime.spawn_owner_worker(spec, owner=owner)
+            owner = self.owners[p]
+            spec = runtime.OwnerWorkerSpec(
+                name=owner.name, ids=list(owner.ids),
+                features=np.asarray(owner._features),
+                owner_index=p, config=self.config,
+                init_seed=self._init_seed,
+                param_leaves=param_leaves,
+                codec=compression, microbatches=M,
+                ack_steps=sequential, owner_lr=owner_lr,
+                latency_s=latency_s, bandwidth_bps=bandwidth_bps,
+                opt_state_leaves=opt_state_leaves,
+                start_step=start_step, generation=generation)
+            return runtime.spawn_owner_worker(spec, owner=owner)
+
+        def spawn_thread(p, *, params, opt_state=None, start_step=0,
+                         generation=0):
+            owner = self.owners[p]
+            ep_sci, ep_own = transport.channel_pair(
+                "scientist", owner.name, backend=backend,
+                latency_s=latency_s, bandwidth_bps=bandwidth_bps)
+            head_fwd, head_bwd = adapter.owner_programs(p)
+            w = OwnerComputeEndpoint(
+                owner, ep_own, head_fwd, head_bwd,
+                optimizer=owner_opt, params=params,
+                codec=codec, ack_steps=sequential, microbatches=M,
+                gather=adapter.gather_program(),
+                update_program=owner_update,
+                tail_program=adapter.owner_tail_rule(owner_lr, p),
+                opt_state=opt_state, start_step=start_step)
+            # in-process actors get the same chaos surface as spawned
+            # workers: the env plan's crash/wedge wrap + wire faults
+            faults.arm_actor(w, owner.name, generation=generation)
+            if backend == "queue":
+                faults.arm_endpoint(ep_own, owner.name,
+                                    generation=generation)
+            th = threading.Thread(target=w.run, daemon=True,
+                                  name=f"owner-{owner.name}")
+            th.start()
+            return w, ep_sci, th
+
+        for p in range(len(self.owners)):
+            if backend == "process":
+                handle = spawn_proc(
+                    p, param_leaves=[
+                        np.asarray(leaf) for leaf in
+                        jax.tree_util.tree_leaves(
+                            adapter.owner_param_slice(self.params, p))])
                 workers.append(handle)
                 eps.append(handle.endpoint)
-        else:
-            for p, owner in enumerate(self.owners):
-                ep_sci, ep_own = transport.channel_pair(
-                    "scientist", owner.name, backend=backend,
-                    latency_s=latency_s, bandwidth_bps=bandwidth_bps)
-                head_fwd, head_bwd = adapter.owner_programs(p)
-                w = OwnerComputeEndpoint(
-                    owner, ep_own, head_fwd, head_bwd,
-                    optimizer=owner_opt,
-                    params=adapter.owner_param_slice(self.params, p),
-                    codec=codec, ack_steps=sequential, microbatches=M,
-                    gather=adapter.gather_program(),
-                    update_program=owner_update,
-                    tail_program=adapter.owner_tail_rule(owner_lr, p))
+            else:
+                w, ep_sci, th = spawn_thread(
+                    p, params=adapter.owner_param_slice(self.params, p))
                 workers.append(w)
                 eps.append(ep_sci)
-                th = threading.Thread(target=w.run, daemon=True,
-                                      name=f"owner-{owner.name}")
-                th.start()
                 threads.append(th)
+
+        sup = None
+        if supervise:
+            # heartbeat liveness probes ride the protocol channels on
+            # their own thread (send paths are thread-safe; recv_kind's
+            # locked stash routes each kind to its consumer).  The step
+            # loop never *acts* on a suspicion alone — recovery triggers
+            # on in-band failures (OwnerFailure / FrameCorrupt), which
+            # are strictly fresher — but the supervisor owns the
+            # restart budget and backoff.
+            sup = Supervisor(max_restarts=max_restarts,
+                             heartbeat_s=heartbeat_s)
+            for p, owner in enumerate(self.owners):
+                sup.attach(owner.name, eps[p], workers[p])
+            sup.start()
 
         labels = self.scientist.labels
         rng = np.random.default_rng(self.seed if shuffle_seed is None
@@ -897,8 +1034,18 @@ class VerticalSession:
         else:
             steps_per_epoch = None
             total_steps = steps
-        # THE batch-index stream — shared with the joint loop
+        # THE batch-index stream — shared with the joint loop.  The
+        # replay log caches every batch pulled from the generator so a
+        # supervised recovery can re-send step s's exact indices without
+        # re-consuming the shuffle rng (bit-identity depends on it).
         gen = self._index_stream(rng, n_train, batch_size, epochs, steps)
+        idx_log: list = []
+
+        def get_idx(i):
+            while len(idx_log) <= i:
+                idx_log.append(next(gen))
+            return idx_log[i]
+
         inflight: deque = deque()
 
         def send_fwd(idx, seq):
@@ -939,6 +1086,7 @@ class VerticalSession:
         try:
             widx = np.zeros(batch_size, np.int32)
             wlab = np.asarray(labels[widx])
+            wzero = None        # kept: respawned workers re-warm with it
             for ep in eps:
                 ep.send("warmup", {"idx": widx}, seq=-1)
             for m in range(M):
@@ -957,6 +1105,7 @@ class VerticalSession:
                     weightgrad(trunk_params, tuple(cuts), lab_m, denom,
                                inv_micro)
                 zero = np.zeros_like(np.asarray(cg[0]))
+                wzero = zero
                 for ep in eps:
                     ep.send("warmup_grads", codec.encode(zero), seq=m)
             trunk_params, trunk_state = trunk_update(
@@ -977,14 +1126,189 @@ class VerticalSession:
                 self._sync_split_params(workers, eps, trunk_params,
                                         timeout=timeout)
 
-            if total_steps > 0:
-                send_fwd(next(gen), 0)
-            for t in range(total_steps):
-                if not sequential and t + 1 < total_steps:
+            # -------- supervision state (markers, snapshots, replay)
+            trunk_snaps: dict = {}   # marker step -> (np params, np state)
+            hist_marks: dict = {}    # marker step -> history lengths
+            snap_acks: dict = {p: {} for p in range(len(eps))}
+            marker = {"last": None, "pending": False}
+            KEEP = 4                 # markers retained (> pipeline lag)
+
+            def collect_acks(s):
+                for p, (ep, w) in enumerate(zip(eps, workers)):
+                    m = self._recv_from_owner(ep, w, "snapshot_ack",
+                                              timeout=timeout)
+                    if int(m.seq) != s:
+                        raise OwnerFailure(
+                            f"snapshot ack desync from "
+                            f"{self.owners[p].name!r}: seq {m.seq} != "
+                            f"{s}", party=self.owners[p].name)
+                    snap_acks[p][s] = {k: np.array(v)
+                                       for k, v in m.payload.items()}
+                    for old in sorted(snap_acks[p])[:-KEEP]:
+                        del snap_acks[p][old]
+
+            def mark(s):
+                # collect the previous marker's acks lazily (they have
+                # been on the wire since that iteration), then ship
+                # marker s: each owner snapshots its step-s-start
+                # params/opt state by FIFO order; the trunk's step-s
+                # snapshot is taken right here
+                if marker["pending"]:
+                    collect_acks(marker["last"])
+                for ep in eps:
+                    ep.send("snapshot", {}, seq=s)
+                trunk_snaps[s] = (
+                    jax.tree.map(lambda a: np.array(a), trunk_params),
+                    jax.tree.map(lambda a: np.array(a), trunk_state))
+                hist_marks[s] = (len(history["train"]),
+                                 len(history["eval"]))
+                for old in sorted(trunk_snaps)[:-KEEP]:
+                    del trunk_snaps[old]
+                    hist_marks.pop(old, None)
+                marker["last"], marker["pending"] = s, True
+
+            def respawn(p, s):
+                # rebuild owner p from the marker-s leaves it acked:
+                # params + optimizer state + step counter, armed at its
+                # next generation so generation-0 faults stay fired
+                gen_n = sup.restarts(self.owners[p].name)
+                ack = snap_acks[p][s]
+                p_leaves = [ack[f"p{i}"] for i in
+                            range(sum(k.startswith("p") for k in ack))]
+                o_leaves = [ack[f"o{i}"] for i in
+                            range(sum(k.startswith("o") for k in ack))]
+                if backend == "process":
+                    handle = spawn_proc(
+                        p, param_leaves=p_leaves,
+                        opt_state_leaves=o_leaves, start_step=s,
+                        generation=gen_n)
+                    workers[p], eps[p] = handle, handle.endpoint
+                else:
+                    structure = jax.tree_util.tree_structure(
+                        adapter.owner_param_slice(self.params, p))
+                    params_r = jax.tree_util.tree_unflatten(
+                        structure, [jnp.asarray(x) for x in p_leaves])
+                    opt_r = jax.tree_util.tree_unflatten(
+                        jax.tree_util.tree_structure(
+                            owner_opt.init(params_r)),
+                        [jnp.asarray(x) for x in o_leaves])
+                    w, ep_sci, th = spawn_thread(
+                        p, params=params_r, opt_state=opt_r,
+                        start_step=s, generation=gen_n)
+                    workers[p], eps[p] = w, ep_sci
+                    threads.append(th)
+                sup.attach(self.owners[p].name, eps[p], workers[p])
+
+            def rewarm(p):
+                # compile the respawned worker's programs before it
+                # rejoins the timed region; the zero-grad update is a
+                # bitwise no-op (SGD-family owner optimizers)
+                ep, w = eps[p], workers[p]
+                ep.send("warmup", {"idx": widx}, seq=-1)
+                for m in range(M):
+                    self._recv_from_owner(ep, w, "warmup_cuts",
+                                          timeout=warmup_timeout)
+                    ep.send("warmup_grads", codec.encode(wzero), seq=m)
+                self._recv_from_owner(ep, w, "warmup_done",
+                                      timeout=warmup_timeout)
+
+            def recover(exc):
+                """Roll every party back to the newest consistent
+                marker s*, respawn the dead owner from its acked
+                snapshot, and return s* as the step to replay from."""
+                nonlocal trunk_params, trunk_state
+                crashed = isinstance(exc, OwnerFailure)
+                party = exc.party if crashed else exc.sender
+                sup.failed.setdefault(party, exc)
+                sup.plan_restart(party)     # budget + bounded backoff
+                if crashed:
+                    p_dead = next(i for i, o in enumerate(self.owners)
+                                  if o.name == party)
+                    # harvest snapshot acks still in flight from the
+                    # dead party (sent before it died), then cut loose
+                    try:
+                        while True:
+                            m = eps[p_dead].recv_kind("snapshot_ack",
+                                                      timeout=0.5)
+                            snap_acks[p_dead][int(m.seq)] = {
+                                k: np.array(v)
+                                for k, v in m.payload.items()}
+                    except Exception:   # noqa: BLE001 — channel is dead
+                        pass
+                    shutdown = getattr(workers[p_dead], "shutdown", None)
+                    if shutdown is not None:
+                        shutdown()
+                    acked = sorted(s for s in snap_acks[p_dead]
+                                   if s in trunk_snaps)
+                    if not acked:
+                        raise OwnerFailure(
+                            f"party {party!r} failed with no "
+                            "recoverable snapshot", party=party) from exc
+                    s_star = acked[-1]
+                else:
+                    # wire fault (FrameCorrupt): the party is alive —
+                    # everyone rolls back to the newest marker, which
+                    # every owner has processed by FIFO order
+                    p_dead = None
+                    s_star = marker["last"]
+                for i, ep in enumerate(eps):
+                    if i != p_dead:
+                        ep.send("rollback", {}, seq=s_star)
+                for i, (ep, w) in enumerate(zip(eps, workers)):
+                    if i == p_dead:
+                        continue
+                    while int(self._recv_from_owner(
+                            ep, w, "rollback_ack",
+                            timeout=timeout).seq) != s_star:
+                        pass
+                    # everything the owner sent before its ack is stale
+                    ep.flush_pending()
+                    if hasattr(ep, "reset_dedup"):
+                        ep.reset_dedup()
+                if crashed:
+                    respawn(p_dead, s_star)
+                    rewarm(p_dead)
+                tp_np, ts_np = trunk_snaps[s_star]
+                trunk_params = jax.tree.map(jnp.asarray, tp_np)
+                trunk_state = jax.tree.map(jnp.asarray, ts_np)
+                n_tr, n_ev = hist_marks[s_star]
+                del history["train"][n_tr:]
+                del history["eval"][n_ev:]
+                trunk_snaps.clear()
+                hist_marks.clear()
+                for p in snap_acks:
+                    snap_acks[p].clear()
+                marker["last"], marker["pending"] = None, False
+                # synchronous re-mark: every owner (respawned included)
+                # snapshots its restored step-s*-start state, so a
+                # second failure before the next marker stays covered
+                mark(s_star)
+                collect_acks(s_star)
+                marker["pending"] = False
+                self.recovery_events.append({
+                    "party": party, "step": int(s_star),
+                    "action": "respawn" if crashed else "rollback",
+                    "error": str(exc)})
+                return s_star
+
+            t = 0
+            fwd_next = 0        # next head_fwd seq to ship
+            while t < total_steps:
+              try:
+                if supervise and t % resync_every == 0 \
+                        and marker["last"] != t:
+                    mark(t)
+                if fwd_next == t:
+                    # step t's forward request (start or replay resume)
+                    send_fwd(get_idx(t), t)
+                    fwd_next = t + 1
+                if (not sequential and t + 1 < total_steps
+                        and fwd_next == t + 1):
                     # the t+1 forward request leaves FIRST: it overlaps
                     # the wire and the owners stage (not run) it until
                     # their step-t update lands — FIFO keeps it exact
-                    send_fwd(next(gen), t + 1)
+                    send_fwd(get_idx(t + 1), t + 1)
+                    fwd_next = t + 2
                 idx_t = inflight.popleft()
                 # label staging runs while the cut chunks are on the wire
                 lab_t = np.asarray(labels[idx_t])
@@ -1006,8 +1330,9 @@ class VerticalSession:
                     for ep, w in zip(eps, workers):
                         self._recv_from_owner(ep, w, "step_done",
                                               timeout=timeout)
-                    if t + 1 < total_steps:
-                        send_fwd(next(gen), t + 1)
+                    if t + 1 < total_steps and fwd_next == t + 1:
+                        send_fwd(get_idx(t + 1), t + 1)
+                        fwd_next = t + 2
                     parts_list = [parts]
                 else:
                     # pipelined GPipe: each chunk's cut grads ship the
@@ -1057,6 +1382,13 @@ class VerticalSession:
                     verbose=verbose, ckpt_dir=ckpt_dir,
                     ckpt_every=ckpt_every, sync=sync)
                 overhead_s += time.time() - tb
+                t += 1
+              except (OwnerFailure, FrameCorrupt) as e:
+                if not supervise:
+                    raise
+                t = recover(e)
+                inflight.clear()
+                fwd_next = t
 
             wall_s = time.time() - t0
             self._sync_split_params(workers, eps, trunk_params,
@@ -1065,13 +1397,15 @@ class VerticalSession:
                 history["eval"].append({"step": steps, **self.evaluate()})
         finally:
             _sys.setswitchinterval(old_switch)
+            if sup is not None:
+                sup.stop()
             for ep in eps:
                 try:
                     ep.send("stop", {})
                 except RuntimeError:        # worker already gone
                     pass
             for th in threads:
-                th.join(timeout=10.0)
+                _join_or_warn(th, 10.0, "fit(split)")
             for w in workers:
                 shutdown = getattr(w, "shutdown", None)
                 if shutdown is not None:    # process-backed handle
@@ -1132,6 +1466,8 @@ class VerticalSession:
             "total_wire_bytes": tot_wire,
             "total_payload_bytes_per_step": tot_payload
             // max(total_steps, 1),
+            "recoveries": len(self.recovery_events),
+            "supervisor": dict(sup.stats) if sup is not None else None,
         }
 
         final = dict(history["train"][-1]) if history["train"] else {}
@@ -1213,6 +1549,15 @@ class VerticalSession:
         self._require(built=True)
         from repro import checkpoint as ckpt
         return ckpt.save_split(ckpt_dir, self.params, step)
+
+    def restore(self, step_dir: str) -> "VerticalSession":
+        """Load per-party checkpoints saved by :meth:`checkpoint` (or
+        ``fit(ckpt_every=...)``) back into the resident params, so a
+        fresh session resumes training/serving from that step."""
+        self._require(built=True)
+        from repro import checkpoint as ckpt
+        self.params = ckpt.restore_split(step_dir)
+        return self
 
     def cut_traffic(self, batch_size: int,
                     bytes_per_el: int = 4) -> Dict[str, int]:

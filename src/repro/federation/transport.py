@@ -44,6 +44,7 @@ import queue
 import struct
 import threading
 import time
+import zlib
 from dataclasses import dataclass
 from typing import Dict, Optional, Tuple
 
@@ -51,7 +52,21 @@ import numpy as np
 
 __all__ = ["Message", "Channel", "Endpoint", "ScopedEndpoint",
            "channel_pair", "Codec", "get_codec", "CODECS", "SPIN_WAIT_S",
-           "spin_wait_s"]
+           "spin_wait_s", "FrameCorrupt"]
+
+
+class FrameCorrupt(RuntimeError):
+    """A serialized frame failed its CRC32 integrity check.  Raised by
+    the receive path of both the queue and process backends; carries the
+    frame's protocol ``kind`` and ``seq`` so multiplexed receivers can
+    route the failure to the session that owns the frame."""
+
+    def __init__(self, kind: str, seq: int, sender: str, receiver: str):
+        super().__init__(
+            f"frame corrupt: {kind!r} seq {seq} from {sender!r} to "
+            f"{receiver!r} (crc32 mismatch)")
+        self.kind, self.seq = kind, seq
+        self.sender, self.receiver = sender, receiver
 
 # Hybrid-wait margin: sleep until this close to a delivery deadline, then
 # spin on the monotonic clock.  ``time.sleep`` alone overshoots by the
@@ -225,6 +240,7 @@ class Message:
     payload_bytes: int = 0         # sum of array buffers (the protocol data)
     wire_bytes: int = 0            # serialized blob incl. headers (queue)
     not_before: float = 0.0        # simulated-network delivery time
+    crc: Optional[int] = None      # crc32 of the blob (serialized backends)
 
 
 class Channel:
@@ -252,6 +268,9 @@ class Channel:
         # tests capture full transcripts through this without touching
         # the send path's behavior.
         self.tap = tap
+        # fault hook: fault_hook(kind, seq) -> (action, delay_s) | None,
+        # installed by faults.arm_endpoint (drop/corrupt/delay)
+        self.fault_hook = None
         self._q: "queue.Queue[Message]" = queue.Queue()
         self._lock = threading.Lock()
         # serializes access to the shared pack scratch: multiplexed
@@ -278,23 +297,42 @@ class Channel:
              seq: int = 0) -> Message:
         pb = _payload_nbytes(payload)
         blob = None
+        crc = None
         if self.serialize:
             with self._send_lock:
                 used = _pack_into(payload, self._sendbuf)
                 blob = bytes(memoryview(self._sendbuf)[:used])
             wb = used
+            crc = zlib.crc32(blob) & 0xFFFFFFFF
             payload = {"__blob__": blob}           # only bytes travel
         else:
             wb = pb                                # by-reference handoff
         msg = Message(self.sender, self.receiver, kind, payload, seq=seq,
-                      payload_bytes=pb, wire_bytes=wb)
+                      payload_bytes=pb, wire_bytes=wb, crc=crc)
         if self.tap is not None:
             self.tap(msg, blob)
-        if self.latency_s or self.bandwidth_bps:
-            transit = self.latency_s + (wb / self.bandwidth_bps
-                                        if self.bandwidth_bps else 0.0)
+        fault = (self.fault_hook(kind, seq)
+                 if self.fault_hook is not None else None)
+        transit = self.latency_s + (wb / self.bandwidth_bps
+                                    if self.bandwidth_bps else 0.0)
+        if fault is not None and fault[0] == "delay":
+            transit += fault[1]
+        if transit:
             msg.not_before = time.monotonic() + transit
         self._account(kind, pb, wb)
+        if fault is not None:
+            action = fault[0]
+            if action == "drop_frame":
+                with self._lock:
+                    self.stats["dropped_frames"] = self.stats.get(
+                        "dropped_frames", 0) + 1
+                return msg                         # lost on the wire
+            if action == "corrupt_frame" and blob is not None:
+                # flip one byte AFTER the crc was taken: the receiver's
+                # integrity check fails loudly (FrameCorrupt)
+                bad = bytearray(blob)
+                bad[len(bad) // 2] ^= 0xFF
+                msg.payload = {"__blob__": bytes(bad)}
         self._q.put(msg)
         return msg
 
@@ -303,7 +341,12 @@ class Channel:
         if msg.not_before:
             _wait_until(msg.not_before, self.spin_s)
         if self.serialize:
-            msg.payload = _unpack(msg.payload["__blob__"])
+            blob = msg.payload["__blob__"]
+            if msg.crc is not None and (
+                    zlib.crc32(blob) & 0xFFFFFFFF) != msg.crc:
+                raise FrameCorrupt(msg.kind, msg.seq, self.sender,
+                                   self.receiver)
+            msg.payload = _unpack(blob)
         return msg
 
     def empty(self) -> bool:
@@ -327,6 +370,10 @@ class Endpoint:
         self.name, self.peer = name, peer
         self.outbox, self.inbox = outbox, inbox
         self._stash: list = []
+        # corrupt frames routed to the kind that owns them: a session
+        # draining a shared endpoint must not die on another session's
+        # corruption (see recv_kind)
+        self._corrupt: Dict[str, FrameCorrupt] = {}
         self._rlock = threading.RLock()
 
     def send(self, kind: str, payload: Dict[str, np.ndarray], *,
@@ -347,6 +394,8 @@ class Endpoint:
         deadline = None if timeout is None else time.monotonic() + timeout
         while True:
             with self._rlock:
+                if kind in self._corrupt:
+                    raise self._corrupt.pop(kind)
                 for i, m in enumerate(self._stash):
                     if m.kind == kind:
                         return self._stash.pop(i)
@@ -354,6 +403,11 @@ class Endpoint:
                     msg = self.inbox.recv(timeout=self._POLL_S)
                 except queue.Empty:
                     msg = None
+                except FrameCorrupt as e:
+                    if e.kind == kind:
+                        raise
+                    self._corrupt[e.kind] = e    # another kind's problem
+                    continue
                 if msg is not None:
                     if msg.kind == kind:
                         return msg
@@ -361,6 +415,15 @@ class Endpoint:
                     continue
             if deadline is not None and time.monotonic() >= deadline:
                 raise queue.Empty
+
+    def flush_pending(self) -> None:
+        """Discard every stashed out-of-kind message and routed corrupt
+        marker.  The supervised fit's post-rollback drain uses this:
+        FIFO order means everything a party sent *before* its
+        ``rollback_ack`` is stale, and the ack was just consumed."""
+        with self._rlock:
+            self._stash.clear()
+            self._corrupt.clear()
 
     @property
     def sent_stats(self) -> Dict[str, object]:

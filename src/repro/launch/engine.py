@@ -66,7 +66,18 @@ _CUT_KINDS = (CUT_DECODE_KIND, CUT_PREFILL_KIND)
 
 
 class QueueFull(RuntimeError):
-    """Admission rejected: the bounded request queue is at capacity."""
+    """Admission rejected: the bounded request queue is at capacity.
+
+    Carries the backpressure signal the caller needs to do something
+    smarter than blind retry: ``queue_depth`` (how deep the queue was at
+    rejection) and ``retry_after_s`` (the engine's mean per-request
+    service time — a principled retry interval)."""
+
+    def __init__(self, message: str, *, queue_depth: int = 0,
+                 retry_after_s: float = 0.0):
+        super().__init__(message)
+        self.queue_depth = queue_depth
+        self.retry_after_s = retry_after_s
 
 
 @dataclass
@@ -83,6 +94,9 @@ class Result:
     rid: int
     generated: List[int] = field(default_factory=list)
     latency_s: float = 0.0        # submit -> finish (queueing + compute)
+    error: Optional[str] = None   # set when the request failed (degraded
+    #                               service: the engine survives, the
+    #                               caller sees a per-request error)
 
 
 class CutCache:
@@ -237,7 +251,7 @@ class ServingEngine:
                       "ticks": 0, "slot_refills": 0, "prefill_calls": 0,
                       "cut_cache_hits": 0,
                       "submitted": 0, "rejected": 0,
-                      "peak_queue_depth": 0}
+                      "peak_queue_depth": 0, "failed_requests": 0}
         self._cut_seen = (0, 0, 0)    # consumed (payload, wire, count)
 
     # --------------------------------------------------- vmapped programs
@@ -278,18 +292,42 @@ class ServingEngine:
 
     # ------------------------------------------------------------ admission
 
-    def submit(self, tokens, max_new: Optional[int] = None) -> int:
-        """Queue one request.  Raises :class:`QueueFull` when a bounded
-        queue is at capacity (the rejection is counted in
-        ``stats["rejected"]`` — backpressure is the caller's signal to
-        retry later or spill to another session)."""
+    def _retry_after(self) -> float:
+        """Mean per-request service time — the backpressure hint shipped
+        inside :class:`QueueFull` (0.05 s floor before any request has
+        completed)."""
+        done = self.stats["requests"]
+        return (self.stats["wall_s"] / done) if done else 0.05
+
+    def submit(self, tokens, max_new: Optional[int] = None, *,
+               block: bool = False, timeout: Optional[float] = None) -> int:
+        """Queue one request.  When a bounded queue is at capacity:
+        ``block=False`` (default) raises :class:`QueueFull` carrying
+        ``queue_depth``/``retry_after_s`` and counts the rejection in
+        ``stats["rejected"]``; ``block=True`` waits (capped-backoff
+        polling, at most ``timeout`` seconds, forever when ``None``) for
+        another thread to drain the queue before giving up the same
+        way."""
         tokens = np.asarray(tokens, np.int32)
         if len(tokens) > self.S:
             raise ValueError(f"context {len(tokens)} > engine ctx {self.S}")
         if self.max_queue is not None and len(self._queue) >= self.max_queue:
-            self.stats["rejected"] += 1
-            raise QueueFull(
-                f"admission queue at capacity ({self.max_queue})")
+            deadline = (None if timeout is None
+                        else time.monotonic() + timeout)
+            pause = 0.005
+            while block and len(self._queue) >= self.max_queue:
+                if deadline is not None and time.monotonic() >= deadline:
+                    break
+                time.sleep(pause if deadline is None else
+                           min(pause, max(0.0,
+                                          deadline - time.monotonic())))
+                pause = min(pause * 2, 0.25)
+            if len(self._queue) >= self.max_queue:
+                self.stats["rejected"] += 1
+                raise QueueFull(
+                    f"admission queue at capacity ({self.max_queue})",
+                    queue_depth=len(self._queue),
+                    retry_after_s=self._retry_after())
         rid = self._next_rid
         self._next_rid += 1
         self._queue.append(Request(rid, tokens,
@@ -569,6 +607,28 @@ class ServingEngine:
                 logits_rows[slot] = entry["logits"]
         return logits_rows
 
+    def _fail_pending(self, exc: BaseException, out: Dict[int, "Result"],
+                      slots: Optional[List[Optional[Request]]] = None,
+                      results: Optional[Dict[int, "Result"]] = None
+                      ) -> None:
+        """Degraded service: the scheduler hit a transport/runtime fault.
+        Every in-flight and queued request gets a per-request ``error``
+        Result instead of the whole engine call blowing up — a serving
+        deployment keeps answering its other sessions."""
+        err = f"{type(exc).__name__}: {exc}"
+        now = time.time()
+        for req in ([r for r in (slots or []) if r is not None]
+                    + self._queue):
+            res = (results or {}).get(req.rid) or Result(req.rid)
+            res.error = err
+            res.latency_s = now - req.submit_t
+            out[req.rid] = res
+            self.stats["failed_requests"] += 1
+        if slots is not None:
+            slots[:] = [None] * len(slots)
+        self._queue.clear()
+        self.transcript.append(("degraded", -1, err[:120]))
+
     def _run_continuous(self) -> Dict[int, Result]:
         out: Dict[int, Result] = {}
         if not self._queue:
@@ -583,6 +643,20 @@ class ServingEngine:
         tok_np = np.zeros(B, np.int32)     # next token to append per slot
         self._tick = 0
 
+        try:
+            self._continuous_loop(out, caches, slots, results, gen, tok_np)
+        except (RuntimeError, OSError) as e:
+            if isinstance(e, QueueFull):
+                raise
+            self._fail_pending(e, out, slots, results)
+
+        self.stats["wall_s"] += time.time() - t0
+        self._drain_cut_stats()
+        return out
+
+    def _continuous_loop(self, out, caches, slots, results, gen, tok_np
+                         ) -> None:
+        B, S, P = self.B, self.S, self.P
         while self._queue or any(s is not None for s in slots):
             continuing = [i for i in range(B) if slots[i] is not None]
             free = [i for i in range(B) if slots[i] is None]
@@ -660,21 +734,23 @@ class ServingEngine:
             self._tick += 1
             self.stats["ticks"] += 1
 
-        self.stats["wall_s"] += time.time() - t0
-        self._drain_cut_stats()
-        return out
-
     # --------------------------------------------------------------- run
 
     def run(self) -> Dict[int, Result]:
-        """Drain the queue; returns {request_id: Result}."""
+        """Drain the queue; returns {request_id: Result}.  Requests that
+        hit a transport/runtime fault mid-flight come back with
+        ``Result.error`` set instead of raising (degraded service)."""
         if self.scheduler == "continuous":
             return self._run_continuous()
         out: Dict[int, Result] = {}
         while self._queue:
             wave, self._queue = (self._queue[:self.B], self._queue[self.B:])
-            for res in self._run_wave(wave):
-                out[res.rid] = res
+            try:
+                for res in self._run_wave(wave):
+                    out[res.rid] = res
+            except (RuntimeError, OSError) as e:
+                self._queue = wave + self._queue   # wave died unserved
+                self._fail_pending(e, out)
         return out
 
     def close(self) -> None:

@@ -11,6 +11,7 @@ import queue as _queue
 import struct
 import threading
 import time
+import zlib
 from importlib.util import find_spec
 
 import numpy as np
@@ -102,7 +103,7 @@ def test_wire_bytes_bit_identical_to_queue_backend():
 def test_frame_layout_golden():
     """The transport header is frozen:
     [u16 kind_len][kind][i64 seq][f64 not_before][i64 payload_bytes]
-    followed by the exact ``transport._pack`` blob."""
+    [u32 crc32(blob)] followed by the exact ``transport._pack`` blob."""
     c1, c2 = mp.Pipe(duplex=True)
     ep = ProcessEndpoint("a", "b", c1)
     try:
@@ -113,7 +114,9 @@ def test_frame_layout_golden():
         blob = _pack(payload)
         assert frame == (struct.pack("<H", 4) + b"ping"
                          + struct.pack(HEADER_FMT, 5, 0.0,
-                                       _payload_nbytes(payload)) + blob)
+                                       _payload_nbytes(payload),
+                                       zlib.crc32(blob) & 0xFFFFFFFF)
+                         + blob)
     finally:
         ep.close()
         c2.close()

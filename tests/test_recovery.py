@@ -1,0 +1,362 @@
+"""The supervised federation runtime: programmable fault injection
+(``federation.faults``), heartbeat liveness + restart budgeting
+(``federation.supervisor``), CRC frame integrity, and crash recovery
+with bit-identical resume (``fit(supervise=True)``).
+
+The chaos matrix at the bottom is the tentpole's acceptance gate: for
+every wire backend x fault kind, a mid-run owner failure must recover
+to the *bitwise* fault-free final params.
+"""
+import json
+import threading
+import time
+import warnings
+
+import numpy as np
+import pytest
+
+from repro.configs.pyvertical_mnist import CONFIG as MNIST_CFG
+from repro.data import make_vertical_mnist_parties
+from repro.federation import (VerticalSession, faults, feature_parties,
+                              transport)
+from repro.federation.session import _join_or_warn, leak_stats
+from repro.federation.supervisor import OwnerFailure, Supervisor
+from repro.federation.transport import FrameCorrupt
+
+# ---------------------------------------------------------------------------
+# fault plans: the env grammar and the injector semantics
+# ---------------------------------------------------------------------------
+
+
+def test_fault_plan_legacy_round_trip():
+    """A one-fault legacy plan serializes byte-identically to the PR 6
+    single-shot hook string, and multi-party comma specs round-trip."""
+    plan = faults.FaultPlan([faults.Fault("owner0", "crash", "head_fwd")])
+    assert plan.to_env() == "owner0:crash_fwd"
+    assert faults.FaultPlan.from_env("owner0:crash_fwd") == plan
+
+    multi = faults.FaultPlan([
+        faults.Fault("owner0", "crash", "head_fwd"),
+        faults.Fault("owner1", "wedge", "psi_blind_chunk"),
+    ])
+    env = multi.to_env()
+    assert env == "owner0:crash_fwd,owner1:wedge_psi"
+    assert faults.FaultPlan.from_env(env) == multi
+
+
+def test_fault_plan_json_round_trip():
+    """Plans outside the legacy grammar ride the same env var as json."""
+    plan = faults.FaultPlan([
+        faults.Fault("owner0", "corrupt_frame", "cut_activations",
+                     occurrence=3, gen=0),
+        faults.Fault("owner1", "delay", "head_fwd", step=2, delay_s=0.1),
+    ])
+    env = plan.to_env()
+    assert env.startswith("json:")
+    json.loads(env[5:])                       # well-formed
+    assert faults.FaultPlan.from_env(env) == plan
+
+
+def test_fault_plan_unknown_legacy_tokens_are_inert():
+    plan = faults.FaultPlan.from_env("owner0:nonsense, ,owner1:crash_fwd")
+    assert [f.party for f in plan] == ["owner1"]
+
+
+def test_injector_occurrence_step_and_generation():
+    plan = faults.FaultPlan([
+        faults.Fault("o", "crash", "k", occurrence=1),        # 2nd match
+        faults.Fault("o", "crash", "k2", occurrence=None, step=7),
+        faults.Fault("o", "wedge", "k3", gen=1),
+    ])
+    inj = faults.FaultInjector(plan, "o", generation=0)
+    assert inj.actor_fault("k", 0) is None        # occurrence 0: no fire
+    assert inj.actor_fault("k", 5) == "crash"     # occurrence 1: fires
+    assert inj.actor_fault("k2", 3) is None       # wrong step
+    assert inj.actor_fault("k2", 7) == "crash"    # pinned step
+    assert inj.actor_fault("k2", 7) == "crash"    # occurrence=None: every
+    assert inj.actor_fault("k3", 0) is None       # gen-1 fault, gen-0 view
+    inj1 = faults.FaultInjector(plan, "o", generation=1)
+    assert inj1.actor_fault("k3", 0) == "wedge"
+    assert inj1.actor_fault("k", 5) is None       # gen-0 faults filtered
+    other = faults.FaultInjector(plan, "someone-else")
+    assert other.actor_fault("k", 5) is None      # party-scoped
+
+
+def test_corrupt_frame_fault_surfaces_as_crc_failure():
+    """An armed corrupt_frame fault flips payload bytes *after* the CRC
+    is stamped, so the receiver's integrity check attributes it."""
+    plan = faults.FaultPlan([faults.Fault(
+        "owner0", "corrupt_frame", "cut_activations", occurrence=0)])
+    sci, own = transport.channel_pair("scientist", "owner0",
+                                      backend="queue")
+    faults.arm_endpoint(own, "owner0", plan=plan)
+    own.send("cut_activations", {"x": np.arange(4, dtype=np.float32)},
+             seq=0)
+    with pytest.raises(FrameCorrupt) as ei:
+        sci.recv_kind("cut_activations", timeout=5.0)
+    assert ei.value.kind == "cut_activations"
+    assert ei.value.sender == "owner0"
+    # clean traffic still flows afterwards
+    own.send("cut_activations", {"x": np.arange(4, dtype=np.float32)},
+             seq=1)
+    assert sci.recv_kind("cut_activations", timeout=5.0).seq == 1
+
+
+def test_corrupt_marker_routed_to_consumer_kind():
+    """A corrupt frame of kind A must not blow up a concurrent
+    ``recv_kind(B)`` consumer — it is stashed and re-raised for A's
+    consumer (then cleared by ``flush_pending``)."""
+    plan = faults.FaultPlan([faults.Fault(
+        "owner0", "corrupt_frame", "cut_activations", occurrence=0)])
+    sci, own = transport.channel_pair("scientist", "owner0",
+                                      backend="queue")
+    faults.arm_endpoint(own, "owner0", plan=plan)
+    own.send("cut_activations", {"x": np.zeros(2, np.float32)}, seq=0)
+    own.send("step_done", {}, seq=0)
+    assert sci.recv_kind("step_done", timeout=5.0).seq == 0
+    with pytest.raises(FrameCorrupt):
+        sci.recv_kind("cut_activations", timeout=5.0)
+    sci.flush_pending()
+
+
+# ---------------------------------------------------------------------------
+# supervisor: heartbeats, suspicion, restart budget
+# ---------------------------------------------------------------------------
+
+
+def _echo_actor(ep, stop):
+    while not stop.is_set():
+        try:
+            m = ep.recv_kind("heartbeat", timeout=0.05)
+        except Exception:
+            continue
+        ep.send("heartbeat_ack", {}, seq=m.seq)
+
+
+def test_supervisor_heartbeats_and_wedge_suspicion():
+    sci, own = transport.channel_pair("scientist", "owner0",
+                                      backend="queue")
+    stop = threading.Event()
+    th = threading.Thread(target=_echo_actor, args=(own, stop),
+                          daemon=True)
+    th.start()
+    sup = Supervisor(heartbeat_s=0.02, miss_limit=3)
+    sup.attach("owner0", sci, None)
+    sup.start()
+    try:
+        time.sleep(0.3)
+        assert sup.stats["heartbeats_sent"] >= 3
+        assert sup.stats["heartbeat_acks"] >= 1
+        assert "owner0" not in sup.failed
+        stop.set()                       # wedge: actor stops answering
+        deadline = time.monotonic() + 5.0
+        while "owner0" not in sup.failed and time.monotonic() < deadline:
+            time.sleep(0.02)
+        assert "owner0" in sup.failed
+        assert "unresponsive" in str(sup.failed["owner0"])
+    finally:
+        sup.stop()
+        stop.set()
+        th.join(timeout=5.0)
+
+
+def test_supervisor_restart_budget_and_backoff():
+    sup = Supervisor(max_restarts=2, backoff_base_s=0.01,
+                     backoff_cap_s=0.02)
+    sup.failed["o"] = RuntimeError("boom")
+    d0 = sup.plan_restart("o")
+    assert "o" not in sup.failed         # re-adopted
+    assert sup.restarts("o") == 1
+    d1 = sup.plan_restart("o")
+    assert d0 == pytest.approx(0.01) and d1 == pytest.approx(0.02)
+    with pytest.raises(RuntimeError, match="restart budget exhausted"):
+        sup.plan_restart("o")
+
+
+def test_join_or_warn_flags_leaked_thread():
+    """A thread that outlives its join window is a *loud* leak: a
+    RuntimeWarning plus a ``leak_stats`` bump, never a silent hang."""
+    ev = threading.Event()
+    th = threading.Thread(target=ev.wait, daemon=True, name="wedged")
+    th.start()
+    before = leak_stats["leaked_threads"]
+    with warnings.catch_warnings(record=True) as w:
+        warnings.simplefilter("always")
+        assert _join_or_warn(th, 0.05, "test") is False
+    assert leak_stats["leaked_threads"] == before + 1
+    assert any("leaked" in str(x.message) for x in w)
+    ev.set()
+    th.join(timeout=5.0)
+    ok = threading.Thread(target=lambda: None)
+    ok.start()
+    assert _join_or_warn(ok, 5.0, "test") is True
+
+
+# ---------------------------------------------------------------------------
+# the chaos matrix: supervised fit recovers bit-identically
+# ---------------------------------------------------------------------------
+
+_STEPS = 6
+_REF: dict = {}       # backend -> (param leaves, losses) fault-free
+
+
+def _split_fit(backend, env=None, *, timeout=15.0, retries=0,
+               supervise=True):
+    if env:
+        with pytest.MonkeyPatch.context() as mp_:
+            mp_.setenv(faults.CHAOS_ENV, env)
+            return _split_fit_inner(backend, timeout, retries, supervise)
+    return _split_fit_inner(backend, timeout, retries, supervise)
+
+
+def _split_fit_inner(backend, timeout, retries, supervise):
+    sci, owners = make_vertical_mnist_parties(300, seed=0, keep_frac=0.9)
+    s = VerticalSession(*feature_parties(sci, owners))
+    s.resolve(group="modp512", retries=retries)
+    s.build(MNIST_CFG)
+    h = s.fit(steps=_STEPS, batch_size=64, verbose=False, mode="split",
+              backend=backend, supervise=supervise, timeout=timeout)
+    import jax
+    leaves = [np.asarray(x) for x in jax.tree_util.tree_leaves(s.params)]
+    losses = [r["loss"] for r in h["train"]]
+    return s, leaves, losses
+
+
+def _reference(backend):
+    if backend not in _REF:
+        _, leaves, losses = _split_fit(backend)
+        _REF[backend] = (leaves, losses)
+    return _REF[backend]
+
+
+_FIT_FAULTS = {
+    "crash_fwd": faults.Fault("owner0", "crash", "head_fwd",
+                              occurrence=None, step=3),
+    "wedge_fwd": faults.Fault("owner0", "wedge", "head_fwd",
+                              occurrence=None, step=3),
+    "corrupt_frame": faults.Fault("owner0", "corrupt_frame",
+                                  "cut_activations", occurrence=4),
+}
+
+
+@pytest.mark.parametrize("backend", ["queue", "process"])
+@pytest.mark.parametrize("fault", sorted(_FIT_FAULTS))
+def test_chaos_matrix_fit_recovers_bit_identically(backend, fault):
+    ref_leaves, ref_losses = _reference(backend)
+    env = faults.FaultPlan([_FIT_FAULTS[fault]]).to_env()
+    timeout = 3.0 if fault == "wedge_fwd" else 15.0
+    s, leaves, losses = _split_fit(backend, env, timeout=timeout)
+    assert s.recovery_events, "fault never fired / never recovered"
+    ev = s.recovery_events[-1]
+    assert ev["party"] == "owner0"
+    assert ev["action"] == ("rollback" if fault == "corrupt_frame"
+                            else "respawn")
+    assert losses == ref_losses
+    assert len(leaves) == len(ref_leaves)
+    for a, b in zip(leaves, ref_leaves):
+        np.testing.assert_array_equal(a, b)
+    assert s.transport_stats["recoveries"] == len(s.recovery_events)
+    sup_stats = s.transport_stats["supervisor"]
+    assert sup_stats is not None and sup_stats["heartbeats_sent"] >= 0
+
+
+@pytest.mark.parametrize("backend", ["queue", "process"])
+def test_chaos_matrix_psi_crash_retries(backend):
+    """crash_psi: the owner's PSI worker dies on the first blind chunk;
+    ``resolve(retries=1)`` respawns it at generation 1 (where the gen-0
+    fault is inert) and the intersection matches the fault-free run."""
+    clean = VerticalSession(*feature_parties(
+        *make_vertical_mnist_parties(200, seed=0, keep_frac=0.8)))
+    clean.resolve(group="modp512")
+
+    env = "owner0:crash_psi"            # legacy single-shot grammar
+    with pytest.MonkeyPatch.context() as mp_:
+        mp_.setenv(faults.CHAOS_ENV, env)
+        s = VerticalSession(*feature_parties(
+            *make_vertical_mnist_parties(200, seed=0, keep_frac=0.8)))
+        with pytest.raises(RuntimeError):
+            s.resolve(group="modp512", backend=backend,
+                      timeout=60.0)              # no retries: surfaces
+        s2 = VerticalSession(*feature_parties(
+            *make_vertical_mnist_parties(200, seed=0, keep_frac=0.8)))
+        s2.resolve(group="modp512", backend=backend, retries=1,
+                   timeout=60.0)
+    assert any(e["action"] == "psi_retry" for e in s2.recovery_events)
+    assert s2.scientist.ids == clean.scientist.ids
+
+
+def test_supervise_requires_wire_backend():
+    sci, owners = make_vertical_mnist_parties(60, seed=0)
+    s = VerticalSession(*feature_parties(sci, owners))
+    s.resolve(group="modp512")
+    s.build(MNIST_CFG)
+    with pytest.raises(ValueError, match="supervise"):
+        s.fit(steps=1, batch_size=16, verbose=False, mode="split",
+              backend="direct", supervise=True)
+    with pytest.raises(ValueError, match="supervise"):
+        s.fit(steps=1, batch_size=16, verbose=False, supervise=True)
+
+
+def test_restart_budget_exhaustion_surfaces():
+    """A party that keeps crashing (occurrence=None, gen=None — every
+    generation) burns the restart budget and fails loudly."""
+    env = faults.FaultPlan([faults.Fault(
+        "owner0", "crash", "head_fwd", occurrence=None, step=3,
+        gen=None)]).to_env()
+    with pytest.MonkeyPatch.context() as mp_:
+        mp_.setenv(faults.CHAOS_ENV, env)
+        sci, owners = make_vertical_mnist_parties(300, seed=0,
+                                                  keep_frac=0.9)
+        s = VerticalSession(*feature_parties(sci, owners))
+        s.resolve(group="modp512")
+        s.build(MNIST_CFG)
+        with pytest.raises(RuntimeError,
+                           match="restart budget exhausted"):
+            s.fit(steps=_STEPS, batch_size=64, verbose=False,
+                  mode="split", backend="queue", supervise=True,
+                  timeout=15.0, max_restarts=1)
+
+
+# ---------------------------------------------------------------------------
+# checkpoint -> restore round-trip (recovery across process lifetimes)
+# ---------------------------------------------------------------------------
+
+
+def test_checkpoint_restore_resume_round_trip(tmp_path):
+    sci, owners = make_vertical_mnist_parties(300, seed=0, keep_frac=0.9)
+    donor = VerticalSession(*feature_parties(sci, owners))
+    donor.resolve(group="modp512")
+    donor.build(MNIST_CFG)
+    donor.fit(steps=6, batch_size=64, eval_frac=0.2, verbose=False,
+              mode="split", backend="queue")
+    step_dir = donor.checkpoint(str(tmp_path), step=6)
+    donor_eval = donor.evaluate()
+
+    sci2, owners2 = make_vertical_mnist_parties(300, seed=0,
+                                                keep_frac=0.9)
+    resumed = VerticalSession(*feature_parties(sci2, owners2))
+    resumed.resolve(group="modp512")
+    resumed.build(MNIST_CFG)
+    resumed.restore(step_dir)
+    import jax
+    for a, b in zip(jax.tree_util.tree_leaves(resumed.params),
+                    jax.tree_util.tree_leaves(donor.params)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+    h = resumed.fit(steps=2, batch_size=64, eval_frac=0.2, verbose=False,
+                    mode="split", backend="queue")
+    # loss continuity: training picks up from the restored point, not a
+    # re-init cliff — the first resumed step's loss sits near the
+    # donor's last, and the restored params evaluate like the donor's
+    first_resumed = h["train"][0]["loss"]
+    assert first_resumed == pytest.approx(
+        donor.history["train"][-1]["loss"], rel=0.35)
+    resumed_eval = resumed.evaluate()
+    assert set(resumed_eval) == set(donor_eval)
+
+
+def test_restore_requires_built():
+    sci, owners = make_vertical_mnist_parties(60, seed=0)
+    s = VerticalSession(*feature_parties(sci, owners))
+    with pytest.raises(RuntimeError):
+        s.restore("/nonexistent")

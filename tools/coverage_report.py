@@ -52,6 +52,7 @@ DEFAULT_TESTS = (
     "tests/test_federation.py",
     "tests/test_process_transport.py",
     "tests/test_serving.py",
+    "tests/test_recovery.py",
 )
 
 
