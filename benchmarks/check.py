@@ -34,6 +34,7 @@ TRACKED = {
     "BENCH_parties.json": "parties",
     "BENCH_serving.json": "serving",
     "BENCH_recovery.json": "recovery",
+    "BENCH_privacy.json": "privacy",
 }
 
 #: informational subtrees: committed by full-size runs, not re-measured
@@ -56,8 +57,16 @@ def _rule(key: str):
                "parallelism", "peak_inflight_elements",
                "bit_identical", "cut_cache_hits", "slot_refills",
                "repeat_head_prefills", "repeat_token_bitwise",
-               "meets_1p3_floor", "n_recoveries"):
+               "meets_1p3_floor", "n_recoveries",
+               "leakage_gap_positive"):
         return ("exact", None)      # deterministic protocol structure
+    # attacker leakage scores: deterministic runs, but float-op order
+    # may drift across platforms — absolute bands well inside the
+    # defended-vs-baseline gaps the gate exists to preserve
+    if key.endswith("_auc") or key.endswith("_dcor"):
+        return ("abs", 0.1)
+    if key.endswith("_r2"):
+        return ("abs", 0.3)
     if "bytes" in key:
         return ("exact", None)
     if "peak" in key and key.endswith("_mb"):

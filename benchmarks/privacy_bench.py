@@ -1,0 +1,167 @@
+"""Privacy trade-off benchmark (``BENCH_privacy.json``).
+
+Three questions about the cut-layer privacy hardening:
+
+  1. correctness — a masked-sum split fit must reproduce the masked
+     joint oracle *bitwise* (``bit_identical``, exact-gated), and the
+     ring-coded forward must cost exactly zero extra wire bytes over
+     the plain f32 cut (``extra_cut_bytes``, exact-gated at 0);
+  2. leakage — the transcript attacks (tests/attacks/harness.py) run
+     against real captured traffic with defenses off and on; the gate
+     pins the attacker's scores (abs-tolerance) and the boolean
+     ``leakage_gap_positive`` = every defense strictly reduced its
+     attacker's leakage (exact-gated at 1);
+  3. cost — what masking and the gradient defenses cost in step time
+     (ratio-gated) and final training accuracy (abs-gated).
+
+Writes ``BENCH_privacy.json`` and returns the usual CSV rows.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import sys
+
+import numpy as np
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+if os.path.join(ROOT, "tests") not in sys.path:
+    sys.path.insert(0, os.path.join(ROOT, "tests"))
+
+from repro.configs.pyvertical_mnist import CONFIG
+from repro.data import make_vertical_mnist_parties
+from repro.federation import VerticalSession, feature_parties
+
+#: committed-baseline gate geometry (matches the attack harness)
+GATE_N, GATE_BATCH, GATE_STEPS = 256, 64, 6
+
+
+def _fit(mode="split", aggregation=None, grad_norm_mode="none",
+         grad_noise_std=0.0, cut_noise_std=0.0):
+    import jax
+    sci, raw = make_vertical_mnist_parties(GATE_N, seed=0,
+                                           keep_frac=0.9)
+    s = VerticalSession(*feature_parties(sci, raw))
+    s.resolve(group="modp512")
+    s.build(dataclasses.replace(CONFIG, split=dataclasses.replace(
+        CONFIG.split, combine="sum", grad_norm_mode=grad_norm_mode,
+        grad_noise_std=grad_noise_std, cut_noise_std=cut_noise_std)))
+    kw = dict(steps=GATE_STEPS, batch_size=GATE_BATCH, verbose=False,
+              aggregation=aggregation, mode=mode)
+    if mode == "split":
+        kw["backend"] = "queue"
+    h = s.fit(**kw)
+    ts = s.transport_stats if mode == "split" else {}
+    return {
+        "leaves": [np.asarray(x)
+                   for x in jax.tree_util.tree_leaves(s.params)],
+        "accuracy": float(h["train"][-1]["accuracy"]),
+        "step_ms": ts.get("steady_step_ms", 0.0),
+        "cut_bytes": sum(
+            ts["per_owner"][o.name]["cut_payload_bytes"]
+            for o in s.owners) if ts else 0,
+    }
+
+
+def run(out: str = "BENCH_privacy.json"):
+    from attacks import harness as H
+
+    report: dict = {"config": {"n": GATE_N, "batch": GATE_BATCH,
+                               "steps": GATE_STEPS,
+                               "combine": "sum", "backend": "queue"}}
+    rows = []
+
+    # -- 1. masked-sum correctness + overhead ------------------------------
+    oracle = _fit(mode="joint", aggregation="masked_sum")
+    masked = _fit(aggregation="masked_sum")
+    plain = _fit()
+    bit_identical = int(
+        len(masked["leaves"]) == len(oracle["leaves"])
+        and all(np.array_equal(a, b) for a, b in
+                zip(masked["leaves"], oracle["leaves"])))
+    masked_cell = {
+        "bit_identical": bit_identical,
+        "extra_cut_bytes": masked["cut_bytes"] - plain["cut_bytes"],
+        "masking_step_overhead_ratio": (
+            masked["step_ms"] / max(plain["step_ms"], 1e-9)),
+        "masked_accuracy": masked["accuracy"],
+        "plain_accuracy": plain["accuracy"],
+    }
+    report["masked"] = masked_cell
+    rows.append(("privacy_masked_bit_identical", bit_identical,
+                 f"extra_cut_bytes={masked_cell['extra_cut_bytes']}"))
+    rows.append(("privacy_masking_overhead",
+                 round(masked_cell["masking_step_overhead_ratio"], 3),
+                 f"masked_step_ms={masked['step_ms']:.2f}"))
+
+    # -- 2. accuracy cost of the gradient defenses -------------------------
+    defended = _fit(grad_norm_mode="unit")
+    report["defense_cost"] = {
+        "grad_unit_accuracy": defended["accuracy"],
+        "grad_unit_step_overhead_ratio": (
+            defended["step_ms"] / max(plain["step_ms"], 1e-9)),
+    }
+    rows.append(("privacy_grad_unit_accuracy",
+                 round(defended["accuracy"], 4),
+                 f"plain={plain['accuracy']:.4f}"))
+
+    # -- 3. transcript attacks: leakage before/after each defense ----------
+    kw = dict(n=GATE_N, steps=GATE_STEPS, batch_size=GATE_BATCH)
+    base = H.capture_transcript(**kw)
+    t_noise = H.capture_transcript(cut_noise_std=2.0, **kw)
+    t_mask = H.capture_transcript(aggregation="masked_sum", **kw)
+    t_gnoise = H.capture_transcript(grad_noise_std=0.05, **kw)
+    t_unit = H.capture_transcript(grad_norm_mode="unit", **kw)
+    t_sign = H.capture_transcript(grad_norm_mode="sign", **kw)
+
+    def fwd(tr, metric):
+        return float(np.mean([metric(tr, o) for o in sorted(tr.cuts)]))
+
+    attacks = {
+        "baseline_inversion_r2": fwd(base, H.inversion_r2),
+        "cut_noise_inversion_r2": fwd(t_noise, H.inversion_r2),
+        "masked_inversion_r2": fwd(t_mask, H.inversion_r2),
+        "baseline_dcor": fwd(base, H.dcor_leakage),
+        "cut_noise_dcor": fwd(t_noise, H.dcor_leakage),
+        "masked_dcor": fwd(t_mask, H.dcor_leakage),
+        "baseline_norm_auc": H.norm_attack_auc(base),
+        "grad_noise_norm_auc": H.norm_attack_auc(t_gnoise),
+        "grad_unit_norm_auc": H.norm_attack_auc(t_unit),
+        "grad_sign_norm_auc": H.norm_attack_auc(t_sign),
+    }
+    gaps = [
+        attacks["baseline_inversion_r2"]
+        - attacks["cut_noise_inversion_r2"],
+        attacks["baseline_inversion_r2"]
+        - attacks["masked_inversion_r2"],
+        attacks["baseline_dcor"] - attacks["cut_noise_dcor"],
+        attacks["baseline_dcor"] - attacks["masked_dcor"],
+        attacks["baseline_norm_auc"] - attacks["grad_noise_norm_auc"],
+        attacks["baseline_norm_auc"] - attacks["grad_unit_norm_auc"],
+        attacks["baseline_norm_auc"] - attacks["grad_sign_norm_auc"],
+    ]
+    attacks["leakage_gap_positive"] = int(all(g > 0 for g in gaps))
+    report["attacks"] = attacks
+    rows.append(("privacy_leakage_gap_positive",
+                 attacks["leakage_gap_positive"],
+                 f"min_gap={min(gaps):+.4f}"))
+    rows.append(("privacy_baseline_norm_auc",
+                 round(attacks["baseline_norm_auc"], 4),
+                 f"unit={attacks['grad_unit_norm_auc']:.4f}"))
+    rows.append(("privacy_baseline_inversion_r2",
+                 round(attacks["baseline_inversion_r2"], 4),
+                 f"masked={attacks['masked_inversion_r2']:.4f}"))
+
+    with open(out, "w") as f:
+        json.dump(report, f, indent=2)
+    return rows
+
+
+def run_check(out: str = "BENCH_privacy.json"):
+    return run(out)
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(",".join(str(x) for x in r))

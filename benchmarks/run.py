@@ -30,8 +30,9 @@ def main() -> None:
 
     from benchmarks import (check, combine_ablation, cut_comm,
                             fig4_accuracy, kernels_bench, parties_bench,
-                            psi_scaling, recovery_bench, serving_bench,
-                            split_overhead, transport_bench)
+                            privacy_bench, psi_scaling, recovery_bench,
+                            serving_bench, split_overhead,
+                            transport_bench)
 
     if args.check:
         # gated sections re-measured at the size the committed baseline
@@ -55,6 +56,9 @@ def main() -> None:
             for row in recovery_bench.run_check(
                     out=os.path.join(tmp, "BENCH_recovery.json")):
                 print(",".join(str(x) for x in row))
+            for row in privacy_bench.run_check(
+                    out=os.path.join(tmp, "BENCH_privacy.json")):
+                print(",".join(str(x) for x in row))
             if check.check(repo_root=".", fresh_dir=tmp):
                 raise SystemExit(1)
         return
@@ -73,6 +77,7 @@ def main() -> None:
         "serving": (serving_bench.run_fast if args.fast
                     else serving_bench.run),
         "recovery": recovery_bench.run,
+        "privacy": privacy_bench.run,
         "combine_ablation": (lambda: combine_ablation.run(n=1500, epochs=4)
                              ) if args.fast else combine_ablation.run,
         "fig4_accuracy": (lambda: fig4_accuracy.run(n=2000, epochs=4))

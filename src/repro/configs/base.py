@@ -76,6 +76,14 @@ class SplitConfig:
     # beyond-paper privacy options (Titcombe et al. 2021 future-work item)
     cut_noise_std: float = 0.0     # Gaussian noise added to cut activations
     nopeek_weight: float = 0.0     # distance-correlation regularizer weight
+    # gradient-side label-leakage defenses (Li et al. 2021): applied to
+    # the cut gradients the scientist ships back in split mode —
+    # deterministic per (seed, seq, owner), so supervised replay stays
+    # bit-identical with defenses on (see core/privacy.py)
+    grad_noise_std: float = 0.0    # Gaussian noise on shipped cut grads
+    grad_norm_mode: str = "none"   # none | unit (equalize per-example
+    #                                norms) | sign (signs at one common
+    #                                magnitude)
 
 
 # ---------------------------------------------------------------------------

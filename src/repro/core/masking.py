@@ -1,0 +1,186 @@
+"""Secure forward aggregation — pairwise-cancelling cut-layer masks.
+
+Cai et al. (PAPERS.md, "Secure Forward Aggregation", 2207.00165) observe
+that a sum-combine scientist never needs per-owner head outputs: each
+owner can ship ``head_out + mask`` where the masks cancel across the
+owner set, so the scientist reconstructs exactly ``sum_p head_out_p``
+and nothing else.  Floating-point addition is not exact, so cancellation
+happens in an integer ring instead:
+
+1. **Fixed-point lift.**  Each owner quantizes its cut activation to
+   ``q = clip(round(x * 2^SCALE_BITS))`` as int32 (``quantize()``, a
+   jitted program shared with the joint oracle).  Every |q| stays below
+   2^24, so the float round is exact and P-owner sums fit int32 with
+   headroom.
+2. **Ring masking.**  For every owner pair (p, q), p < q, a shared seed
+   derives a uniform uint32 stream; p adds it and q subtracts it mod
+   2^32 (``pairwise_mask``).  Summed over ALL owners the masks are
+   exactly zero in the ring, so the scientist's fold
+   (``reconstruct()``) recovers the true integer sum **bitwise** —
+   masked split execution is bit-identical to the unmasked joint
+   oracle running the same quantize→sum→dequantize combine.
+3. **Dequantize + straight-through backward.**  The trunk consumes
+   ``z = sum_q.astype(f32) * 2^-SCALE_BITS``; the cut gradient is
+   ``dL/dz`` for every owner (the sum-combine broadcast), so the
+   backward is the plain sum combine's backward and masks never touch
+   gradients.
+
+Per-message masks are a pure function of ``(root seed, pair, tag)`` —
+no stream state — so a respawned owner (PR 8 supervised recovery) at
+any generation re-derives the masks of the steps it replays, and all
+owners agree without coordination.  The root seed travels over the
+**env channel** (``REPRO_MASK_SEED``, inherited by spawned workers the
+same way the chaos plan rides ``REPRO_CHAOS_PARTY``) — the simulation
+stand-in for the out-of-band owner-to-owner key agreement of Cai et
+al.; the scientist's code path never derives a mask.
+
+Threat model: an eavesdropper (or honest-but-curious scientist) who
+records the wire sees, per owner, uniformly-random ring elements —
+``tests/attacks`` demonstrates that inversion and distance-correlation
+attacks collapse to chance on masked transcripts.
+"""
+from __future__ import annotations
+
+import hashlib
+import os
+from typing import Dict, List, Optional, Sequence
+
+import numpy as np
+
+#: env channel for the shared mask root seed (spawned owner workers
+#: inherit the parent's environment, like the chaos plan)
+MASK_ENV = "REPRO_MASK_SEED"
+
+#: fixed-point scale: 2^-16 resolution, values clipped to +-256 — the
+#: f32-exact integer range (|q| <= 2^24), with int32 headroom for sums
+#: across up to ~2^7 owners
+SCALE_BITS = 16
+SCALE = float(2 ** SCALE_BITS)
+QCLIP = float(2 ** 24)
+
+#: ring element width on the wire (uint32) — same 4 bytes/element as
+#: the f32 activations it replaces: masking costs zero forward bytes
+RING_BYTES = 4
+
+
+def mask_root_from_env(default: int) -> int:
+    """The session-wide mask root: the env channel's value when set
+    (a deployment would put the pairwise-agreed secret here), else
+    ``default`` (the session derives it from its init seed)."""
+    v = os.environ.get(MASK_ENV, "")
+    return int(v) if v else int(default)
+
+
+def make_quant_program():
+    """The jitted fixed-point lift ``f32 (B, k) -> int32``: round to
+    2^-16 resolution, clipped to the f32-exact band.  One compiled
+    program serves the owners AND the joint oracle — bit-identity of
+    masked split execution starts here."""
+    import jax
+    import jax.numpy as jnp
+
+    def quant(x):
+        q = jnp.round(x.astype(jnp.float32) * SCALE)
+        return jnp.clip(q, -QCLIP, QCLIP).astype(jnp.int32)
+
+    return jax.jit(quant)
+
+
+def dequantize(zsum):
+    """In-program inverse lift: int32 ring sum -> f32 trunk input.
+    ``2^-SCALE_BITS`` is a power of two, so the scaling is exact
+    wherever the int fits f32."""
+    import jax.numpy as jnp
+    return zsum.astype(jnp.float32) * (1.0 / SCALE)
+
+
+def _pair_key(root: int, lo: int, hi: int, tag: str) -> int:
+    h = hashlib.sha256(f"{root}|{lo}|{hi}|{tag}".encode()).digest()
+    return int.from_bytes(h[:16], "little")
+
+
+def pairwise_mask(root: int, owner: int, n_owners: int, tag: str,
+                  shape) -> np.ndarray:
+    """Owner ``owner``'s uint32 mask for message ``tag``: the sum over
+    the pairwise streams it shares with every peer, + for the lower
+    index and - for the higher, so ``sum_p pairwise_mask(p) == 0`` mod
+    2^32 element-wise.  Pure function of ``(root, pair, tag)`` —
+    deterministic across processes and replay."""
+    m = np.zeros(shape, np.uint32)
+    for q in range(n_owners):
+        if q == owner:
+            continue
+        lo, hi = (owner, q) if owner < q else (q, owner)
+        rng = np.random.Generator(
+            np.random.Philox(key=_pair_key(root, lo, hi, tag)))
+        r = rng.integers(0, 2 ** 32, size=shape,
+                         dtype=np.uint64).astype(np.uint32)
+        m = m + r if owner == lo else m - r
+    return m
+
+
+class MaskedAggregator:
+    """Owner-side secure-aggregation encoder: quantize the cut chunk,
+    add this owner's pairwise-cancelling ring mask, ship uint32.
+
+    ``generation`` scopes the *warmup* tags: a respawned worker
+    (generation n+1) re-warms solo against the scientist — its masked
+    warmup cuts are never unmasked, but the tag keeps the stream
+    distinct from the generation it replaced.  Steady-state tags are
+    the global chunk seq, generation-agnostic, so survivors (still
+    generation 0) and the respawn derive identical masks for replayed
+    steps and cancellation always holds."""
+
+    def __init__(self, root: int, owner_index: int, n_owners: int,
+                 quant_program, *, generation: int = 0):
+        if n_owners < 2:
+            raise ValueError(
+                "masked_sum needs >= 2 owners: a single owner's masked "
+                "payload would be its bare quantized activation")
+        self.root = int(root)
+        self.owner_index = int(owner_index)
+        self.n_owners = int(n_owners)
+        self.generation = int(generation)
+        self._quant = quant_program
+
+    def warmup_tag(self, m: int) -> str:
+        return f"w{m}g{self.generation}"
+
+    @staticmethod
+    def step_tag(seq: int) -> str:
+        return f"s{seq}"
+
+    def encode(self, cut, tag: str) -> Dict[str, np.ndarray]:
+        q = np.asarray(self._quant(cut))
+        mask = pairwise_mask(self.root, self.owner_index, self.n_owners,
+                             tag, q.shape)
+        # uint32 arithmetic wraps mod 2^32 — the ring addition
+        return {"mq": q.view(np.uint32) + mask}
+
+
+def fold_quantized(qs: Sequence[np.ndarray]) -> np.ndarray:
+    """Ring-sum UNMASKED int32 quantized cuts (the joint oracle's
+    combine): mod-2^32 addition in owner order, viewed back as int32.
+    Integer addition is associative, so this equals the masked wire
+    fold bitwise once the masks cancel."""
+    acc: Optional[np.ndarray] = None
+    for q in qs:
+        u = np.asarray(q).view(np.uint32)
+        acc = u.astype(np.uint32, copy=True) if acc is None else acc + u
+    assert acc is not None, "fold_quantized needs >= 1 owner"
+    return acc.view(np.int32)
+
+
+def reconstruct(payloads: List[Dict[str, np.ndarray]]) -> np.ndarray:
+    """Scientist-side combine: fold every owner's masked uint32 payload
+    mod 2^32.  The pairwise masks sum to zero in the ring, so the
+    result IS the unmasked integer sum — without any per-owner
+    activation ever being recoverable from the frames."""
+    acc: Optional[np.ndarray] = None
+    for pl in payloads:
+        mq = np.asarray(pl["mq"])
+        if mq.dtype != np.uint32:
+            mq = mq.view(np.uint32)
+        acc = mq.astype(np.uint32, copy=True) if acc is None else acc + mq
+    assert acc is not None, "reconstruct needs >= 1 owner payload"
+    return acc.view(np.int32)

@@ -2,14 +2,29 @@
 
 * Gaussian noise on cut-layer activations (Titcombe et al. 2021 — basic
   defence against model-inversion on the intermediate representation).
-  Wired into ``SplitConfig.cut_noise_std``.
+  Wired into ``SplitConfig.cut_noise_std``; split mode applies it
+  OWNER-side before the cut ships, so the defence is on the wire.
 * NoPeek-style distance-correlation regularizer: penalize statistical
   dependence between an owner's raw inputs and its cut activations.
+* Gradient-side label-leakage defences (Li et al. 2021, "Label Leakage
+  and Protection"): per-example cut-gradient *norms* leak labels under
+  class imbalance, and signs/directions leak more.  ``SplitConfig.
+  grad_norm_mode`` ("unit" equalizes per-example norms, "sign" ships
+  only signs at a common magnitude) and ``SplitConfig.grad_noise_std``
+  obfuscate the cut gradients the scientist ships back.  Both are
+  deterministic in ``(seed, seq, owner)`` so PR 8 supervised replay
+  stays bit-identical with defences enabled.
+
+``tests/attacks`` runs real attacks against captured transcripts and
+asserts each defence strictly reduces the attacker's leakage.
 """
 from __future__ import annotations
 
+import hashlib
+
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 
 def _pairwise_dist(x):
@@ -53,3 +68,78 @@ def gaussian_cut_noise(rng, cut, std: float):
     if std <= 0.0:
         return cut
     return cut + std * jax.random.normal(rng, cut.shape, cut.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Wire defenses (deterministic host-side transforms on shipped tensors)
+# ---------------------------------------------------------------------------
+
+
+def _wire_rng(seed: int, tag: str) -> np.random.Generator:
+    """Philox stream keyed on sha256(seed|tag): deterministic across
+    processes and replay — the same chunk re-shipped after a PR 8
+    rollback gets bitwise the same noise."""
+    h = hashlib.sha256(f"{seed}|{tag}".encode()).digest()
+    return np.random.Generator(
+        np.random.Philox(key=int.from_bytes(h[:16], "little")))
+
+
+def deterministic_cut_noise(cut, std: float, seed: int,
+                            tag: str) -> np.ndarray:
+    """Owner-side Titcombe noise on a cut chunk about to ship (host
+    numpy: the owner's wire path already has the array on host)."""
+    cut = np.asarray(cut, np.float32)
+    if std <= 0.0:
+        return cut
+    noise = _wire_rng(seed, tag).standard_normal(
+        cut.shape).astype(np.float32)
+    return cut + np.float32(std) * noise
+
+
+def obfuscate_cut_gradient(g, *, noise_std: float = 0.0,
+                           norm_mode: str = "none", seed: int = 0,
+                           tag: str = "") -> np.ndarray:
+    """Scientist-side defence on one cut-gradient chunk (B, k) before
+    it ships (Li et al. norm attack + direction attacks):
+
+    * ``norm_mode="unit"`` rescales every example's gradient to the
+      batch-median norm — the per-example norm carries zero bits.
+    * ``norm_mode="sign"`` ships ``sign(g)`` at one common magnitude
+      (the mean |g|) — norms AND fine-grained directions collapse.
+    * ``noise_std`` adds deterministic Gaussian noise (keyed on
+      ``(seed, tag)``) on top of either mode.
+
+    Pure in its inputs, so supervised replay re-derives identical
+    defended gradients."""
+    g = np.asarray(g, np.float32)
+    if norm_mode not in ("none", "unit", "sign"):
+        raise ValueError(f"unknown grad_norm_mode {norm_mode!r}")
+    if norm_mode == "unit":
+        norms = np.linalg.norm(g.reshape(g.shape[0], -1), axis=1)
+        target = np.float32(np.median(norms))
+        scale = target / np.maximum(norms, 1e-12)
+        g = g * scale.reshape((-1,) + (1,) * (g.ndim - 1)).astype(
+            np.float32)
+    elif norm_mode == "sign":
+        g = np.sign(g).astype(np.float32) * np.float32(
+            np.mean(np.abs(g)))
+    if noise_std > 0.0:
+        noise = _wire_rng(seed, tag).standard_normal(
+            g.shape).astype(np.float32)
+        g = g + np.float32(noise_std) * noise
+    return g
+
+
+def label_inference_auc(grad_norms, labels) -> float:
+    """The norm attack's score: AUC of per-example cut-gradient norms
+    predicting the (binary) label — 0.5 = chance, 1.0 = full leak.
+    Shared by the attack harness and the privacy benchmark."""
+    norms = np.asarray(grad_norms, np.float64)
+    y = np.asarray(labels).astype(bool)
+    pos, neg = norms[y], norms[~y]
+    if not len(pos) or not len(neg):
+        return 0.5
+    # Mann-Whitney U statistic, ties counted half
+    greater = (pos[:, None] > neg[None, :]).sum()
+    ties = (pos[:, None] == neg[None, :]).sum()
+    return float((greater + 0.5 * ties) / (len(pos) * len(neg)))

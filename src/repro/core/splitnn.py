@@ -262,6 +262,69 @@ def make_mlp_trunk_microbatch_programs(model: MLPSplitNN):
 
 
 # ---------------------------------------------------------------------------
+# Secure forward aggregation (masked-sum combine, Cai et al. 2207.00165)
+# ---------------------------------------------------------------------------
+#
+# The scientist-side programs for ``fit(aggregation="masked_sum")``:
+# they consume the int32 RING SUM of the owners' quantized cuts (masked
+# on the wire — ``core/masking.py``; the masks cancel in the fold, so
+# the sum is bitwise the unmasked oracle's), dequantize in-program, and
+# run the trunk.  The cut gradient is ``dL/dz`` — the sum combine's
+# broadcast (straight-through across the fixed-point lift) — shipped
+# identically to every owner.  Same denom-seeded microbatch semantics
+# as the plain programs.
+
+
+def make_mlp_masked_trunk_program(model: MLPSplitNN):
+    """Fused masked-sum scientist step (sequential schedule):
+    ``trunk_step(tp, zsum (B, k) int32, labels) ->
+    (metrics, trunk_grads, z_grad (B, k))``."""
+    from repro.core import masking
+
+    def trunk_step(tp, zsum, labels):
+        z = masking.dequantize(zsum)
+
+        def f(tp_, z_):
+            logits = model._mlp_apply(tp_, z_)
+            return model._nll_metrics(logits, labels)
+
+        (_, metrics), (tg, zg) = jax.value_and_grad(
+            f, argnums=(0, 1), has_aux=True)(tp, z)
+        return metrics, tg, zg
+
+    return jax.jit(trunk_step)
+
+
+def make_mlp_masked_trunk_microbatch_programs(model: MLPSplitNN):
+    """Per-microbatch masked-sum scientist programs — the masked
+    analogue of ``make_mlp_trunk_microbatch_programs`` (same sum/denom
+    seeding; ``cuts`` replaced by the chunk's int32 ring sum)."""
+    from repro.core import masking
+
+    def chunk_loss(tp, z, labels, denom):
+        logits = model._mlp_apply(tp, z)
+        logp = jax.nn.log_softmax(logits)
+        loss = -jnp.sum(jnp.take_along_axis(logp, labels[:, None], 1)) \
+            / denom
+        acc = jnp.sum(jnp.argmax(logits, -1) == labels) / denom
+        return loss, {"loss": loss, "accuracy": acc}
+
+    def cutgrad(tp, zsum, labels, denom, inv_micro):
+        z = masking.dequantize(zsum)
+        (_, parts), zg = jax.value_and_grad(
+            lambda z_: chunk_loss(tp, z_, labels, denom),
+            has_aux=True)(z)
+        return zg, parts
+
+    def weightgrad(tp, zsum, labels, denom, inv_micro):
+        z = masking.dequantize(zsum)
+        return jax.grad(
+            lambda p: chunk_loss(p, z, labels, denom)[0])(tp)
+
+    return jax.jit(cutgrad), jax.jit(weightgrad)
+
+
+# ---------------------------------------------------------------------------
 # Communication accounting (claim C4)
 # ---------------------------------------------------------------------------
 

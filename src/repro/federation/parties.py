@@ -216,13 +216,24 @@ class OwnerComputeEndpoint:
     def __init__(self, owner: DataOwner, endpoint, head_fwd, head_bwd, *,
                  optimizer, params, codec, ack_steps: bool = False,
                  microbatches: int = 1, gather=None, update_program=None,
-                 tail_program=None, opt_state=None, start_step: int = 0):
+                 tail_program=None, opt_state=None, start_step: int = 0,
+                 masker=None, cut_noise_std: float = 0.0,
+                 noise_seed: int = 0):
         import jax
         import jax.numpy as jnp
 
         self.owner = owner
         self.endpoint = endpoint
         self.head_fwd, self.head_bwd = head_fwd, head_bwd
+        # secure forward aggregation: when set, every cut that ships is
+        # quantized + ring-masked (core/masking.py) instead of
+        # codec-encoded — an eavesdropper sees uniform ring elements
+        self.masker = masker
+        # owner-side Titcombe defence: deterministic Gaussian noise on
+        # steady-state cuts BEFORE they ship (the joint path's
+        # cut_noise_std analogue, but on the wire)
+        self.cut_noise_std = float(cut_noise_std)
+        self.noise_seed = int(noise_seed)
         self.opt = optimizer
         self.params = params
         # a respawned worker resumes snapshotted optimizer state and the
@@ -276,7 +287,19 @@ class OwnerComputeEndpoint:
         # segment programs may return (cut, aux): the scalar owner-local
         # aux loss rides along for metric parity
         cut, aux = out if isinstance(out, tuple) else (out, None)
-        payload = self.codec.encode(cut)
+        if self.masker is not None:
+            # masked-sum wire format: {"mq": uint32 ring element}.
+            # Bypasses the codec — uniform ring bytes are incompressible
+            # and already 4 bytes/element, the f32 it replaces.
+            tag = (self.masker.step_tag(seq) if kind == "cut_activations"
+                   else self.masker.warmup_tag(seq))
+            payload = self.masker.encode(cut, tag)
+        else:
+            if self.cut_noise_std > 0.0 and kind == "cut_activations":
+                from repro.core.privacy import deterministic_cut_noise
+                cut = deterministic_cut_noise(
+                    cut, self.cut_noise_std, self.noise_seed, f"s{seq}")
+            payload = self.codec.encode(cut)
         if aux is not None:
             payload["aux"] = np.float32(np.asarray(aux).sum())
         self.endpoint.send(kind, payload, seq=seq)

@@ -215,6 +215,30 @@ class MLPAdapter(_ProgramCache):
             "trunk_micro",
             lambda: make_mlp_trunk_microbatch_programs(self.model))
 
+    # ------------------------------------- secure forward aggregation
+    @property
+    def supports_masked(self) -> bool:
+        """masked_sum rides the sum combine: the scientist only ever
+        needs ``sum_p cut_p``, which the ring fold reconstructs."""
+        return self.cfg.split.combine == "sum"
+
+    def quant_program(self):
+        from repro.core import masking
+        return self._cached("quant_prog", masking.make_quant_program)
+
+    def masked_trunk_program(self):
+        from repro.core.splitnn import make_mlp_masked_trunk_program
+        return self._cached(
+            "masked_trunk_prog",
+            lambda: make_mlp_masked_trunk_program(self.model))
+
+    def masked_trunk_microbatch_programs(self):
+        from repro.core.splitnn import \
+            make_mlp_masked_trunk_microbatch_programs
+        return self._cached(
+            "masked_trunk_micro",
+            lambda: make_mlp_masked_trunk_microbatch_programs(self.model))
+
     def owner_param_slice(self, params, p: int):
         if self.model.symmetric:
             return jax.tree.map(lambda a: a[p], params["heads"])
@@ -291,6 +315,9 @@ class SplitLMAdapter(_ProgramCache):
     # ------------------------------------------------- split execution
     supports_split = True
     supports_microbatch = True
+    # LM cuts are sequence-sliced then concat-combined (and cast to
+    # compute dtype per owner) — no sum combine, so no ring aggregation
+    supports_masked = False
 
     def owner_programs(self, owner_index: int):
         """Owner ``owner_index``'s jitted segment programs.  The head

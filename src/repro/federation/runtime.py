@@ -111,6 +111,16 @@ class OwnerWorkerSpec:
     #: worker generation: 0 for first launch; respawns bump it, so
     #: generation-0 faults (the legacy default) don't re-fire
     generation: int = 0
+    #: secure forward aggregation: "masked_sum" builds a
+    #: ``core.masking.MaskedAggregator`` in the worker (root seed from
+    #: the env channel ``REPRO_MASK_SEED``, default the init seed — the
+    #: scientist-side spec never carries the root); None = plain cuts
+    aggregation: Optional[str] = None
+    #: total owner count — the mask cancellation set (>= 2 for masked)
+    n_owners: int = 0
+    #: owner-side Titcombe wire defence (deterministic, seeded on
+    #: init_seed so replay after recovery re-derives identical noise)
+    cut_noise_std: float = 0.0
 
 
 @dataclass
@@ -182,13 +192,21 @@ def _owner_body(spec: OwnerWorkerSpec, ep: ProcessEndpoint) -> None:
         opt_state = jax.tree_util.tree_unflatten(
             jax.tree_util.tree_structure(owner_opt.init(params)),
             [jax.numpy.asarray(leaf) for leaf in spec.opt_state_leaves])
+    masker = None
+    if spec.aggregation == "masked_sum":
+        from repro.core import masking
+        masker = masking.MaskedAggregator(
+            masking.mask_root_from_env(spec.init_seed), p, spec.n_owners,
+            adapter.quant_program(), generation=spec.generation)
     worker = OwnerComputeEndpoint(
         owner, ep, head_fwd, head_bwd, optimizer=owner_opt,
         params=params, codec=get_codec(spec.codec),
         ack_steps=spec.ack_steps, microbatches=spec.microbatches,
         gather=adapter.gather_program(), update_program=owner_update,
         tail_program=adapter.owner_tail_rule(spec.owner_lr, p),
-        opt_state=opt_state, start_step=spec.start_step)
+        opt_state=opt_state, start_step=spec.start_step,
+        masker=masker, cut_noise_std=spec.cut_noise_std,
+        noise_seed=spec.init_seed)
     _arm_chaos(worker, spec.name, generation=spec.generation)
     worker.run()
     if worker.error is not None:

@@ -49,6 +49,7 @@ Training modes:
 """
 from __future__ import annotations
 
+import os
 import queue as _queue
 import threading
 import time
@@ -60,6 +61,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import masking, privacy
 from repro.core.modexp import ModexpPool
 from repro.core.psi import DEFAULT_CHUNK, DEFAULT_MODE, psi_round
 from repro.core.splitnn import (cut_layer_traffic, make_split_train_step,
@@ -431,7 +433,8 @@ class VerticalSession:
             bandwidth_bps: Optional[float] = None,
             timeout: float = 120.0, supervise: bool = False,
             max_restarts: int = 2, resync_every: int = 1,
-            heartbeat_s: float = 0.5) -> dict:
+            heartbeat_s: float = 0.5,
+            aggregation: Optional[str] = None) -> dict:
         """The SplitNN training loop.
 
         Exactly one of ``epochs`` (feature workloads) / ``steps`` (LM
@@ -482,7 +485,19 @@ class VerticalSession:
         are bit-identical to the fault-free run (property-tested; the
         zero-grad recovery warmup is a bitwise no-op for SGD-family
         owner optimizers, the paper's case).  Each recovery appends to
-        ``session.recovery_events``."""
+        ``session.recovery_events``.
+
+        ``aggregation="masked_sum"`` turns on secure forward
+        aggregation (Cai et al., ``core/masking.py``): each owner ships
+        its cut quantized + ring-masked with pairwise-cancelling masks
+        (root seed over the ``REPRO_MASK_SEED`` env channel), so the
+        scientist reconstructs only the owner SUM — no per-owner
+        activation ever crosses the wire.  Requires an adapter with
+        ``combine="sum"`` and >= 2 owners.  ``mode="joint"`` with
+        masked_sum runs the *masked joint oracle* — the identical
+        quantize -> ring-sum -> dequantize combine without masks —
+        which split masked execution reproduces bit-for-bit (masks
+        cancel exactly in the integer ring; property-tested)."""
         self._require(resolved=True, built=True, labels=True)
         if (epochs is None) == (steps is None):
             raise ValueError("pass exactly one of epochs= or steps=")
@@ -500,6 +515,18 @@ class VerticalSession:
                 raise ValueError(
                     f"{type(self.adapter).__name__} does not support "
                     "microbatched training")
+        if aggregation not in (None, "masked_sum"):
+            raise ValueError(f"unknown aggregation {aggregation!r} "
+                             "(None | 'masked_sum')")
+        if aggregation == "masked_sum":
+            if not getattr(self.adapter, "supports_masked", False):
+                raise ValueError(
+                    f"{type(self.adapter).__name__} does not support "
+                    "masked_sum aggregation (needs combine='sum')")
+            if len(self.owners) < 2:
+                raise ValueError(
+                    "masked_sum needs >= 2 owners: a single owner's "
+                    "masked payload would expose its activations")
         if supervise:
             if mode != "split":
                 raise ValueError("supervise=True requires mode='split' "
@@ -523,15 +550,18 @@ class VerticalSession:
                 timeout=timeout, supervise=supervise,
                 max_restarts=max_restarts,
                 resync_every=int(resync_every),
-                heartbeat_s=heartbeat_s)
-        if microbatches > 1:
+                heartbeat_s=heartbeat_s, aggregation=aggregation)
+        if microbatches > 1 or aggregation is not None:
+            # the masked joint oracle runs through the microbatched
+            # loop even at M=1: its quantize->ring-sum->dequantize
+            # combine is what split masked execution reproduces
             return self._fit_joint_microbatched(
                 epochs=epochs, steps=steps, batch_size=batch_size,
                 eval_frac=eval_frac, owner_lr=owner_lr,
                 scientist_lr=scientist_lr, log_every=log_every,
                 ckpt_dir=ckpt_dir, ckpt_every=ckpt_every,
                 shuffle_seed=shuffle_seed, verbose=verbose,
-                microbatches=microbatches)
+                microbatches=microbatches, aggregation=aggregation)
 
         n = len(self.scientist.ids)
         n_train = n - int(n * eval_frac)
@@ -686,14 +716,21 @@ class VerticalSession:
     def _fit_joint_microbatched(self, *, epochs, steps, batch_size,
                                 eval_frac, owner_lr, scientist_lr,
                                 log_every, ckpt_dir, ckpt_every,
-                                shuffle_seed, verbose, microbatches
-                                ) -> dict:
+                                shuffle_seed, verbose, microbatches,
+                                aggregation=None) -> dict:
         """The GPipe reference loop: per-microbatch segment programs,
         grads accumulated in chunk order at step-start params, one
         optimizer update per party per step.  Runs the SAME compiled
         programs (adapter-cached) as ``fit(mode="split",
         microbatches=M)`` in the same order — the bit-for-bit oracle for
-        microbatched split execution."""
+        microbatched split execution.
+
+        With ``aggregation="masked_sum"`` this loop is the *masked
+        joint oracle*: cuts are quantized through the adapter's quant
+        program, host-ring-summed (``masking.fold_quantized`` — exact
+        integer addition, bitwise the wire fold once masks cancel), and
+        the masked trunk programs consume the int32 sum; every owner's
+        head backward receives the same broadcast ``dL/dz``."""
         adapter = self.adapter
         M = microbatches
         bm = batch_size // M
@@ -713,7 +750,13 @@ class VerticalSession:
                   for p in range(P)]
         ostates = [owner_opt.init(s) for s in slices]
         trunk_opt, trunk_update = adapter.trunk_update_rule(scientist_lr)
-        cutgrad, weightgrad = adapter.trunk_microbatch_programs()
+        masked = aggregation == "masked_sum"
+        if masked:
+            quant = adapter.quant_program()
+            cutgrad, weightgrad = \
+                adapter.masked_trunk_microbatch_programs()
+        else:
+            cutgrad, weightgrad = adapter.trunk_microbatch_programs()
         tp = self.params["trunk"]
         ts = trunk_opt.init(tp)
         denom = jnp.asarray(float(batch_size), jnp.float32)
@@ -760,15 +803,28 @@ class VerticalSession:
                         # identical f32 round-trip as the wire's aux
                         owner_aux += float(
                             np.float32(np.asarray(aux).sum()))
-                cuts = tuple(cuts)
                 lab_m = jnp.asarray(lab_full[m * bm:(m + 1) * bm])
-                cg, parts = cutgrad(tp, cuts, lab_m, denom, inv_micro)
+                if masked:
+                    # the oracle combine: quantize each owner's cut,
+                    # host-ring-sum (no masks — they'd cancel anyway),
+                    # feed the masked trunk program the int32 sum.  The
+                    # broadcast z-grad is every owner's cut gradient.
+                    zsum = jnp.asarray(masking.fold_quantized(
+                        [np.asarray(quant(c)) for c in cuts]))
+                    zg, parts = cutgrad(tp, zsum, lab_m, denom,
+                                        inv_micro)
+                    cg = [zg] * P
+                    cached = zsum
+                else:
+                    cached = cuts = tuple(cuts)
+                    cg, parts = cutgrad(tp, cuts, lab_m, denom,
+                                        inv_micro)
                 parts_list.append(parts)
                 for p in range(P):
                     hg = head_progs[p][1](slices[p], chunks[p][m], cg[p])
                     hg_acc[p] = hg if hg_acc[p] is None else \
                         _tree_add(hg_acc[p], hg)
-                cut_cache.append((cuts, lab_m))
+                cut_cache.append((cached, lab_m))
             for p in range(P):
                 slices[p], ostates[p] = owner_update(
                     slices[p], ostates[p], hg_acc[p], t)
@@ -870,7 +926,8 @@ class VerticalSession:
                    shuffle_seed, verbose, schedule, microbatches,
                    compression, backend, latency_s, bandwidth_bps,
                    timeout=120.0, supervise=False, max_restarts=2,
-                   resync_every=1, heartbeat_s=0.5) -> dict:
+                   resync_every=1, heartbeat_s=0.5,
+                   aggregation=None) -> dict:
         """True split execution over the transport layer (paper Fig. 2).
 
         Per step t the wire carries exactly four message kinds:
@@ -934,14 +991,46 @@ class VerticalSession:
         # program — recompute-based decomposition would double trunk
         # work with no wire window to hide it in, overstating the
         # baseline this schedule exists to provide.
+        masked = aggregation == "masked_sum"
         if sequential:
-            trunk_step = adapter.trunk_program()
+            trunk_step = (adapter.masked_trunk_program() if masked
+                          else adapter.trunk_program())
             cutgrad = weightgrad = None
         else:
-            cutgrad, weightgrad = adapter.trunk_microbatch_programs()
+            cutgrad, weightgrad = (
+                adapter.masked_trunk_microbatch_programs() if masked
+                else adapter.trunk_microbatch_programs())
             trunk_step = None
         denom = jnp.asarray(float(batch_size), jnp.float32)
         inv_micro = jnp.asarray(1.0 / M, jnp.float32)
+
+        # secure aggregation key agreement: the mask root travels the
+        # env channel so spawned owner workers (which inherit the
+        # parent's environment) and in-process actors derive the same
+        # pairwise streams.  Respect a caller-set value (the deployment
+        # secret); otherwise publish the session default for the run
+        # and restore on exit.
+        mask_env_set = False
+        if masked and not os.environ.get(masking.MASK_ENV, ""):
+            os.environ[masking.MASK_ENV] = str(self._init_seed)
+            mask_env_set = True
+        mask_root = masking.mask_root_from_env(self._init_seed)
+
+        # gradient-side label-leakage defences (SplitConfig): applied
+        # to every cut-gradient chunk before it ships — deterministic
+        # per (seed, seq, owner), so supervised replay after a recovery
+        # re-derives bitwise-identical defended gradients
+        sp_cfg = self.config.split
+        defend_on = (sp_cfg.grad_noise_std > 0.0
+                     or sp_cfg.grad_norm_mode != "none")
+
+        def defend(g, seq, p):
+            if not defend_on:
+                return g
+            return privacy.obfuscate_cut_gradient(
+                np.asarray(g), noise_std=sp_cfg.grad_noise_std,
+                norm_mode=sp_cfg.grad_norm_mode, seed=self._init_seed,
+                tag=f"g{seq}o{p}")
 
         owner_opt, owner_update = adapter.owner_update_rule(owner_lr)
         workers, eps, threads = [], [], []
@@ -965,7 +1054,9 @@ class VerticalSession:
                 ack_steps=sequential, owner_lr=owner_lr,
                 latency_s=latency_s, bandwidth_bps=bandwidth_bps,
                 opt_state_leaves=opt_state_leaves,
-                start_step=start_step, generation=generation)
+                start_step=start_step, generation=generation,
+                aggregation=aggregation, n_owners=len(self.owners),
+                cut_noise_std=sp_cfg.cut_noise_std)
             return runtime.spawn_owner_worker(spec, owner=owner)
 
         def spawn_thread(p, *, params, opt_state=None, start_step=0,
@@ -975,6 +1066,11 @@ class VerticalSession:
                 "scientist", owner.name, backend=backend,
                 latency_s=latency_s, bandwidth_bps=bandwidth_bps)
             head_fwd, head_bwd = adapter.owner_programs(p)
+            masker = None
+            if masked:
+                masker = masking.MaskedAggregator(
+                    mask_root, p, len(self.owners),
+                    adapter.quant_program(), generation=generation)
             w = OwnerComputeEndpoint(
                 owner, ep_own, head_fwd, head_bwd,
                 optimizer=owner_opt, params=params,
@@ -982,7 +1078,9 @@ class VerticalSession:
                 gather=adapter.gather_program(),
                 update_program=owner_update,
                 tail_program=adapter.owner_tail_rule(owner_lr, p),
-                opt_state=opt_state, start_step=start_step)
+                opt_state=opt_state, start_step=start_step,
+                masker=masker, cut_noise_std=sp_cfg.cut_noise_std,
+                noise_seed=self._init_seed)
             # in-process actors get the same chaos surface as spawned
             # workers: the env plan's crash/wedge wrap + wire faults
             faults.arm_actor(w, owner.name, generation=generation)
@@ -1057,17 +1155,25 @@ class VerticalSession:
         def recv_chunk(seq):
             """One microbatch chunk from every owner -> per-owner cut
             tuple + the owners' summed aux scalar.  The cuts go into the
-            jitted trunk programs as-is (stacking happens in-program)."""
-            cuts, aux = [], 0.0
+            jitted trunk programs as-is (stacking happens in-program).
+            Masked runs fold the owners' uint32 ring payloads instead:
+            the return is the reconstructed int32 SUM — the scientist
+            never materializes a per-owner activation."""
+            cuts, payloads, aux = [], [], 0.0
             for ep, w in zip(eps, workers):
                 m = self._recv_from_owner(ep, w, "cut_activations",
                                           timeout=timeout)
                 if m.seq != seq:
                     raise RuntimeError(f"protocol desync: cut seq {m.seq} "
                                        f"!= expected {seq}")
-                cuts.append(codec.decode(m.payload))
+                if masked:
+                    payloads.append(m.payload)
+                else:
+                    cuts.append(codec.decode(m.payload))
                 if "aux" in m.payload:
                     aux += float(np.asarray(m.payload["aux"]).sum())
+            if masked:
+                return jnp.asarray(masking.reconstruct(payloads)), aux
             return tuple(cuts), aux
 
         # Party threads trade sub-millisecond messages; CPython's default
@@ -1090,21 +1196,38 @@ class VerticalSession:
             for ep in eps:
                 ep.send("warmup", {"idx": widx}, seq=-1)
             for m in range(M):
-                cuts = []
+                cuts, payloads = [], []
                 for ep, w in zip(eps, workers):
                     mm = self._recv_from_owner(ep, w, "warmup_cuts",
                                                timeout=warmup_timeout)
-                    cuts.append(codec.decode(mm.payload))
+                    if masked:
+                        payloads.append(mm.payload)
+                    else:
+                        cuts.append(codec.decode(mm.payload))
                 lab_m = jnp.asarray(wlab[m * bm:(m + 1) * bm])
-                if sequential:
+                if masked:
+                    # all owners are generation 0 here, so their warmup
+                    # masks cancel and the fold is the true zsum —
+                    # compiles the masked trunk programs at real shapes
+                    zsum = jnp.asarray(masking.reconstruct(payloads))
+                    if sequential:
+                        _, _, zg = trunk_step(trunk_params, zsum, lab_m)
+                    else:
+                        zg, _ = cutgrad(trunk_params, zsum, lab_m,
+                                        denom, inv_micro)
+                        weightgrad(trunk_params, zsum, lab_m, denom,
+                                   inv_micro)
+                    zero = np.zeros_like(np.asarray(zg))
+                elif sequential:
                     _, _, cg = trunk_step(trunk_params, jnp.stack(cuts),
                                           lab_m)
+                    zero = np.zeros_like(np.asarray(cg[0]))
                 else:
                     cg, _ = cutgrad(trunk_params, tuple(cuts), lab_m,
                                     denom, inv_micro)
                     weightgrad(trunk_params, tuple(cuts), lab_m, denom,
                                inv_micro)
-                zero = np.zeros_like(np.asarray(cg[0]))
+                    zero = np.zeros_like(np.asarray(cg[0]))
                 wzero = zero
                 for ep in eps:
                     ep.send("warmup_grads", codec.encode(zero), seq=m)
@@ -1320,12 +1443,20 @@ class VerticalSession:
                     # strictly before the grads leave, wait for every
                     # owner's step, then request t+1
                     cuts, owner_aux = recv_chunk(t)
-                    parts, tg, cg = trunk_step(
-                        trunk_params, jnp.stack(cuts), lab_chunks[0])
+                    if masked:
+                        # recv_chunk already folded the ring sum; the
+                        # broadcast z-grad goes back to every owner
+                        parts, tg, zg = trunk_step(
+                            trunk_params, cuts, lab_chunks[0])
+                        cg = [zg] * len(eps)
+                    else:
+                        parts, tg, cg = trunk_step(
+                            trunk_params, jnp.stack(cuts), lab_chunks[0])
                     trunk_params, trunk_state = trunk_update(
                         trunk_params, trunk_state, tg, t)
                     for p, ep in enumerate(eps):
-                        ep.send("cut_gradients", codec.encode(cg[p]),
+                        ep.send("cut_gradients",
+                                codec.encode(defend(cg[p], t, p)),
                                 seq=t)
                     for ep, w in zip(eps, workers):
                         self._recv_from_owner(ep, w, "step_done",
@@ -1349,9 +1480,13 @@ class VerticalSession:
                         cg, parts = cutgrad(trunk_params, cuts,
                                             lab_chunks[m], denom,
                                             inv_micro)
+                        if masked:
+                            # cutgrad returned the broadcast z-grad
+                            cg = [cg] * len(eps)
                         for p, ep in enumerate(eps):
                             ep.send("cut_gradients",
-                                    codec.encode(cg[p]), seq=seq)
+                                    codec.encode(defend(cg[p], seq, p)),
+                                    seq=seq)
                         parts_list.append(parts)
                         cut_cache.append((cuts, lab_chunks[m]))
                     tg_acc = None
@@ -1397,6 +1532,8 @@ class VerticalSession:
                 history["eval"].append({"step": steps, **self.evaluate()})
         finally:
             _sys.setswitchinterval(old_switch)
+            if mask_env_set:
+                os.environ.pop(masking.MASK_ENV, None)
             if sup is not None:
                 sup.stop()
             for ep in eps:
@@ -1444,6 +1581,7 @@ class VerticalSession:
         self.transport_stats = {
             "mode": "split", "schedule": schedule,
             "microbatches": M,
+            "aggregation": aggregation or "none",
             "compression": compression or "none", "backend": backend,
             "latency_s": latency_s, "bandwidth_bps": bandwidth_bps,
             "steps": total_steps, "wall_s": wall_s,

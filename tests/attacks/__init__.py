@@ -1,0 +1,3 @@
+"""Transcript attacks: real adversaries run against tap-captured wire
+traffic of real training runs, asserting each defense strictly reduces
+the attacker's leakage (see docs/ARCHITECTURE.md, threat model)."""

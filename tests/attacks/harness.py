@@ -1,0 +1,161 @@
+"""Transcript-attack harness: capture the full wire transcript of a
+real split fit, then attack it the way an honest-but-curious scientist
+(or a wire eavesdropper) would.
+
+The attacker model per attack:
+
+* **Model inversion** (`inversion_r2`): the adversary observes an
+  owner's cut-activation frames and holds a leaked auxiliary subset of
+  that owner's raw rows (half the captured examples).  It fits a ridge
+  decoder cut -> raw on the leaked rows and reconstructs the REST.
+  Score: held-out R^2 (1 = perfect reconstruction, <= 0 = noise).
+* **Distance-correlation leakage** (`dcor_leakage`): no auxiliary data
+  at all — the adversary measures statistical dependence between the
+  raw batch and the frames on the wire (Szekely dcor, the NoPeek
+  metric).  Needs the raw rows only to *score* the leak.
+* **Norm-based label inference** (`norm_attack_auc`, Li et al. 2021):
+  the adversary observes the cut-gradient frames the scientist ships
+  back and predicts the (rare) binary label from per-example gradient
+  norms.  Score: AUC (0.5 = chance, 1 = full leak).
+
+Labels are binarized ("is the rare class") so the norm attack faces
+the imbalanced setting it exploits in practice.
+"""
+import dataclasses
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+from repro.configs.pyvertical_mnist import CONFIG as MNIST_CFG
+from repro.core.privacy import distance_correlation, label_inference_auc
+from repro.core.resolution import VerticalDataset
+from repro.data import make_vertical_mnist_parties
+from repro.federation import VerticalSession, feature_parties, transport
+from repro.federation.transport import _unpack, get_codec
+
+
+@dataclass
+class Transcript:
+    """Everything a wire observer saw, plus the ground truth needed to
+    *score* an attack (never fed to the attacker's fit)."""
+    cuts: Dict[str, List[Tuple[int, np.ndarray]]] = field(
+        default_factory=dict)       # owner -> [(step, (B, k) float)]
+    grads: Dict[str, List[Tuple[int, np.ndarray]]] = field(
+        default_factory=dict)       # owner -> [(step, (B, k) float)]
+    batches: Dict[int, np.ndarray] = field(default_factory=dict)
+    features: Dict[str, np.ndarray] = field(default_factory=dict)
+    labels: Optional[np.ndarray] = None
+    aggregation: Optional[str] = None
+
+
+def capture_transcript(*, aggregation=None, cut_noise_std=0.0,
+                       grad_noise_std=0.0, grad_norm_mode="none",
+                       n=256, steps=6, batch_size=64, seed=0,
+                       rare_class=0, compression=None) -> Transcript:
+    """Run a real sum-combine split fit on the queue backend with the
+    given defenses and capture every serialized frame."""
+    captured = []
+    orig = transport.channel_pair
+
+    def tapped(a, b, **kw):
+        kw["tap"] = lambda msg, blob: captured.append(
+            (msg.sender, msg.receiver, msg.kind, msg.seq, blob))
+        return orig(a, b, **kw)
+
+    transport.channel_pair = tapped
+    try:
+        sci_ds, owner_ds = make_vertical_mnist_parties(n, seed=seed,
+                                                       keep_frac=0.9)
+        # binarize: the rare class (~10% of rows) is the positive —
+        # the imbalanced setting the norm attack exploits
+        sci_ds = VerticalDataset(
+            sci_ds.ids,
+            (np.asarray(sci_ds.data) == rare_class).astype(np.int32))
+        s = VerticalSession(*feature_parties(sci_ds, owner_ds))
+        s.resolve(group="modp512")
+        s.build(dataclasses.replace(MNIST_CFG, split=dataclasses.replace(
+            MNIST_CFG.split, combine="sum",
+            cut_noise_std=cut_noise_std, grad_noise_std=grad_noise_std,
+            grad_norm_mode=grad_norm_mode)))
+        s.fit(steps=steps, batch_size=batch_size, verbose=False,
+              mode="split", backend="queue", aggregation=aggregation,
+              compression=compression)
+    finally:
+        transport.channel_pair = orig
+
+    tr = Transcript(aggregation=aggregation)
+    codec = get_codec(compression)
+    for sender, receiver, kind, seq, blob in captured:
+        payload = _unpack(blob)
+        if kind == "head_fwd":
+            # the same indices go to every owner; seq == step (M=1)
+            tr.batches[seq] = np.asarray(payload["idx"], np.int32)
+        elif kind == "cut_activations":
+            if "mq" in payload:
+                # best-effort float view of the ring element — all an
+                # eavesdropper can do with a masked frame
+                z = (payload["mq"].view(np.int32).astype(np.float32)
+                     * np.float32(2.0 ** -16))
+            else:
+                z = np.asarray(codec.decode(payload), np.float32)
+            tr.cuts.setdefault(sender, []).append((seq, z))
+        elif kind == "cut_gradients":
+            tr.grads.setdefault(receiver, []).append(
+                (seq, np.asarray(codec.decode(payload), np.float32)))
+    for o in s.owners:
+        tr.features[o.name] = np.asarray(o._features, np.float32)
+    tr.labels = np.asarray(s.scientist.labels)
+    return tr
+
+
+def _stacked(tr: Transcript, owner: str):
+    """(X raw rows, Z wire frames, y labels) stacked over steady steps."""
+    xs, zs, ys = [], [], []
+    for t, z in sorted(tr.cuts[owner]):
+        idx = tr.batches[t]
+        xs.append(tr.features[owner][idx])
+        zs.append(np.asarray(z, np.float32))
+        ys.append(tr.labels[idx])
+    return (np.concatenate(xs), np.concatenate(zs),
+            np.concatenate(ys))
+
+
+def inversion_r2(tr: Transcript, owner: str, *, ridge=1e-2,
+                 train_frac=0.5) -> float:
+    """Ridge-decoder model inversion with a leaked auxiliary subset."""
+    X, Z, _ = _stacked(tr, owner)
+    # standardize the wire view so masked uint32 scales don't blow up
+    Z = (Z - Z.mean(0)) / np.maximum(Z.std(0), 1e-6)
+    Z = np.concatenate([Z, np.ones((len(Z), 1), np.float32)], 1)
+    n_tr = int(len(Z) * train_frac)
+    Ztr, Xtr, Zte, Xte = Z[:n_tr], X[:n_tr], Z[n_tr:], X[n_tr:]
+    A = (Ztr.T @ Ztr).astype(np.float64) + ridge * np.eye(Z.shape[1])
+    W = np.linalg.solve(A, (Ztr.T @ Xtr).astype(np.float64))
+    err = Xte - Zte @ W
+    sse = float(np.sum(err ** 2))
+    sst = float(np.sum((Xte - Xtr.mean(0)) ** 2))
+    return 1.0 - sse / max(sst, 1e-12)
+
+
+def dcor_leakage(tr: Transcript, owner: str) -> float:
+    """Mean per-step distance correlation between the raw batch and the
+    frame on the wire."""
+    vals = []
+    for t, z in sorted(tr.cuts[owner]):
+        x = tr.features[owner][tr.batches[t]]
+        vals.append(float(distance_correlation(x, np.asarray(z))))
+    return float(np.mean(vals))
+
+
+def norm_attack_auc(tr: Transcript, owner: Optional[str] = None) -> float:
+    """Li et al. norm attack on the captured cut-gradient frames."""
+    key = owner if owner is not None else sorted(tr.grads)[0]
+    norms, labels = [], []
+    for t, g in sorted(tr.grads[key]):
+        idx = tr.batches[t]
+        norms.append(np.linalg.norm(
+            np.asarray(g).reshape(len(idx), -1), axis=1))
+        labels.append(tr.labels[idx])
+    return label_inference_auc(np.concatenate(norms),
+                               np.concatenate(labels))

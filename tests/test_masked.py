@@ -1,0 +1,256 @@
+"""Secure forward aggregation (``fit(aggregation="masked_sum")``).
+
+Three layers of guarantees:
+
+1. Ring algebra (``core/masking.py``): pairwise masks cancel exactly,
+   quantization stays in the f32-exact band, mask streams are pure
+   functions of (root, pair, tag).
+2. Protocol bit-identity: masked split execution on every backend /
+   schedule / microbatch count reproduces the *masked joint oracle*
+   (``fit(mode="joint", aggregation="masked_sum")``) bitwise.
+3. Composition: codecs still apply to the gradient leg, gradient
+   defenses stay deterministic, misuse raises early.
+"""
+import dataclasses
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs.pyvertical_mnist import CONFIG as MNIST_CFG
+from repro.core import masking
+from repro.data import make_vertical_mnist_parties
+from repro.federation import VerticalSession, feature_parties
+from repro.testing.hypo import given, settings
+from repro.testing.hypo import strategies as st
+
+SUM_CFG = dataclasses.replace(MNIST_CFG, split=dataclasses.replace(
+    MNIST_CFG.split, combine="sum"))
+
+
+# ---------------------------------------------------------------------------
+# ring algebra
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=20)
+@given(st.integers(min_value=2, max_value=6),
+       st.integers(min_value=0, max_value=2 ** 31))
+def test_pairwise_masks_cancel_exactly(n_owners, root):
+    """sum_p mask_p == 0 mod 2^32, elementwise, for any owner count and
+    root — the whole secure-aggregation correctness argument."""
+    shape = (3, 5)
+    total = np.zeros(shape, np.uint32)
+    for p in range(n_owners):
+        total = total + masking.pairwise_mask(root, p, n_owners, "s7",
+                                              shape)
+    assert not total.any()
+
+
+def test_masks_differ_across_tags_owners_and_roots():
+    shape = (4,)
+    m = masking.pairwise_mask(1, 0, 2, "s1", shape)
+    assert not np.array_equal(m, masking.pairwise_mask(1, 0, 2, "s2",
+                                                       shape))
+    assert not np.array_equal(m, masking.pairwise_mask(2, 0, 2, "s1",
+                                                       shape))
+    assert not np.array_equal(m, masking.pairwise_mask(1, 1, 2, "s1",
+                                                       shape))
+    # pure function: same inputs, bitwise same stream
+    np.testing.assert_array_equal(
+        m, masking.pairwise_mask(1, 0, 2, "s1", shape))
+
+
+@settings(max_examples=20)
+@given(st.floats(min_value=-200.0, max_value=200.0),
+       st.floats(min_value=-200.0, max_value=200.0))
+def test_quantize_round_trip_error_bounded(a, b):
+    """The fixed-point lift loses at most half a quantum (2^-17) per
+    element inside the clip band."""
+    quant = masking.make_quant_program()
+    x = np.array([[a, b]], np.float32)
+    q = np.asarray(quant(x))
+    assert q.dtype == np.int32
+    back = q.astype(np.float64) / masking.SCALE
+    assert np.max(np.abs(back - x.astype(np.float64))) <= 0.5 / \
+        masking.SCALE + 1e-12
+
+
+def test_quantize_clips_outliers():
+    quant = masking.make_quant_program()
+    q = np.asarray(quant(np.array([1e9, -1e9], np.float32)))
+    np.testing.assert_array_equal(
+        q, [int(masking.QCLIP), -int(masking.QCLIP)])
+
+
+@settings(max_examples=15)
+@given(st.integers(min_value=2, max_value=5),
+       st.integers(min_value=0, max_value=10 ** 6))
+def test_reconstruct_equals_unmasked_fold(n_owners, root):
+    """Scientist-side fold of the masked payloads == the unmasked ring
+    sum, bitwise — cancellation through the full encode/fold path."""
+    rng = np.random.default_rng(root)
+    quant = masking.make_quant_program()
+    cuts = [rng.normal(size=(2, 3)).astype(np.float32) * 10
+            for _ in range(n_owners)]
+    qs = [np.asarray(quant(c)) for c in cuts]
+    payloads = []
+    for p in range(n_owners):
+        agg = masking.MaskedAggregator(root, p, n_owners, quant)
+        payloads.append(agg.encode(cuts[p], agg.step_tag(3)))
+    np.testing.assert_array_equal(masking.reconstruct(payloads),
+                                  masking.fold_quantized(qs))
+
+
+def test_masked_payload_is_not_the_plain_quantization():
+    """The wire element differs from the bare quantized cut — the mask
+    actually does something."""
+    quant = masking.make_quant_program()
+    cut = np.ones((2, 2), np.float32)
+    agg = masking.MaskedAggregator(0, 0, 2, quant)
+    pl = agg.encode(cut, agg.step_tag(0))
+    assert pl["mq"].dtype == np.uint32
+    assert not np.array_equal(pl["mq"].view(np.int32),
+                              np.asarray(quant(cut)))
+
+
+def test_single_owner_masking_rejected():
+    with pytest.raises(ValueError, match="2 owners"):
+        masking.MaskedAggregator(0, 0, 1, masking.make_quant_program())
+
+
+def test_warmup_tags_are_generation_scoped_steady_tags_are_not():
+    quant = masking.make_quant_program()
+    a0 = masking.MaskedAggregator(0, 0, 2, quant, generation=0)
+    a1 = masking.MaskedAggregator(0, 0, 2, quant, generation=1)
+    assert a0.warmup_tag(0) != a1.warmup_tag(0)
+    assert a0.step_tag(5) == a1.step_tag(5)
+    # so a respawned owner's replayed steady-state masks still cancel
+    # against gen-0 survivors
+    cut = np.zeros((2, 2), np.float32)
+    b0 = masking.MaskedAggregator(0, 1, 2, quant, generation=0)
+    np.testing.assert_array_equal(
+        masking.reconstruct([a1.encode(cut, a1.step_tag(5)),
+                             b0.encode(cut, b0.step_tag(5))]),
+        np.zeros((2, 2), np.int32))
+
+
+def test_mask_root_env_channel(monkeypatch):
+    monkeypatch.delenv(masking.MASK_ENV, raising=False)
+    assert masking.mask_root_from_env(17) == 17
+    monkeypatch.setenv(masking.MASK_ENV, "99")
+    assert masking.mask_root_from_env(17) == 99
+
+
+# ---------------------------------------------------------------------------
+# protocol bit-identity: masked split == masked joint oracle
+# ---------------------------------------------------------------------------
+
+
+def _run(mode, *, backend="queue", M=1, schedule="pipelined",
+         compression=None, n=300, steps=4, **kw):
+    sci, owners = feature_parties(*make_vertical_mnist_parties(
+        n, seed=0, keep_frac=0.9))
+    s = VerticalSession(sci, owners)
+    s.resolve(group="modp512")
+    s.build(SUM_CFG)
+    fkw = dict(steps=steps, batch_size=64, verbose=False,
+               aggregation="masked_sum", microbatches=M, mode=mode)
+    if mode == "split":
+        fkw.update(backend=backend, schedule=schedule,
+                   compression=compression)
+    fkw.update(kw)
+    h = s.fit(**fkw)
+    return s, h
+
+
+def _leaves(s):
+    return [np.asarray(x) for x in jax.tree_util.tree_leaves(s.params)]
+
+
+_ORACLE: dict = {}
+
+
+def _oracle(M):
+    if M not in _ORACLE:
+        s, h = _run("joint", M=M)
+        _ORACLE[M] = (_leaves(s), [r["loss"] for r in h["train"]])
+    return _ORACLE[M]
+
+
+@pytest.mark.parametrize("backend", ["direct", "queue", "process"])
+@pytest.mark.parametrize("M", [1, 2])
+def test_masked_split_bit_identical_to_masked_joint_oracle(backend, M):
+    """The acceptance property: pairwise-cancelling masks make split
+    masked execution *bitwise* the unmasked (oracle) computation, per
+    backend and microbatch count."""
+    ref_leaves, ref_losses = _oracle(M)
+    s, h = _run("split", backend=backend, M=M)
+    assert [r["loss"] for r in h["train"]] == ref_losses
+    for a, b in zip(_leaves(s), ref_leaves):
+        np.testing.assert_array_equal(a, b)
+    assert s.transport_stats["aggregation"] == "masked_sum"
+
+
+def test_masked_sequential_schedule_bit_identical():
+    ref_leaves, ref_losses = _oracle(1)
+    s, h = _run("split", backend="direct", schedule="sequential")
+    assert [r["loss"] for r in h["train"]] == ref_losses
+    for a, b in zip(_leaves(s), ref_leaves):
+        np.testing.assert_array_equal(a, b)
+
+
+def test_masked_forward_costs_no_extra_wire_bytes():
+    """uint32 ring elements are exactly the 4 bytes/element of the f32
+    cuts they replace: masked and plain forward payload bytes match."""
+    s_plain, _ = _run("split", backend="queue", aggregation=None)
+    s_mask, _ = _run("split", backend="queue")
+    for name in (o.name for o in s_mask.owners):
+        assert (s_mask.transport_stats["per_owner"][name]
+                ["cut_payload_bytes"]
+                == s_plain.transport_stats["per_owner"][name]
+                ["cut_payload_bytes"])
+
+
+def test_masked_composes_with_codec_on_gradient_leg():
+    """compression applies to cut gradients (the forward is ring-coded
+    and bypasses it): fp16 halves gradient payload bytes and training
+    still tracks the oracle within codec tolerance."""
+    _, ref_losses = _oracle(1)
+    s, h = _run("split", backend="queue", compression="fp16")
+    base, _ = _run("split", backend="queue")
+    for name in (o.name for o in s.owners):
+        po, pb = (s.transport_stats["per_owner"][name],
+                  base.transport_stats["per_owner"][name])
+        assert po["grad_payload_bytes"] * 2 == pb["grad_payload_bytes"]
+        assert po["cut_payload_bytes"] == pb["cut_payload_bytes"]
+    for got, ref in zip((r["loss"] for r in h["train"]), ref_losses):
+        assert got == pytest.approx(ref, rel=0.05)
+
+
+def test_masked_requires_sum_combine_and_two_owners():
+    sci, owners = feature_parties(*make_vertical_mnist_parties(
+        60, seed=0))
+    s = VerticalSession(sci, owners)
+    s.resolve(group="modp512")
+    s.build(MNIST_CFG)                       # combine="concat"
+    with pytest.raises(ValueError, match="masked_sum"):
+        s.fit(steps=1, batch_size=16, verbose=False,
+              aggregation="masked_sum")
+    with pytest.raises(ValueError, match="aggregation"):
+        s.fit(steps=1, batch_size=16, verbose=False,
+              aggregation="bogus")
+
+
+def test_masked_metrics_match_plain_sum_within_quantization():
+    """masked_sum is plain sum combine up to the 2^-16 fixed-point
+    quantization: per-step losses track the float path closely."""
+    sci, owners = feature_parties(*make_vertical_mnist_parties(
+        300, seed=0, keep_frac=0.9))
+    s = VerticalSession(sci, owners)
+    s.resolve(group="modp512")
+    s.build(SUM_CFG)
+    h_plain = s.fit(steps=4, batch_size=64, verbose=False)
+    _, h_mask = _run("joint")
+    for a, b in zip(h_plain["train"], h_mask["train"]):
+        assert a["loss"] == pytest.approx(b["loss"], abs=1e-3)

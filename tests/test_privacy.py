@@ -1,10 +1,16 @@
-"""Privacy hooks: distance correlation properties, cut noise, NoPeek."""
+"""Privacy hooks: distance correlation properties, cut noise, NoPeek,
+wire defences, and the norm-attack AUC metric."""
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
 
-from repro.core.privacy import (distance_correlation, gaussian_cut_noise,
-                                nopeek_penalty)
+from repro.core.privacy import (deterministic_cut_noise,
+                                distance_correlation, gaussian_cut_noise,
+                                label_inference_auc, nopeek_penalty,
+                                obfuscate_cut_gradient)
+from repro.testing.hypo import given, settings
+from repro.testing.hypo import strategies as st
 
 
 def test_dcor_of_identical_is_one():
@@ -66,3 +72,119 @@ def test_nopeek_reduces_under_noise():
     d_clean = float(distance_correlation(x, clean))
     d_noisy = float(distance_correlation(x, noisy))
     assert d_noisy < d_clean
+
+
+# ---------------------------------------------------------------------------
+# property tests (hypothesis via repro.testing.hypo)
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=15)
+@given(st.integers(min_value=0, max_value=10 ** 6),
+       st.integers(min_value=8, max_value=48),
+       st.integers(min_value=2, max_value=8))
+def test_dcor_bounded_and_symmetric(seed, batch, dim):
+    """dcor in [0, 1] and dcor(x, z) == dcor(z, x) for arbitrary
+    batches."""
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.normal(size=(batch, dim)))
+    z = jnp.asarray(rng.normal(size=(batch, dim + 1)) * 3.0)
+    d_xz = float(distance_correlation(x, z))
+    d_zx = float(distance_correlation(z, x))
+    assert -1e-6 <= d_xz <= 1.0 + 1e-6
+    assert d_xz == pytest.approx(d_zx, abs=1e-5)
+
+
+@settings(max_examples=10)
+@given(st.integers(min_value=0, max_value=10 ** 6))
+def test_dcor_copies_near_one_independent_near_zero(seed):
+    """dcor(x, x) ≈ 1 always; large independent batches score near 0
+    (small-sample bias shrinks with B)."""
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.normal(size=(256, 6)))
+    z = jnp.asarray(rng.normal(size=(256, 6)))
+    assert float(distance_correlation(x, x)) == pytest.approx(1.0,
+                                                              abs=1e-4)
+    # finite-sample dcor of independent batches has positive bias
+    # (O(B^-1/2) scale) — bound it well below the dependent regime
+    assert float(distance_correlation(x, z)) < 0.4
+
+
+@settings(max_examples=10)
+@given(st.floats(min_value=1e-3, max_value=10.0),
+       st.integers(min_value=0, max_value=10 ** 6))
+def test_nopeek_gradients_finite_at_weight_boundaries(weight, seed):
+    """grad of the NoPeek penalty stays finite across the weight range
+    even for degenerate inputs (duplicated rows — zero pairwise
+    distances — are the sqrt'(0) danger zone the 1e-12 floor exists
+    for).  Uses the stacked-owner convention: (P, B, F) vs (P, B, k)."""
+    rng = np.random.default_rng(seed)
+    # duplicate rows within each owner's batch
+    x = np.repeat(rng.normal(size=(2, 8, 4)), 2, axis=1)
+    z0 = jnp.asarray(np.repeat(rng.normal(size=(2, 8, 3)), 2, axis=1))
+
+    def pen(z):
+        return nopeek_penalty(jnp.asarray(x), z, weight)
+
+    g = jax.grad(pen)(z0)
+    assert np.all(np.isfinite(np.asarray(g)))
+    assert np.isfinite(float(pen(z0)))
+
+
+# ---------------------------------------------------------------------------
+# wire defences (deterministic transforms on shipped tensors)
+# ---------------------------------------------------------------------------
+
+
+def test_deterministic_cut_noise_replays_bitwise():
+    cut = np.random.default_rng(0).normal(size=(16, 8)).astype(np.float32)
+    a = deterministic_cut_noise(cut, 0.3, seed=7, tag="s3")
+    b = deterministic_cut_noise(cut, 0.3, seed=7, tag="s3")
+    np.testing.assert_array_equal(a, b)
+    assert not np.array_equal(
+        a, deterministic_cut_noise(cut, 0.3, seed=7, tag="s4"))
+    np.testing.assert_array_equal(
+        deterministic_cut_noise(cut, 0.0, seed=7, tag="s3"), cut)
+
+
+def test_grad_norm_mode_unit_equalizes_per_example_norms():
+    g = np.random.default_rng(1).normal(size=(32, 8)).astype(np.float32)
+    g[::2] *= 25.0                      # norm signal
+    out = obfuscate_cut_gradient(g, norm_mode="unit")
+    norms = np.linalg.norm(out.reshape(32, -1), axis=1)
+    assert np.std(norms) / np.mean(norms) < 1e-5
+    # directions preserved per example
+    cos = np.sum(out * g, axis=1) / (
+        np.linalg.norm(out, axis=1) * np.linalg.norm(g, axis=1))
+    np.testing.assert_allclose(cos, 1.0, atol=1e-5)
+
+
+def test_grad_norm_mode_sign_collapses_magnitudes():
+    g = np.random.default_rng(2).normal(size=(16, 4)).astype(np.float32)
+    out = obfuscate_cut_gradient(g, norm_mode="sign")
+    mags = np.unique(np.abs(out[out != 0.0]))
+    assert len(mags) == 1               # one common magnitude
+    np.testing.assert_array_equal(np.sign(out), np.sign(g))
+
+
+def test_obfuscate_rejects_unknown_mode_and_replays_noise():
+    g = np.ones((4, 4), np.float32)
+    with pytest.raises(ValueError, match="grad_norm_mode"):
+        obfuscate_cut_gradient(g, norm_mode="bogus")
+    a = obfuscate_cut_gradient(g, noise_std=0.5, seed=3, tag="g1o0")
+    b = obfuscate_cut_gradient(g, noise_std=0.5, seed=3, tag="g1o0")
+    np.testing.assert_array_equal(a, b)
+    assert not np.array_equal(
+        a, obfuscate_cut_gradient(g, noise_std=0.5, seed=3, tag="g1o1"))
+
+
+def test_label_inference_auc_detects_norm_signal():
+    rng = np.random.default_rng(4)
+    labels = rng.random(400) < 0.15
+    norms = rng.normal(1.0, 0.05, 400)
+    norms[labels] += 1.0                # positives have larger grads
+    assert label_inference_auc(norms, labels) > 0.95
+    # no signal -> chance; degenerate labels -> exactly chance
+    assert abs(label_inference_auc(rng.normal(size=400), labels)
+               - 0.5) < 0.1
+    assert label_inference_auc(norms, np.zeros(400, bool)) == 0.5

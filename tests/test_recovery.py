@@ -260,6 +260,58 @@ def test_chaos_matrix_fit_recovers_bit_identically(backend, fault):
     assert sup_stats is not None and sup_stats["heartbeats_sent"] >= 0
 
 
+_MASKED_REF: dict = {}
+
+
+def _masked_fit(backend, env=None, *, timeout=15.0):
+    """Supervised masked-sum split fit (sum-combine config), optionally
+    under a chaos plan."""
+    import dataclasses
+
+    import jax
+
+    def inner():
+        sci, owners = make_vertical_mnist_parties(300, seed=0,
+                                                  keep_frac=0.9)
+        s = VerticalSession(*feature_parties(sci, owners))
+        s.resolve(group="modp512")
+        s.build(dataclasses.replace(MNIST_CFG, split=dataclasses.replace(
+            MNIST_CFG.split, combine="sum")))
+        h = s.fit(steps=_STEPS, batch_size=64, verbose=False,
+                  mode="split", backend=backend, supervise=True,
+                  aggregation="masked_sum", timeout=timeout)
+        leaves = [np.asarray(x)
+                  for x in jax.tree_util.tree_leaves(s.params)]
+        return s, leaves, [r["loss"] for r in h["train"]]
+
+    if env:
+        with pytest.MonkeyPatch.context() as mp_:
+            mp_.setenv(faults.CHAOS_ENV, env)
+            return inner()
+    return inner()
+
+
+@pytest.mark.parametrize("backend", ["queue", "process"])
+def test_chaos_masked_sum_recovers_bit_identically(backend):
+    """A mid-run owner crash during a masked-sum fit must recover to
+    the bitwise fault-free result: the respawned owner (generation 1)
+    re-derives the same steady-state masks (tags are generation-
+    agnostic) so replayed frames still cancel against the survivor."""
+    if backend not in _MASKED_REF:
+        _, leaves, losses = _masked_fit(backend)
+        _MASKED_REF[backend] = (leaves, losses)
+    ref_leaves, ref_losses = _MASKED_REF[backend]
+    env = faults.FaultPlan([faults.Fault(
+        "owner0", "crash", "head_fwd", occurrence=None, step=3)]).to_env()
+    s, leaves, losses = _masked_fit(backend, env)
+    assert s.recovery_events, "fault never fired / never recovered"
+    assert s.recovery_events[-1]["action"] == "respawn"
+    assert losses == ref_losses
+    for a, b in zip(leaves, ref_leaves):
+        np.testing.assert_array_equal(a, b)
+    assert s.transport_stats["aggregation"] == "masked_sum"
+
+
 @pytest.mark.parametrize("backend", ["queue", "process"])
 def test_chaos_matrix_psi_crash_retries(backend):
     """crash_psi: the owner's PSI worker dies on the first blind chunk;

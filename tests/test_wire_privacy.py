@@ -1,0 +1,148 @@
+"""Wire-privacy regression: what actually crosses the boundary during
+a masked-sum fit (WIRE_PROTOCOL.md invariant 11).
+
+These tests tap every serialized frame of real training runs — the
+same observed-traffic discipline as the PSI privacy tests — and assert
+that NO frame of a masked run carries a per-owner unmasked activation,
+in any encoding the protocol could accidentally emit (raw f32 bytes,
+the bare fixed-point quantization) nor as a statistical shadow
+(correlation of the ring elements with the true cut).
+"""
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.configs.pyvertical_mnist import CONFIG as MNIST_CFG
+from repro.core import masking
+from repro.data import make_vertical_mnist_parties
+from repro.federation import VerticalSession, feature_parties, transport
+from repro.federation.transport import _unpack
+
+SUM_CFG = dataclasses.replace(MNIST_CFG, split=dataclasses.replace(
+    MNIST_CFG.split, combine="sum"))
+
+_CACHE: dict = {}
+
+
+def _fit_with_tap(aggregation):
+    """Split fit on the queue backend with every serialized frame
+    captured.  Returns [(sender, kind, blob)]."""
+    if aggregation in _CACHE:
+        return _CACHE[aggregation]
+    captured = []
+    orig = transport.channel_pair
+
+    def tapped(a, b, **kw):
+        kw["tap"] = lambda msg, blob: captured.append(
+            (msg.sender, msg.kind, blob))
+        return orig(a, b, **kw)
+
+    transport.channel_pair = tapped
+    try:
+        sci, owners = make_vertical_mnist_parties(200, seed=0,
+                                                  keep_frac=0.9)
+        s = VerticalSession(*feature_parties(sci, owners))
+        s.resolve(group="modp512")
+        s.build(SUM_CFG)
+        s.fit(steps=2, batch_size=64, verbose=False, mode="split",
+              backend="queue", aggregation=aggregation)
+    finally:
+        transport.channel_pair = orig
+    _CACHE[aggregation] = captured
+    return captured
+
+
+def _owner_cuts(captured):
+    """-> {(sender, kind, seq-order-index): payload dict} for every
+    owner->scientist cut-bearing frame."""
+    out = []
+    for sender, kind, blob in captured:
+        if sender != "scientist" and kind in ("cut_activations",
+                                              "warmup_cuts"):
+            out.append((sender, kind, _unpack(blob)))
+    return out
+
+
+def test_masked_run_ships_no_unmasked_activation_bytes():
+    """Exact-bytes check: the f32 cut an owner would have shipped in a
+    plain run — and its bare fixed-point quantization — appear nowhere
+    in ANY frame of the masked run.  Both runs share init params and
+    batch order, so the plain step-0/warmup cuts are byte-for-byte what
+    the masked owners computed before masking."""
+    plain = _fit_with_tap(None)
+    masked = _fit_with_tap("masked_sum")
+    quant = masking.make_quant_program()
+    haystack = b"\x00".join(blob for _, _, blob in masked)
+    needles = 0
+    for sender, kind, payload in _owner_cuts(plain):
+        cut = np.asarray(payload["x"], np.float32)
+        for needle in (cut.tobytes(),
+                       np.asarray(quant(cut)).tobytes()):
+            assert needle not in haystack, \
+                f"unmasked {kind} bytes from {sender} on the wire"
+            needles += 1
+    assert needles >= 8          # 2 owners x (warmup + 2 steps) x 2
+
+
+def test_masked_frames_carry_only_ring_elements():
+    """Schema check on observed traffic: every cut-bearing frame of a
+    masked run is ring-coded — a uint32 ``mq`` entry (plus at most the
+    f32 ``aux`` scalar), never an ``x``/``qp`` codec entry."""
+    masked = _fit_with_tap("masked_sum")
+    frames = _owner_cuts(masked)
+    assert frames, "tap captured no owner cut traffic"
+    for sender, kind, payload in frames:
+        assert set(payload) <= {"mq", "aux"}, (sender, kind)
+        assert payload["mq"].dtype == np.uint32
+
+
+def test_ring_elements_are_uncorrelated_with_the_true_cut():
+    """Statistical check: the shipped ring element mq = q + mask is
+    uniform mod 2^32 — it neither correlates with the true quantized
+    cut nor concentrates in the small-integer band the bare
+    quantization lives in."""
+    plain = _fit_with_tap(None)
+    masked = _fit_with_tap("masked_sum")
+    quant = masking.make_quant_program()
+    # owner threads interleave nondeterministically on the global tap —
+    # match frames within each (sender, kind) FIFO stream
+    def streams(frames):
+        out: dict = {}
+        for sender, kind, payload in frames:
+            out.setdefault((sender, kind), []).append(payload)
+        return out
+
+    plain_s, masked_s = streams(_owner_cuts(plain)), streams(
+        _owner_cuts(masked))
+    assert set(plain_s) == set(masked_s)
+    checked = 0
+    for key in sorted(plain_s):
+        assert len(plain_s[key]) == len(masked_s[key])
+        for pl_p, pl_m in zip(plain_s[key], masked_s[key]):
+            q = np.asarray(quant(np.asarray(pl_p["x"], np.float32)),
+                           np.int64).ravel()
+            mq = pl_m["mq"].view(np.int32).astype(np.int64).ravel()
+            if np.std(q) == 0:
+                continue
+            r = np.corrcoef(q, mq)[0, 1]
+            assert abs(r) < 0.1, \
+                f"ring element correlates with cut: {r}"
+            # bare quantization lives in ±2^24: a masked element
+            # landing there is a coin flip per element, never the
+            # whole frame
+            in_band = np.mean(np.abs(mq) <= masking.QCLIP)
+            assert in_band < 0.05, \
+                "masked frame not uniform over the ring"
+            checked += 1
+    assert checked >= 4
+
+
+def test_plain_run_does_leak_the_cut_bytes():
+    """Control for the exact-bytes check: in the PLAIN run the cut
+    bytes trivially are on the wire — so the masked-run assertion above
+    is falsifiable, not vacuous."""
+    plain = _fit_with_tap(None)
+    haystack = b"\x00".join(blob for _, _, blob in plain)
+    sender, kind, payload = _owner_cuts(plain)[0]
+    assert np.asarray(payload["x"], np.float32).tobytes() in haystack

@@ -1,0 +1,79 @@
+#!/usr/bin/env python
+"""Privacy-attack smoke gate (CI `privacy-attack` job).
+
+Runs the transcript-attack harness (tests/attacks/harness.py) against
+real captured wire traffic with each defense off and on, prints the
+leakage table, and exits nonzero unless EVERY defense makes its
+attacker strictly worse off:
+
+  * model inversion (held-out R^2) and dcor leakage must drop under
+    ``cut_noise_std`` and under ``aggregation="masked_sum"``;
+  * the norm attack's label-inference AUC must drop under
+    ``grad_noise_std`` and both ``grad_norm_mode`` settings.
+
+Usage:  PYTHONPATH=src:tests python tools/attack_check.py [--steps N]
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+sys.path.insert(0, os.path.join(ROOT, "src"))
+sys.path.insert(0, os.path.join(ROOT, "tests"))
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=6)
+    ap.add_argument("--n", type=int, default=256)
+    args = ap.parse_args()
+
+    from attacks import harness as H
+
+    kw = dict(steps=args.steps, n=args.n)
+    base = H.capture_transcript(**kw)
+    runs = {
+        "cut_noise": H.capture_transcript(cut_noise_std=2.0, **kw),
+        "masked_sum": H.capture_transcript(aggregation="masked_sum",
+                                           **kw),
+        "grad_noise": H.capture_transcript(grad_noise_std=0.05, **kw),
+        "grad_unit": H.capture_transcript(grad_norm_mode="unit", **kw),
+        "grad_sign": H.capture_transcript(grad_norm_mode="sign", **kw),
+    }
+    owners = sorted(base.cuts)
+
+    failures = []
+
+    def check(label, attacker, baseline, defended):
+        gap = baseline - defended
+        ok = gap > 0
+        print(f"{attacker:22s} {label:12s} baseline={baseline:+.4f} "
+              f"defended={defended:+.4f} gap={gap:+.4f} "
+              f"{'ok' if ok else 'FAIL'}")
+        if not ok:
+            failures.append((attacker, label))
+
+    for defense in ("cut_noise", "masked_sum"):
+        for owner in owners:
+            check(defense, f"inversion_r2[{owner}]",
+                  H.inversion_r2(base, owner),
+                  H.inversion_r2(runs[defense], owner))
+            check(defense, f"dcor[{owner}]",
+                  H.dcor_leakage(base, owner),
+                  H.dcor_leakage(runs[defense], owner))
+    for defense in ("grad_noise", "grad_unit", "grad_sign"):
+        check(defense, "norm_auc",
+              H.norm_attack_auc(base),
+              H.norm_attack_auc(runs[defense]))
+
+    if failures:
+        print(f"\n{len(failures)} defense(s) failed to reduce leakage")
+        return 1
+    print("\nall defenses strictly reduce attacker leakage")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -37,6 +37,7 @@ EXAMPLES = (
     ("examples/serve_split.py",
      ("--ctx", "32", "--new", "4", "--batch", "2", "--n-batches", "2",
       "--continuous", "--sessions", "2", "--transport", "queue")),
+    ("examples/privacy_defense.py", ("--fast",)),
 )
 SKIP_MARK = "<!-- docs-check: skip -->"
 TIMEOUT_S = 1200
