@@ -58,7 +58,8 @@ def _rule(key: str):
                "bit_identical", "cut_cache_hits", "slot_refills",
                "repeat_head_prefills", "repeat_token_bitwise",
                "meets_1p3_floor", "n_recoveries",
-               "leakage_gap_positive"):
+               "leakage_gap_positive", "churn", "full_modexp_ops",
+               "delta_modexp_ops"):
         return ("exact", None)      # deterministic protocol structure
     # attacker leakage scores: deterministic runs, but float-op order
     # may drift across platforms — absolute bands well inside the

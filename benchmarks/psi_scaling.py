@@ -23,6 +23,11 @@ axes and writes ``BENCH_psi.json``:
     the 8 ms round adds far less than the sequential floor of
     ``n_chunks x RTT``, and that a repeat round with the same owner
     transfers zero blind-upload bytes (measured, exact-checked).
+  * ``delta_gate`` — streaming-population resolution (ISSUE 10): after
+    1% ID churn the repeat resolve must stay O(Δ) — hard-asserted at
+    <= 0.05x the full round's modexp ops and wire bytes on every run,
+    with the op/byte counts exact-checked against the committed
+    baseline.  Carries an informational hidden-mode overhead row.
   * ``wire_sweep`` — latency x chunk_size wall-clock rows (full runs
     only; informational, skipped by ``--check``).
   * the engine's invariant — the parallel/chunked round is bit-identical
@@ -284,6 +289,117 @@ def _wire_gate_section(n=256, overlap=0.5, group="modp512",
     }
 
 
+def _hidden_wire_round(n, overlap, group, chunk_size):
+    """One fresh ``mode="hidden"`` resolve over the queue backend.
+    Returns (seconds, stats, client_endpoint).  The intersection is a
+    padded pseudonym list, so the caller checks ``hidden_kept`` rather
+    than raw membership."""
+    import threading
+
+    from repro.federation import transport
+    from repro.federation.psi_transport import (PSIServerEndpoint,
+                                                wire_psi_round)
+
+    cl_items, sv_items = _mk_sets(n, overlap)
+    client = PSIClient(cl_items, group, mode="hidden")
+    server = PSIServer(sv_items, group=group)
+    ep_c, ep_s = transport.channel_pair("scientist", "owner0",
+                                        backend="queue")
+    worker = PSIServerEndpoint("owner0", server, ep_s)
+    th = threading.Thread(target=worker.run, daemon=True)
+    th.start()
+    try:
+        t0 = time.perf_counter()
+        inter, stats = wire_psi_round(client, ep_c, worker=worker,
+                                      chunk_size=chunk_size)
+        dt = time.perf_counter() - t0
+    finally:
+        ep_c.send("psi_stop", {})
+        th.join(timeout=10.0)
+    assert len(inter) == stats["hidden_kept"]
+    return dt, stats, ep_c
+
+
+def _delta_gate_section(n=10_000, churn_frac=0.01, overlap=0.5,
+                        group="modp512", chunk_size=DEFAULT_CHUNK):
+    """Delta-resolution gate (ISSUE 10): after churning ``churn_frac``
+    of a streaming population, the repeat resolve must cost O(Δ) —
+    hard-asserted at <= 0.05x the full round's modexp ops AND wire
+    bytes, with the aligned IDs bit-identical to a from-scratch client.
+    Byte counts and op counts are exact-checked by ``benchmarks.check``;
+    the ``informational`` hidden-mode overhead row is skipped by
+    ``--check`` (wall-clock only)."""
+    d = max(1, int(n * churn_frac))
+
+    # round 1: fresh parties, full protocol
+    dt_full, _, st1, ep1, client, worker = _wire_round(
+        n, overlap, group, chunk_size, 0.0)
+    full_ops = st1["client_modexp_ops"] + st1["server_modexp_ops"]
+    full_up = ep1.sent_stats["wire_bytes"]
+    full_wire = full_up + ep1.recv_stats["wire_bytes"]
+
+    # churn: drop the first d ids, append d fresh ones (both outside the
+    # server set at overlap 0.5, so the intersection itself is unchanged
+    # and _wire_round's from-scratch expectation still certifies it)
+    new_ids = ([f"id-{i}" for i in range(d, n)]
+               + [f"fresh-{i}" for i in range(d)])
+    ops0 = client.ops
+    client.update_items(new_ids)
+    update_ops = client.ops - ops0      # only the d added ids blind
+    dt_delta, inter2, st2, ep2, client, worker = _wire_round(
+        n, overlap, group, chunk_size, 0.0, client=client, worker=worker)
+    assert st2["delta_used"] and st2["server_leg_skipped"], \
+        "delta resolution path lost (full re-upload happened)"
+    delta_ops = (update_ops + st2["client_modexp_ops"]
+                 + st2["server_modexp_ops"])
+    delta_up = ep2.sent_stats["wire_bytes"]
+    delta_wire = delta_up + ep2.recv_stats["wire_bytes"]
+
+    # bit-identity: a from-scratch client over the churned population
+    # resolves to the same IDs through the in-process engine
+    ref_inter, _ = psi_round(PSIClient(list(client.items), group),
+                             worker.server, chunk_size=chunk_size)
+    assert sorted(inter2) == sorted(ref_inter), \
+        "delta round diverged from a from-scratch resolve"
+
+    ops_share = delta_ops / max(full_ops, 1)
+    wire_share = delta_wire / max(full_wire, 1)
+    assert ops_share <= 0.05, \
+        (f"delta resolve is no longer O(Δ) in modexp ops: "
+         f"{delta_ops} vs full {full_ops} ({ops_share:.3f} > 0.05)")
+    assert wire_share <= 0.05, \
+        (f"delta resolve is no longer O(Δ) in wire bytes: "
+         f"{delta_wire} vs full {full_wire} ({wire_share:.3f} > 0.05)")
+
+    # informational: what membership hiding costs over noinv, same size
+    hn, hc = 2000, 256
+    noi_dt, _, noi_st, _, noi_cl, _ = _wire_round(hn, overlap, group,
+                                                  hc, 0.0)
+    hid_dt, hid_st, hid_ep = _hidden_wire_round(hn, overlap, group, hc)
+    return {
+        "n": n, "churn": d, "chunk_size": chunk_size,
+        "full_round_ms": 1e3 * dt_full,
+        "delta_round_ms": 1e3 * dt_delta,
+        "full_modexp_ops": full_ops,
+        "delta_modexp_ops": delta_ops,
+        "full_wire_bytes": full_wire,
+        "delta_wire_bytes": delta_wire,
+        "full_upload_wire_bytes": full_up,
+        "delta_upload_wire_bytes": delta_up,
+        "delta_ops_share": ops_share,
+        "delta_wire_share": wire_share,
+        "informational": {
+            "hidden_n": hn,
+            "hidden_round_ms": 1e3 * hid_dt,
+            "noinv_round_ms": 1e3 * noi_dt,
+            "hidden_overhead": hid_dt / max(noi_dt, 1e-9),
+            "hidden_wire_bytes": (hid_ep.sent_stats["wire_bytes"]
+                                  + hid_ep.recv_stats["wire_bytes"]),
+            "hidden_kept": hid_st["hidden_kept"],
+        },
+    }
+
+
 def _wire_sweep(n=1024, overlap=0.5, group="modp512",
                 latencies=(0.0, 2e-3, 8e-3), chunks=(32, 128, 512)):
     """latency x chunk_size wall-clock surface (informational)."""
@@ -324,6 +440,14 @@ def run(sizes=(10_000, 100_000, 1_000_000), overlap=0.5, group="modp512",
                  1e3 * w["queue_latency_round_ms"],
                  f"latency_amortization={w['latency_amortization']:.2f}x "
                  f"reuse_upload={w['repeat_upload_wire_bytes']}B"))
+
+    report["delta_gate"] = dg = _delta_gate_section(
+        n=gate_n, group=group, chunk_size=chunk_size)
+    rows.append((f"psi_delta_n{dg['n']}", dg["delta_round_ms"],
+                 f"ops_share={dg['delta_ops_share']:.4f} "
+                 f"wire_share={dg['delta_wire_share']:.4f} "
+                 f"hidden_overhead="
+                 f"{dg['informational']['hidden_overhead']:.2f}x"))
 
     if trajectory:
         report["wire_sweep"] = _wire_sweep(group=group)

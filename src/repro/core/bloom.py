@@ -227,6 +227,18 @@ class ShardedBloom:
         multi-MB blob."""
         return [s.to_bytes() for s in self.shards]
 
+    def content_tag(self) -> bytes:
+        """16-byte content tag over the shard frames + geometry — equal
+        filters get equal tags, which is what lets a client skip
+        re-downloading a response leg it already holds (the PSI
+        ``server_tag`` handshake)."""
+        h = hashlib.sha256()
+        h.update(f"{self.n_shards}:{self.shards[0].m}:"
+                 f"{self.shards[0].k}".encode())
+        for frame in self.shard_frames():
+            h.update(frame)
+        return h.digest()[:16]
+
     def merge(self, other: "ShardedBloom") -> "ShardedBloom":
         if self.n_shards != other.n_shards:
             raise ValueError("shard count mismatch")

@@ -60,8 +60,10 @@ packed big-int buffers, and the worker pool):
 """
 from __future__ import annotations
 
+import hashlib
 import secrets
-from typing import Callable, Iterator, List, Optional, Sequence, Tuple
+from typing import (Callable, Dict, Iterator, List, Optional, Sequence,
+                    Tuple)
 
 from repro.core.bloom import ShardedBloom
 from repro.core.modexp import (ModexpPool, hash_to_group as _hash_to_group,
@@ -123,6 +125,38 @@ DEFAULT_CHUNK = 4096
 #:             α^{-1} — one full-width-exponent leg per session.
 DEFAULT_MODE = "noinv"
 
+#: all protocol variants.  "hidden" is the membership-hiding variant:
+#: noinv machinery, but the *owner* performs the match (the double-blind
+#: leg never returns to the client) and replies with a padded keep-set
+#: of client row positions — the scientist learns an aligned row order,
+#: never which raw IDs matched (see ``_round_hidden``).
+MODES = ("noinv", "bloom", "hidden")
+
+#: membership-hiding pad quantum: the keep-set is padded with
+#: deterministic decoy positions up to a multiple of this, so the frame
+#: length quantizes away ±1 membership differences (invariant 12)
+HIDDEN_PAD = 32
+
+#: Knuth multiplicative hash constant — maps a decoy keep-position to a
+#: deterministic pseudo-row so decoy map entries are byte-uniform with
+#: member entries (and bit-stable across backends/sessions)
+_DECOY_MULT = 2654435761
+
+
+def blind_tag(blinded_packed: bytes) -> bytes:
+    """16-byte content tag of a packed blinded set.  Derived from
+    already-blinded group elements, so it reveals nothing the blob
+    itself doesn't; equal blobs get equal tags, which is what lets a
+    peer skip a byte-identical retransmission (and what addresses the
+    delta protocol's base-state check)."""
+    return hashlib.sha256(blinded_packed).digest()[:16]
+
+
+def decoy_row(position: int, n_rows: int) -> int:
+    """The deterministic pseudo-row a hidden-mode decoy position maps
+    to.  Pure data-determined arithmetic: bit-stable across backends."""
+    return (position * _DECOY_MULT) % max(1, n_rows)
+
 
 def hash_to_group(item: bytes, prime: int = PRIME, nbytes: int = 256) -> int:
     """H(x) = (sha256-derived integer mod p)^2 — lands in QR_p (order q).
@@ -167,7 +201,7 @@ class PSIClient:
 
     def __init__(self, items: Sequence[str], group: str = "modp2048",
                  exp_bits=AUTO, mode: str = DEFAULT_MODE):
-        if mode not in ("noinv", "bloom"):
+        if mode not in MODES:
             raise ValueError(f"unknown PSI mode {mode!r}")
         self.items = items
         self.group = group
@@ -185,6 +219,17 @@ class PSIClient:
             #                                     bloom-compat surface asks
         self._blinded_packed: Optional[bytes] = None
         self._blinded: Optional[List[int]] = None
+        #: cumulative modular exponentiations submitted by this client
+        #: (one per set element per leg) — the delta gate's cost metric
+        self.ops = 0
+        # delta-resolution state: ``_base_*`` snapshot the last state a
+        # peer may hold cached; ``_delta`` is the base -> current diff
+        self._delta: Optional[dict] = None
+        self._base_items: Optional[List[str]] = None
+        self._base_packed: Optional[bytes] = None
+        #: per-peer cached round artifacts (written only on round
+        #: success by the wire driver) — keyed by owner name
+        self.round_cache: Dict[str, dict] = {}
 
     # -- blinding ----------------------------------------------------------
     def blind_packed(self, pool: Optional[ModexpPool] = None,
@@ -195,6 +240,7 @@ class PSIClient:
         if self._blinded_packed is None:
             pool = pool or ModexpPool(0)
             items, p, nb, a = self.items, self._p, self._nb, self._blind_exp
+            self.ops += len(items)
             parts = pool.imap(
                 hashpow_chunk,
                 ((list(items[lo:hi]), a, p, nb)
@@ -215,6 +261,104 @@ class PSIClient:
         tests rely on."""
         self._blinded_packed = None
         self._blinded = None
+        self._delta = None
+        self._base_items = None
+        self._base_packed = None
+        self.round_cache.clear()
+
+    # -- delta resolution --------------------------------------------------
+    def update_items(self, new_items: Sequence[str],
+                     pool: Optional[ModexpPool] = None,
+                     chunk_size: int = DEFAULT_CHUNK) -> None:
+        """Replace the client's item set with ``new_items``, splicing the
+        memoized blinded set in O(Δ) modexp (only genuinely *new* items
+        are hash+blinded) and recording a base -> current diff the wire
+        driver ships as a ``psi_delta_chunk`` (removal tombstones +
+        appended additions) instead of a full re-upload.
+
+        Multiset semantics; the retained items keep their base positional
+        order (additions append), so the recorded removal positions index
+        into the base upload a peer holds cached.  The base snapshot is
+        rebased lazily: consecutive updates before the next round compose
+        into one diff against the same base.  When nothing was blinded
+        yet, when no items survive (100% churn), or when the diff would
+        outweigh a full upload, the delta is dropped and the next round
+        falls back to the full protocol."""
+        from collections import Counter
+        new = list(new_items)
+        nb = self._nb
+        if list(self.items) == new:
+            return
+        if self._blinded_packed is None:
+            self.items = new
+            self._delta = None
+            return
+        if self._delta is None:
+            # rebase: current state is what peers may have cached
+            self._base_items = list(self.items)
+            self._base_packed = self._blinded_packed
+        base_items, base_packed = self._base_items, self._base_packed
+
+        # multiset diff base -> new: keep the first new-count occurrences
+        # of every base item (positional order), append the surplus
+        new_counts = Counter(new)
+        quota = dict(new_counts)
+        retained: List[int] = []
+        removed: List[int] = []
+        for i, it in enumerate(base_items):
+            if quota.get(it, 0) > 0:
+                quota[it] -= 1
+                retained.append(i)
+            else:
+                removed.append(i)
+        surplus = {k: v for k, v in quota.items() if v > 0}
+        added: List[str] = []
+        for it in new:
+            if surplus.get(it, 0) > 0:
+                surplus[it] -= 1
+                added.append(it)
+
+        added_packed = b""
+        if added:
+            pool = pool or ModexpPool(0)
+            p, a = self._p, self._blind_exp
+            self.ops += len(added)
+            added_packed = b"".join(pool.imap(
+                hashpow_chunk,
+                ((added[lo:hi], a, p, nb)
+                 for lo, hi in _chunk_slices(len(added), chunk_size))))
+
+        import numpy as np
+        rows = np.frombuffer(base_packed, np.uint8).reshape(-1, nb)
+        kept = rows[retained].tobytes() if retained else b""
+        self._blinded_packed = kept + added_packed
+        self._blinded = None
+        self.items = [base_items[i] for i in retained] + added
+
+        delta_bytes = len(added_packed) + 8 * len(removed)
+        worthwhile = (retained
+                      and delta_bytes < len(self._blinded_packed)
+                      and (removed or added))
+        if not (removed or added):
+            self._delta = None          # empty delta: tags already equal
+        elif worthwhile:
+            self._delta = {
+                "base_tag": blind_tag(base_packed),
+                "tag": blind_tag(self._blinded_packed),
+                "retained": retained,
+                "removed": removed,
+                "added_packed": added_packed,
+            }
+        else:                           # 100% churn / diff >= full upload
+            self._delta = None
+
+    def rebase_delta(self) -> None:
+        """Forget the delta base (typically after every peer has seen
+        the current upload): the next ``update_items`` diffs against the
+        state as of this call, keeping composed diffs bounded."""
+        self._delta = None
+        self._base_items = None
+        self._base_packed = None
 
     # -- unblind + membership (bloom-mode legs) ----------------------------
     @property
@@ -273,15 +417,29 @@ class PSIServer:
     across rounds with the same client."""
 
     def __init__(self, items: Sequence[str], fp_rate: float = 1e-9,
-                 group: str = "modp2048", exp_bits=AUTO):
+                 group: str = "modp2048", exp_bits=AUTO,
+                 beta: Optional[int] = None):
         self.items = items
         self.fp_rate = fp_rate
         self.group = group
         self._p, self._q, self._nb = GROUPS[group]
-        self._beta = _sample_exponent(self._q,
-                                      _resolve_exp_bits(exp_bits, group))
+        # ``beta`` re-injects an existing session secret — a respawned
+        # owner worker must reproduce byte-identical response legs, or
+        # every client-side content-tag cache would miss
+        self._beta = (beta if beta is not None else
+                      _sample_exponent(self._q,
+                                       _resolve_exp_bits(exp_bits, group)))
         self._bloom: Optional[ShardedBloom] = None
         self._own_packed: Optional[bytes] = None
+        #: shuffled-position -> own row index, retained alongside
+        #: ``_own_packed`` (hidden mode matches on the owner's side and
+        #: must map a matched shuffled element back to its data row)
+        self._own_rows: Optional[List[int]] = None
+        # per-item blinded elements (H(y)^β), kept so owner-side churn
+        # re-blinds only genuinely new items (O(Δ) modexp)
+        self._own_elems: Dict[str, bytes] = {}
+        #: cumulative modular exponentiations performed by this server
+        self.ops = 0
 
     def build_bloom(self, pool: Optional[ModexpPool] = None,
                     chunk_size: int = DEFAULT_CHUNK) -> ShardedBloom:
@@ -290,6 +448,7 @@ class PSIServer:
         if self._bloom is None:
             pool = pool or ModexpPool(0)
             items, p, nb, b = self.items, self._p, self._nb, self._beta
+            self.ops += len(items)
             bf = ShardedBloom.for_capacity(len(items), self.fp_rate)
             for packed in pool.imap(
                     hashpow_chunk,
@@ -305,6 +464,26 @@ class PSIServer:
         :meth:`PSIClient.reset_session`."""
         self._bloom = None
         self._own_packed = None
+        self._own_rows = None
+        self._own_elems = {}
+
+    def update_items(self, new_items: Sequence[str]) -> None:
+        """Replace the owner's item set.  The per-item blinded elements
+        are kept, so re-deriving the response leg costs O(Δ) modexp
+        (only new items are blinded); the packed own set, its shuffle,
+        and the bloom are rebuilt lazily — their content tags change,
+        which is what invalidates any peer-side response-leg cache."""
+        new = list(new_items)
+        if list(self.items) == new:
+            return
+        self.items = new
+        self._bloom = None
+        self._own_packed = None
+        self._own_rows = None
+        if len(self._own_elems) > 2 * max(1, len(new)):
+            keep = set(new)
+            self._own_elems = {k: v for k, v in self._own_elems.items()
+                               if k in keep}
 
     def own_blinded_packed(self, pool: Optional[ModexpPool] = None,
                            chunk_size: int = DEFAULT_CHUNK) -> bytes:
@@ -323,19 +502,95 @@ class PSIServer:
             pool = pool or ModexpPool(0)
             items = list(dict.fromkeys(self.items))
             p, nb, b = self._p, self._nb, self._beta
-            packed = b"".join(pool.imap(
-                hashpow_chunk,
-                ((items[lo:hi], b, p, nb)
-                 for lo, hi in _chunk_slices(len(items), chunk_size))))
-            rng = np.random.default_rng(secrets.randbits(128))
-            rows = np.frombuffer(packed, np.uint8).reshape(-1, nb)
-            self._own_packed = rows[rng.permutation(len(rows))].tobytes()
+            missing = [it for it in items if it not in self._own_elems]
+            if missing:
+                self.ops += len(missing)
+                packed = b"".join(pool.imap(
+                    hashpow_chunk,
+                    ((missing[lo:hi], b, p, nb)
+                     for lo, hi in _chunk_slices(len(missing),
+                                                 chunk_size))))
+                for k, it in enumerate(missing):
+                    self._own_elems[it] = packed[k * nb:(k + 1) * nb]
+            first_row: Dict[str, int] = {}
+            for r, it in enumerate(self.items):
+                first_row.setdefault(it, r)
+            # secret shuffle, derived from β + the item set: unknowable
+            # without the secret (the client still can't locate rows),
+            # but *stable* across memoization drops and worker respawns
+            # — the response leg's content tag must not change unless
+            # the data does
+            h = hashlib.sha256(b"psi-own-shuffle")
+            h.update(_enc(self._beta, self._nb))
+            for it in items:
+                h.update(it.encode() if isinstance(it, str) else it)
+            rng = np.random.default_rng(int.from_bytes(h.digest(), "big"))
+            perm = rng.permutation(len(items))
+            self._own_packed = b"".join(self._own_elems[items[j]]
+                                        for j in perm)
+            self._own_rows = [first_row[items[j]] for j in perm]
         return self._own_packed
+
+    def server_leg_tag(self, mode: str,
+                       pool: Optional[ModexpPool] = None,
+                       chunk_size: int = DEFAULT_CHUNK) -> bytes:
+        """Content tag of the response leg a client of ``mode`` would
+        receive (packed own set, or the bloom's shard frames) — what the
+        wire protocol's response-leg cache is keyed by."""
+        if mode == "bloom":
+            return self.build_bloom(pool, chunk_size).content_tag()
+        return blind_tag(self.own_blinded_packed(pool, chunk_size))
+
+    def hidden_match(self, d_blob: bytes, t_blob: bytes,
+                     pad: int = HIDDEN_PAD) -> Tuple[List[int], List[int]]:
+        """Owner-side membership-hiding finish: match the double-blinded
+        client set { D_i } (client order) against the lifted own set
+        { T_j } (shuffled order), then hide *which* kept positions
+        matched.  Returns ``(keep, rows)``:
+
+          * ``keep`` — sorted client positions, the true members padded
+            with decoys (the smallest unmatched positions) up to a
+            multiple of ``pad``, so a captured frame's length quantizes
+            away ±1 membership differences;
+          * ``rows`` — for each kept position, the owner data row to
+            align (true row for members via the retained shuffle
+            permutation; a deterministic pseudo-row for decoys).  Member
+            and decoy entries are byte-uniform int64s.
+
+        Everything is data-determined (set membership, smallest-position
+        decoys, arithmetic pseudo-rows), so the result is bit-stable
+        across backends and repeat rounds."""
+        import numpy as np
+        nb = self._nb
+        assert self._own_rows is not None, \
+            "own_blinded_packed must run before hidden_match"
+        hits = _exact_membership(d_blob, t_blob, nb)
+        t_pos = {t_blob[j * nb:(j + 1) * nb]: j
+                 for j in range(len(t_blob) // nb)}
+        row_of: Dict[int, int] = {}
+        for i in np.nonzero(hits)[0]:
+            i = int(i)
+            row_of[i] = self._own_rows[t_pos[d_blob[i * nb:(i + 1) * nb]]]
+        n_cli = len(d_blob) // nb
+        members = sorted(row_of)
+        target = min(n_cli, -(-max(len(members), 1) // pad) * pad)
+        keep = list(members)
+        member_set = set(members)
+        for i in range(n_cli):
+            if len(keep) >= target:
+                break
+            if i not in member_set:
+                keep.append(i)
+        keep.sort()
+        n_rows = len(self.items)
+        rows = [row_of.get(i, decoy_row(i, n_rows)) for i in keep]
+        return keep, rows
 
     def respond_chunk(self, packed: bytes) -> bytes:
         """One packed blinded chunk -> its double-blinded response,
         B_i = A_i^β (order preserved) — the per-chunk server kernel the
         wire engine (``federation/psi_transport``) calls per Message."""
+        self.ops += len(packed) // self._nb
         return pow_chunk((packed, self._beta, self._p, self._nb))
 
     def respond_chunks(self, blinded_packed: bytes,
@@ -346,6 +601,7 @@ class PSIServer:
         in client order, chunked."""
         pool = pool or ModexpPool(0)
         p, nb, b = self._p, self._nb, self._beta
+        self.ops += len(blinded_packed) // nb
         nbytes = chunk_size * nb
         offsets = range(0, len(blinded_packed), nbytes)
         for off, packed in zip(
@@ -424,6 +680,7 @@ def _round_bloom(client, server, pool, chunk_size, emit):
 
     # double-blind (β) -> unblind (γ) -> shard probes, pipelined
     inter: List[str] = []
+    client.ops += len(blinded) // nb
     unblind_exp, p = client.unblind_exp, client._p
     double_chunks = server.respond_chunks(blinded, pool, chunk_size)
     offsets: List[int] = []
@@ -466,6 +723,7 @@ def _round_noinv(client, server, pool, chunk_size, emit):
     # lifts it into the double-blinded domain: T_j = (H(y_j)^β)^α
     own = server.own_blinded_packed(pool, chunk_size)
     cb = chunk_size * nb
+    client.ops += len(own) // nb
 
     def _own_tasks():
         for o in range(0, len(own), cb):
@@ -492,6 +750,55 @@ def _round_noinv(client, server, pool, chunk_size, emit):
         **_common_stats(client, server, pool, chunk_size),
     }
     return inter, stats
+
+
+def _round_hidden(client, server, pool, chunk_size, emit):
+    """Membership-hiding variant: the first three legs are noinv's, but
+    the lifted server set returns to the *owner* (``psi_lift_chunk``)
+    and the double-blind products never leave it — the owner matches,
+    pads the keep-set with deterministic decoys (``hidden_match``), and
+    replies only with padded (position, row) pairs.  The client learns
+    an aligned row order; neither a wire observer nor the scientist
+    learns which positions are true members."""
+    nb, p = client._nb, client._p
+    blind_cached = client._blinded_packed is not None
+    own_cached = server._own_packed is not None
+
+    blinded = client.blind_packed(pool, chunk_size)
+    for lo, hi in _chunk_slices(len(client.items), chunk_size):
+        emit("psi_blind_chunk", (hi - lo) * nb)
+
+    own = server.own_blinded_packed(pool, chunk_size)
+    cb = chunk_size * nb
+    client.ops += len(own) // nb
+
+    def _own_tasks():
+        for o in range(0, len(own), cb):
+            emit("psi_server_set_chunk", len(own[o:o + cb]))
+            yield (own[o:o + cb], client._blind_exp, p, nb)
+
+    t_blob = b"".join(pool.imap(pow_chunk, _own_tasks()))
+    for o in range(0, len(t_blob), cb):
+        emit("psi_lift_chunk", len(t_blob[o:o + cb]))
+
+    # D_i = A_i^β stays on the owner's side (never emitted)
+    d_blob = b"".join(packed for _lo, packed in
+                      server.respond_chunks(blinded, pool, chunk_size))
+    keep, rows = server.hidden_match(d_blob, t_blob)
+    emit("psi_keep_mask", 16 * len(keep))
+
+    stats = {
+        "mode": "hidden",
+        "client_upload_bytes": len(blinded) + len(t_blob),
+        "server_response_bytes": len(own) + 16 * len(keep),
+        "server_set_bytes": len(own),
+        "hidden_rows": rows,
+        "hidden_kept": len(keep),
+        "blind_cached": blind_cached,
+        "server_cached": own_cached,
+        **_common_stats(client, server, pool, chunk_size),
+    }
+    return keep, stats
 
 
 def psi_round(client: PSIClient, server: PSIServer, *,
@@ -524,6 +831,8 @@ def psi_round(client: PSIClient, server: PSIServer, *,
     emit = on_message or (lambda kind, n_bytes: None)
     if client.mode == "bloom":
         return _round_bloom(client, server, pool, chunk_size, emit)
+    if client.mode == "hidden":
+        return _round_hidden(client, server, pool, chunk_size, emit)
     return _round_noinv(client, server, pool, chunk_size, emit)
 
 

@@ -122,8 +122,25 @@ class MLPSplitNN:
         return loss, {"loss": loss, "accuracy": acc}
 
     def loss_fn(self, params, batch, rng=None):
-        logits = self.forward(params, batch["x_slices"], rng)
-        return self._nll_metrics(logits, batch["labels"])
+        cut = self.heads_forward(params["heads"], batch["x_slices"])
+        z = self.combine(cut, rng)
+        logits = self._mlp_apply(params["trunk"], z)
+        loss, metrics = self._nll_metrics(logits, batch["labels"])
+        w = float(self.cfg.split.nopeek_weight)
+        if w > 0.0:
+            # NoPeek (core/privacy.py): per-owner dcor(raw slice, cut)
+            # joins the training objective; metrics["loss"] stays the
+            # bare NLL so trails are comparable across weights.
+            from repro.core.privacy import (distance_correlation,
+                                            nopeek_penalty)
+            xs = batch["x_slices"]
+            if isinstance(xs, (list, tuple)):
+                pen = w * sum(distance_correlation(x, c)
+                              for x, c in zip(xs, cut))
+            else:
+                pen = nopeek_penalty(xs, cut, w)
+            return loss + pen, metrics
+        return loss, metrics
 
 
 # ---------------------------------------------------------------------------
@@ -168,19 +185,34 @@ def train_state_init(params, optimizer):
 # the joint program exactly (tested bit-for-bit in tests/test_transport).
 
 
-def make_mlp_head_programs(model: MLPSplitNN):
+def make_mlp_head_programs(model: MLPSplitNN, nopeek_weight: float = 0.0):
     """Owner-side segment programs for one MLP head.
 
     ``head_fwd(head_params, x) -> cut``; ``head_bwd(head_params, x,
     cut_grad) -> head_grads`` (recompute-forward explicit VJP — the head
-    is cheap, so no residuals cross the step boundary)."""
+    is cheap, so no residuals cross the step boundary).
+
+    ``nopeek_weight > 0`` adds the NoPeek distance-correlation penalty's
+    gradient to the backward: the penalty is OWNER-LOCAL (dcor between
+    this owner's raw slice and its cut), so no extra term ever crosses
+    the wire — the received cut gradient seeds the task loss exactly as
+    before.  The weight is baked at trace time: weight==0 traces to the
+    identical jaxpr as before, keeping the bit-for-bit split-vs-joint
+    equivalence contract untouched for undefended runs."""
+    w = float(nopeek_weight)
 
     def head_apply(hp, x):
         return jax.nn.relu(model._mlp_apply(hp, x))
 
     def head_bwd(hp, x, g):
         _, vjp = jax.vjp(lambda p: head_apply(p, x), hp)
-        return vjp(g)[0]
+        grads = vjp(g)[0]
+        if w > 0.0:
+            from repro.core.privacy import distance_correlation
+            pen = jax.grad(
+                lambda p: w * distance_correlation(x, head_apply(p, x)))(hp)
+            grads = jax.tree.map(jnp.add, grads, pen)
+        return grads
 
     return jax.jit(head_apply), jax.jit(head_bwd)
 

@@ -45,8 +45,18 @@ class DataOwner:
     def __init__(self, name: str, ids: Sequence[str], features: np.ndarray):
         self.name = name
         self._vd = VerticalDataset(list(ids), np.asarray(features))
+        # the owner's FULL population: ``_vd`` becomes the aligned
+        # training view after a resolve, but PSI always runs (and
+        # re-runs) against the population — a repeat resolve must not
+        # intersect against its own previous output
+        self._full = self._vd
         self._psi_servers: Dict[tuple, PSIServer] = {}
+        # content-tag caches (client uploads / double-blind responses /
+        # hidden-mode lifts) — owned here so the byte and modexp savings
+        # survive per-round actor re-creation AND population churn
         self._psi_blind_caches: Dict[tuple, dict] = {}
+        self._psi_resp_caches: Dict[tuple, dict] = {}
+        self._psi_lift_caches: Dict[tuple, dict] = {}
 
     # -- public (scientist-visible) surface --------------------------------
     @property
@@ -74,14 +84,19 @@ class DataOwner:
 
     def psi_server(self, group: str, fp_rate: float = 1e-9) -> PSIServer:
         """The owner's PSI endpoint, cached per (group, fp_rate): β and
-        the sharded Bloom over the β-blinded own set are per-session
-        state, so repeated rounds against the same client (or a
-        re-resolve with unchanged rows) reuse them.  Invalidated when
-        the owner's rows change (``_align``)."""
+        the per-element blinded own set are *persistent* state — a
+        re-resolve after ±Δ row churn recomputes only the Δ new
+        elements' exponentiations (``PSIServer.update_items``), not the
+        whole set.  The accessor self-syncs against the owner's current
+        rows, so callers never see a stale population."""
         key = (group, fp_rate)
-        if key not in self._psi_servers:
-            self._psi_servers[key] = PSIServer(self.ids, fp_rate, group)
-        return self._psi_servers[key]
+        pop = self._full.ids
+        srv = self._psi_servers.get(key)
+        if srv is None:
+            srv = self._psi_servers[key] = PSIServer(pop, fp_rate, group)
+        elif srv.items != pop:
+            srv.update_items(pop)
+        return srv
 
     def psi_endpoint(self, endpoint, group: str, fp_rate: float = 1e-9,
                      pool=None):
@@ -97,11 +112,23 @@ class DataOwner:
         actor's own-set chunk kernels (executors are thread-safe, so the
         session shares one resolve pool across all parties)."""
         from repro.federation.psi_transport import PSIServerEndpoint
-        cache = self._psi_blind_caches.setdefault((group, fp_rate), {})
-        return PSIServerEndpoint(self.name,
-                                 self.psi_server(group, fp_rate),
-                                 endpoint, blind_cache=cache,
-                                 chunk_kernel_pool=pool)
+        key = (group, fp_rate)
+        return PSIServerEndpoint(
+            self.name, self.psi_server(group, fp_rate), endpoint,
+            blind_cache=self._psi_blind_caches.setdefault(key, {}),
+            resp_cache=self._psi_resp_caches.setdefault(key, {}),
+            lift_cache=self._psi_lift_caches.setdefault(key, {}),
+            chunk_kernel_pool=pool)
+
+    def update_rows(self, ids: Sequence[str], features: np.ndarray
+                    ) -> None:
+        """Streaming-population update: replace the owner's rows in
+        place.  PSI state is *kept* — the cached server re-syncs
+        incrementally on the next resolve (O(Δ) new exponentiations for
+        ±Δ churn), and the content-tag caches stay valid because they
+        are keyed by content, never by session."""
+        self._full = VerticalDataset(list(ids), np.asarray(features))
+        self._vd = self._full
 
     # -- owner-side surface (runs 'on the owner's device') -----------------
     @property
@@ -109,10 +136,23 @@ class DataOwner:
         return self._vd.data
 
     def _align(self, keep_ids: Sequence[str]) -> None:
-        """Discard non-shared rows and sort by ID (paper §3.1)."""
-        self._vd = self._vd.filter_and_sort(keep_ids)
-        self._psi_servers.clear()               # rows changed: new session
-        self._psi_blind_caches.clear()
+        """Derive the aligned training view from the FULL population:
+        discard non-shared rows and sort by ID (paper §3.1).  PSI state
+        persists: the server accessor self-syncs to the population
+        incrementally, and content-tag caches cannot go stale."""
+        self._vd = self._full.filter_and_sort(keep_ids)
+
+    def _align_hidden(self, rows: Sequence[int]) -> None:
+        """Membership-hiding alignment: keep exactly ``rows`` (row
+        indices into the full population, decoys included) in that
+        order, and replace raw IDs with positional pseudonyms — the
+        aligned order is the only cross-party coordinate system, so no
+        party needs to know which raw IDs matched."""
+        rows = list(rows)
+        self._vd = VerticalDataset(
+            [f"anon{k:06d}" for k in range(len(rows))],
+            self._full.data[np.asarray(rows, np.int64)]
+            if rows else self._full.data[:0])
 
 
 class DataScientist:
@@ -125,6 +165,8 @@ class DataScientist:
             np.asarray(labels) if labels is not None
             else np.zeros(len(list(ids)), np.int32))
         self.has_labels = labels is not None
+        # full population vs aligned view — see DataOwner._full
+        self._full = self._vd
         self._psi_clients: Dict[tuple, PSIClient] = {}
 
     @property
@@ -139,20 +181,51 @@ class DataScientist:
         return (f"DataScientist(rows={len(self._vd.ids)}, "
                 f"labels={self.has_labels})")
 
-    def psi_client(self, group: str,
-                   mode: str = DEFAULT_MODE) -> PSIClient:
+    def psi_client(self, group: str, mode: str = DEFAULT_MODE,
+                   pool=None) -> PSIClient:
         """The scientist's PSI endpoint, cached per (group, mode): its
         blinded upload is memoized on the client and reused against
-        every owner round.  Invalidated when the scientist's rows
-        change (``_align``)."""
+        every owner round.  The accessor self-syncs against the
+        scientist's current rows via ``PSIClient.update_items`` — after
+        ±Δ churn the memoized upload is *spliced*, costing O(Δ) modexp
+        and arming the wire delta fast path (``pool`` feeds the spliced
+        elements' chunk kernels)."""
         key = (group, mode)
-        if key not in self._psi_clients:
-            self._psi_clients[key] = PSIClient(self.ids, group, mode=mode)
-        return self._psi_clients[key]
+        pop = self._full.ids
+        cli = self._psi_clients.get(key)
+        if cli is None:
+            cli = self._psi_clients[key] = PSIClient(pop, group, mode=mode)
+        elif cli.items != pop:
+            cli.update_items(pop, pool=pool)
+        return cli
+
+    def update_rows(self, ids: Sequence[str],
+                    labels: Optional[np.ndarray]) -> None:
+        """Streaming-population update: replace the scientist's rows in
+        place.  Cached PSI clients re-sync incrementally on the next
+        resolve (O(Δ) modexp + a delta upload for ±Δ churn)."""
+        self._full = VerticalDataset(
+            list(ids),
+            np.asarray(labels) if labels is not None
+            else np.zeros(len(list(ids)), np.int32))
+        self._vd = self._full
+        self.has_labels = labels is not None
 
     def _align(self, keep_ids: Sequence[str]) -> None:
-        self._vd = self._vd.filter_and_sort(keep_ids)
-        self._psi_clients.clear()               # rows changed: new session
+        self._vd = self._full.filter_and_sort(keep_ids)
+
+    def _align_hidden(self, positions: Sequence[int],
+                      client_items: Sequence[str]) -> None:
+        """Membership-hiding alignment: ``positions`` index the PSI
+        client's item order (members + decoys, indistinguishable on the
+        wire); map each back to the scientist's full-population row and
+        adopt positional pseudonym IDs matching the owners'."""
+        row_of = {it: i for i, it in enumerate(self._full.ids)}
+        rows = [row_of[client_items[p]] for p in positions]
+        self._vd = VerticalDataset(
+            [f"anon{k:06d}" for k in range(len(rows))],
+            self._full.data[np.asarray(rows, np.int64)]
+            if rows else self._full.data[:0])
 
 
 # ---------------------------------------------------------------------------

@@ -197,12 +197,16 @@ class MLPAdapter(_ProgramCache):
     # ------------------------------------------------- split execution
     supports_split = True
     supports_microbatch = True
+    supports_nopeek = True
 
     def owner_programs(self, owner_index: int):
         from repro.core.splitnn import make_mlp_head_programs
-        # one shape-polymorphic program pair serves every owner
-        return self._cached("head_progs",
-                            lambda: make_mlp_head_programs(self.model))
+        # one shape-polymorphic program pair serves every owner; the
+        # NoPeek weight is baked into the backward at trace time, so it
+        # keys the cache
+        w = float(self.cfg.split.nopeek_weight)
+        return self._cached(("head_progs", w),
+                            lambda: make_mlp_head_programs(self.model, w))
 
     def trunk_program(self):
         from repro.core.splitnn import make_mlp_trunk_program
@@ -273,6 +277,14 @@ class SplitLMAdapter(_ProgramCache):
             raise ValueError(
                 f"VerticalSession drives text archs; {cfg.name} is "
                 f"{cfg.modality} (see examples/ for vlm/audio training)")
+        if float(getattr(cfg.split, "nopeek_weight", 0.0)) > 0.0:
+            # refuse rather than silently train undefended: the LM head
+            # has no NoPeek program (token inputs have no meaningful
+            # euclidean geometry for the dcor penalty)
+            raise ValueError(
+                "SplitConfig.nopeek_weight > 0 is not supported by the "
+                "sequence-split LM adapter (supports_nopeek=False); use "
+                "cut_noise_std / grad-side defences instead")
         self.cfg = cfg
         self.model = SplitModel(cfg)
         self.loss_fn = self.model.loss_fn
@@ -318,6 +330,7 @@ class SplitLMAdapter(_ProgramCache):
     # LM cuts are sequence-sliced then concat-combined (and cast to
     # compute dtype per owner) — no sum combine, so no ring aggregation
     supports_masked = False
+    supports_nopeek = False
 
     def owner_programs(self, owner_index: int):
         """Owner ``owner_index``'s jitted segment programs.  The head

@@ -126,7 +126,14 @@ class OwnerWorkerSpec:
 @dataclass
 class PSIWorkerSpec:
     """A PSI server actor's world: the owner's ID set + group geometry.
-    Import chain is jax-free end to end."""
+    Import chain is jax-free end to end.
+
+    ``beta`` and the content-tag cache snapshots rehydrate the owner's
+    persistent PSI state into the (otherwise stateless) spawned worker:
+    in a real deployment the owner's process is long-lived, so a fresh
+    worker per round must reproduce byte-identical response legs (same
+    secret, same deterministic shuffle) and honor caches from earlier
+    rounds — otherwise repeat resolves re-ship full legs."""
 
     name: str
     ids: List[str]
@@ -135,6 +142,16 @@ class PSIWorkerSpec:
     latency_s: float = 0.0
     bandwidth_bps: Optional[float] = None
     generation: int = 0
+    beta: Optional[int] = None
+    blind_cache: Optional[dict] = None
+    resp_cache: Optional[dict] = None
+    lift_cache: Optional[dict] = None
+    # precomputed response-side state (owner-side precompute, performed
+    # on the owner's persistent PSIServer at spawn): packed blinded own
+    # set, its shuffle->row map, and the per-item element cache
+    own_packed: Optional[bytes] = None
+    own_rows: Optional[List[int]] = None
+    own_elems: Optional[dict] = None
 
 
 # ---------------------------------------------------------------------------
@@ -224,8 +241,15 @@ def _psi_body(spec: PSIWorkerSpec, ep: ProcessEndpoint) -> None:
     from repro.core.psi import PSIServer
     from repro.federation.psi_transport import PSIServerEndpoint
 
-    server = PSIServer(spec.ids, spec.fp_rate, spec.group)
-    actor = PSIServerEndpoint(spec.name, server, ep)
+    server = PSIServer(spec.ids, spec.fp_rate, spec.group, beta=spec.beta)
+    if spec.own_packed is not None:
+        server._own_packed = spec.own_packed
+        server._own_rows = list(spec.own_rows or [])
+        server._own_elems = dict(spec.own_elems or {})
+    actor = PSIServerEndpoint(spec.name, server, ep,
+                              blind_cache=dict(spec.blind_cache or {}),
+                              resp_cache=dict(spec.resp_cache or {}),
+                              lift_cache=dict(spec.lift_cache or {}))
     _arm_chaos(actor, spec.name, generation=spec.generation)
     actor.run()
     if actor.error is not None:
@@ -320,12 +344,33 @@ def spawn_owner_worker(spec: OwnerWorkerSpec, *, owner=None, tap=None,
 def spawn_psi_worker(owner, *, group: str, fp_rate: float = 1e-9,
                      latency_s: float = 0.0,
                      bandwidth_bps: Optional[float] = None,
-                     tap=None, generation: int = 0) -> WorkerHandle:
+                     tap=None, generation: int = 0,
+                     pool=None) -> WorkerHandle:
     """Spawn one PSI server actor for ``owner`` (a
     :class:`~repro.federation.parties.DataOwner`).  ``generation``
-    increments on retry, so generation-0 faults don't re-fire."""
-    spec = PSIWorkerSpec(name=owner.name, ids=list(owner.ids),
+    increments on retry, so generation-0 faults don't re-fire.
+
+    The spec rehydrates the owner's persistent PSI state (β, blinded
+    own set, content-tag caches) into the fresh worker — a stand-in for
+    the long-lived owner process of a real deployment, and what keeps
+    repeat/churned rounds O(Δ) on the process backend.  The own-set
+    blinding runs on the owner's persistent server at spawn (``pool``
+    parallelizes it), so respawns and retries never repeat it."""
+    key = (group, fp_rate)
+    srv = owner.psi_server(group, fp_rate)   # synced to the population
+    srv.own_blinded_packed(pool)             # O(Δ new items) after churn
+    spec = PSIWorkerSpec(name=owner.name, ids=list(srv.items),
                          group=group, fp_rate=fp_rate,
                          latency_s=latency_s, bandwidth_bps=bandwidth_bps,
-                         generation=generation)
+                         generation=generation,
+                         beta=srv._beta,
+                         blind_cache=dict(
+                             owner._psi_blind_caches.setdefault(key, {})),
+                         resp_cache=dict(
+                             owner._psi_resp_caches.setdefault(key, {})),
+                         lift_cache=dict(
+                             owner._psi_lift_caches.setdefault(key, {})),
+                         own_packed=srv._own_packed,
+                         own_rows=srv._own_rows,
+                         own_elems=srv._own_elems)
     return _spawn(spec.name, psi_worker_main, spec, owner=owner, tap=tap)

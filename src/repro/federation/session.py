@@ -173,6 +173,20 @@ class VerticalSession:
         each intersection), intersects globally, broadcasts the shared IDs,
         and every party filter-and-sorts.  Returns the stats dict.
 
+        ``mode`` selects the protocol variant: ``"noinv"`` (default) and
+        ``"bloom"`` reveal each pairwise intersection to the scientist;
+        ``"hidden"`` is the membership-hiding variant — matching runs on
+        the *owner* side, the scientist receives only a padded keep-mask
+        (members + deterministic decoys, indistinguishable in every
+        frame), and all parties align on positional pseudonym IDs, so
+        training proceeds on aligned row order without the scientist
+        ever learning which raw IDs matched.  A repeat resolve after ±Δ
+        ID churn (``scientist.update_rows`` / ``owner.update_rows``)
+        costs O(Δ) modexp and O(Δ) wire bytes: the memoized blinded
+        upload is spliced client-side and shipped as one
+        ``psi_delta_chunk``, and unchanged response legs are skipped
+        entirely via content tags.
+
         The scientist blinds its set ONCE and reuses the blinded upload
         for every owner round (logged as a ``psi_blind_reuse`` transcript
         entry from the second round on); each owner's response-side state
@@ -226,9 +240,15 @@ class VerticalSession:
         if backend != "direct":
             stats["latency_s"] = latency_s
             stats["per_party_wire"] = {}
-        global_ids = set(self.scientist.ids)
-        client = self.scientist.psi_client(group, mode)
+        hidden = mode == "hidden"
+        global_pos: Optional[set] = None        # hidden: keep positions
+        row_maps: Dict[str, dict] = {}          # hidden: pos -> owner row
         with ModexpPool(parallelism) as pool:
+            # the accessor self-syncs a cached client against the
+            # scientist's current population (O(Δ) splice after churn —
+            # this is what arms the wire's psi_delta_chunk fast path)
+            client = self.scientist.psi_client(group, mode, pool=pool)
+            global_ids = set(client.items)
             for owner in self.owners:
                 for attempt in range(max(0, retries) + 1):
                     try:
@@ -274,7 +294,24 @@ class VerticalSession:
                               recompute_skipped=rstats["blind_cached"],
                               upload_skipped=bool(
                                   rstats.get("upload_skipped", False)))
-                global_ids &= set(inter)
+                if rstats.get("delta_used") or rstats.get("resp_skipped") \
+                        or rstats.get("server_leg_skipped"):
+                    # the churn fast paths (O(Δ) delta splice / cached
+                    # response leg) are likewise protocol-relevant
+                    self._log("scientist", owner.name, "psi_delta_reuse",
+                              delta_used=bool(rstats.get("delta_used")),
+                              resp_skipped=bool(
+                                  rstats.get("resp_skipped")),
+                              server_leg_skipped=bool(
+                                  rstats.get("server_leg_skipped")))
+                if hidden:
+                    row_maps[owner.name] = dict(
+                        zip(inter, rstats["hidden_rows"]))
+                    pos = set(inter)
+                    global_pos = (pos if global_pos is None
+                                  else global_pos & pos)
+                else:
+                    global_ids &= set(inter)
                 stats["rounds"].append({
                     "owner": owner.name, "intersection_size": len(inter),
                     "client_upload_bytes": rstats["client_upload_bytes"],
@@ -286,20 +323,45 @@ class VerticalSession:
                         "bloom_shards": rstats["bloom_shards"]}
                        if mode == "bloom" else
                        {"server_set_bytes": rstats["server_set_bytes"]}),
+                    **({k: rstats[k] for k in
+                        ("delta_used", "resp_skipped",
+                         "server_leg_skipped", "client_modexp_ops",
+                         "server_modexp_ops", "hidden_kept")
+                        if k in rstats}),
                     **({"upload_skipped": rstats["upload_skipped"],
                         "upload_wire_bytes": rstats["upload_wire_bytes"],
                         "download_wire_bytes":
                             rstats["download_wire_bytes"]}
                        if backend != "direct" else {})})
-        stats["global_intersection"] = len(global_ids)
-        self.scientist._align(global_ids)
+        if hidden:
+            final = sorted(global_pos or set())
+            stats["global_intersection"] = len(final)
+            # positional pseudonym alignment: every party keeps the
+            # same aligned order; the scientist maps keep positions
+            # back to its rows via the client's item order and never
+            # learns which raw IDs actually matched (decoys are
+            # indistinguishable in every frame it saw)
+            items = list(client.items)
+            for owner in self.owners:
+                owner._align_hidden(
+                    [row_maps[owner.name][p] for p in final])
+                self._log("scientist", owner.name, "resolved_ids",
+                          count=len(final))
+            self.scientist._align_hidden(final, items)
+        else:
+            stats["global_intersection"] = len(global_ids)
+            self.scientist._align(global_ids)
+            for owner in self.owners:
+                owner._align(global_ids)
+                self._log("scientist", owner.name, "resolved_ids",
+                          count=len(global_ids))
         for owner in self.owners:
-            owner._align(global_ids)
-            self._log("scientist", owner.name, "resolved_ids",
-                      count=len(global_ids))
             # invariant SplitNN training relies on: identical ID order
             assert owner.ids == self.scientist.ids, \
                 f"misaligned owner {owner.name}"
+        # every owner round succeeded: fold the delta into the new base
+        # (the next churn diffs against the state all peers now cache)
+        client.rebase_delta()
         self._resolved = True
         self.resolve_stats = stats
         return stats
@@ -322,10 +384,35 @@ class VerticalSession:
         # (per-chunk entries would swamp the transcript at 1e6)
         for kind, (n_msgs, n_bytes) in wire.items():
             frm, to = (("scientist", owner.name)
-                       if kind == "psi_blind_chunk"
+                       if kind in ("psi_blind_chunk", "psi_delta_chunk",
+                                   "psi_lift_chunk")
                        else (owner.name, "scientist"))
             self._log(frm, to, kind, bytes=n_bytes, chunks=n_msgs)
         return inter, rstats
+
+    def _mirror_owner_psi_caches(self, owner, client, group, fp_rate):
+        """Copy a finished process-backend round's content-addressed PSI
+        artifacts onto the owner, standing in for the persistent caches a
+        long-lived owner process would keep (the spawned worker's died
+        with it).  Entries are keyed by content tag, so a mirrored value
+        can never go stale — at worst it is evicted unused.  The hidden
+        response leg (``D``) is the one artifact the client never sees,
+        so hidden delta on the process backend degrades to a full upload
+        rather than being mirrored here."""
+        from repro.core.psi import blind_tag as _btag
+        key = (group, fp_rate)
+        blob = client._blinded_packed
+        if blob is not None:
+            owner._psi_blind_caches.setdefault(key, {})[_btag(blob)] = blob
+        rc = client.round_cache.get(owner.name)
+        if not rc:
+            return
+        if "d_blob" in rc:
+            owner._psi_resp_caches.setdefault(key, {})[rc["tag"]] = \
+                rc["d_blob"]
+        if client.mode == "hidden" and rc.get("t_blob"):
+            owner._psi_lift_caches.setdefault(key, {})[rc["server_tag"]] = \
+                rc["t_blob"]
 
     def _resolve_owner_wire(self, client, owner, *, backend, group,
                             fp_rate, pool, chunk_size, latency_s,
@@ -342,21 +429,35 @@ class VerticalSession:
 
         if backend == "process":
             from repro.federation import runtime
+            # spawn-time own-set blinding happens on the owner's
+            # persistent server (parent side); fold those ops into the
+            # round's server count so backends stay comparable
+            srv_parent = owner.psi_server(group, fp_rate)
+            spawn_ops0 = srv_parent.ops
             handle = runtime.spawn_psi_worker(
                 owner, group=group, fp_rate=fp_rate,
                 latency_s=latency_s, bandwidth_bps=bandwidth_bps,
-                generation=generation)
-            ep_sci = handle.endpoint
+                generation=generation, pool=pool)
             try:
+                ep_sci = handle.endpoint
                 inter, rstats = wire_psi_round(
                     client, ep_sci, worker=handle, pool=pool,
-                    chunk_size=chunk_size, timeout=timeout)
+                    chunk_size=chunk_size, timeout=timeout,
+                    peer=owner.name)
             finally:
                 try:
-                    ep_sci.send("psi_stop", {})
+                    handle.endpoint.send("psi_stop", {})
                 except RuntimeError:        # worker already gone
                     pass
                 handle.shutdown()
+            for k in ("server_modexp_ops", "modexp_ops"):
+                rstats[k] = rstats.get(k, 0) + srv_parent.ops - spawn_ops0
+            # the spawned worker's caches died with it; mirror the round's
+            # content-addressed artifacts onto the (long-lived) owner so
+            # the next spawn rehydrates them and repeat rounds stay O(Δ).
+            # Legitimate: the session is the trusted simulation runtime,
+            # and every entry is keyed by its own content tag.
+            self._mirror_owner_psi_caches(owner, client, group, fp_rate)
         else:
             ep_sci, ep_own = transport.channel_pair(
                 "scientist", owner.name, backend="queue",
@@ -372,7 +473,8 @@ class VerticalSession:
             try:
                 inter, rstats = wire_psi_round(
                     client, ep_sci, worker=worker, pool=pool,
-                    chunk_size=chunk_size, timeout=timeout)
+                    chunk_size=chunk_size, timeout=timeout,
+                    peer=owner.name)
             finally:
                 ep_sci.send("psi_stop", {})
                 _join_or_warn(th, 10.0, f"resolve({owner.name})")

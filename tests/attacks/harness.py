@@ -159,3 +159,48 @@ def norm_attack_auc(tr: Transcript, owner: Optional[str] = None) -> float:
         labels.append(tr.labels[idx])
     return label_inference_auc(np.concatenate(norms),
                                np.concatenate(labels))
+
+
+def psi_membership_advantage(mode: str, *, n=40, members=5,
+                             group="modp512", chunk_size=16) -> float:
+    """Membership-inference advantage (TPR - FPR) of a scientist-side
+    attacker against one resolved PSI round over the queue backend.
+
+    The adversary holds the client's view of the transcript and, for
+    each candidate ID it submitted, predicts "in the owner's set" from
+    the round's output: under ``noinv``/``bloom`` the resolved IDs are
+    the raw intersection, so the attack is perfect (advantage 1.0);
+    under ``mode="hidden"`` the client sees only the padded keep-set of
+    its own row positions — every true member is kept, but so are
+    deterministic decoys, so the false-positive rate rises with the
+    padding and the advantage drops strictly below the plaintext modes.
+    """
+    import threading
+
+    from repro.core.psi import PSIClient, PSIServer
+    from repro.federation.psi_transport import (PSIServerEndpoint,
+                                                wire_psi_round)
+
+    ids = [f"user-{i}" for i in range(n)]
+    truth = set(ids[:members])
+    sv_items = sorted(truth) + [f"other-{i}" for i in range(n - members)]
+    client = PSIClient(ids, group, mode=mode)
+    server = PSIServer(sv_items, group=group)
+    ep_c, ep_s = transport.channel_pair("scientist", "owner0",
+                                        backend="queue")
+    worker = PSIServerEndpoint("owner0", server, ep_s)
+    th = threading.Thread(target=worker.run, daemon=True)
+    th.start()
+    try:
+        inter, _ = wire_psi_round(client, ep_c, worker=worker,
+                                  chunk_size=chunk_size)
+    finally:
+        ep_c.send("psi_stop", {})
+        th.join(timeout=10.0)
+    if mode == "hidden":
+        flagged = {ids[i] for i in inter}   # keep positions incl. decoys
+    else:
+        flagged = set(inter)                # the raw matched IDs
+    tpr = len(flagged & truth) / max(len(truth), 1)
+    fpr = len(flagged - truth) / max(n - len(truth), 1)
+    return tpr - fpr

@@ -106,3 +106,20 @@ def test_transcript_shapes_and_ground_truth_alignment():
             assert z.shape[0] == len(tr.batches[t])
     assert set(tr.labels.tolist()) <= {0, 1}       # binarized
     assert 0.02 < tr.labels.mean() < 0.3           # rare positives
+
+
+# ---------------------------------------------------------------------------
+# PSI membership inference: hidden mode blunts the scientist-side attack
+# ---------------------------------------------------------------------------
+
+
+def test_hidden_mode_blunts_membership_inference():
+    """ISSUE 10: against plaintext-intersection modes the resolved-ID
+    list IS a perfect membership oracle; under mode="hidden" the padded
+    keep-mask drags the advantage down (decoy false positives), though
+    every true member is still kept (documented residual leak)."""
+    adv_plain = H.psi_membership_advantage("noinv")
+    adv_hidden = H.psi_membership_advantage("hidden")
+    assert adv_plain == 1.0
+    assert adv_hidden < adv_plain - 0.5
+    assert adv_hidden >= 0.0

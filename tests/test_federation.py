@@ -214,3 +214,30 @@ def test_session_sequence_fit_and_serve():
     assert len(results) == 4
     assert all(len(r.generated) == 3 for r in results.values())
     assert engine.stats["requests"] == 4
+
+
+def test_hidden_mode_fit_reaches_parity_with_noinv():
+    """ISSUE 10 acceptance: training on a mode="hidden" alignment (padded
+    pseudonymous rows, scientist never learns which IDs matched) reaches
+    accuracy parity with the noinv alignment — the ≤ HIDDEN_PAD - 1
+    decoy rows per owner are noise the model shrugs off."""
+    def run(mode):
+        sci, owners = make_vertical_mnist_parties(3000, seed=0,
+                                                  keep_frac=0.9)
+        s = VerticalSession(*feature_parties(sci, owners))
+        s.resolve(group="modp512", mode=mode)
+        s.build(MNIST_CFG)
+        h = s.fit(epochs=20, batch_size=128, eval_frac=0.15,
+                  verbose=False, mode="split")
+        return s, h["final"]["val_accuracy"]
+
+    s_ref, acc_ref = run("noinv")
+    s_hid, acc_hid = run("hidden")
+    # same population, so the hidden view holds the same members plus
+    # at most the decoy padding
+    assert len(s_ref.scientist.ids) <= len(s_hid.scientist.ids)
+    assert all(i.startswith("anon") for i in s_hid.scientist.ids)
+    assert acc_ref > 0.8
+    assert acc_hid > acc_ref - 0.06, \
+        (f"hidden-mode fit lost accuracy: {acc_hid:.3f} vs "
+         f"noinv {acc_ref:.3f}")

@@ -188,3 +188,78 @@ def test_label_inference_auc_detects_norm_signal():
     assert abs(label_inference_auc(rng.normal(size=400), labels)
                - 0.5) < 0.1
     assert label_inference_auc(norms, np.zeros(400, bool)) == 0.5
+
+
+# ---------------------------------------------------------------------------
+# ISSUE 10 bugfix: SplitConfig.nopeek_weight must actually train
+# ---------------------------------------------------------------------------
+
+
+def _nopeek_fit(weight, steps=5):
+    import dataclasses
+    from repro.configs.pyvertical_mnist import CONFIG as MNIST_CFG
+    from repro.data import make_vertical_mnist_parties
+    from repro.federation import VerticalSession, feature_parties
+    sci, owners = make_vertical_mnist_parties(240, seed=0, keep_frac=0.9)
+    s = VerticalSession(*feature_parties(sci, owners))
+    s.resolve(group="modp512")
+    cfg = dataclasses.replace(
+        MNIST_CFG, split=dataclasses.replace(MNIST_CFG.split,
+                                             nopeek_weight=weight))
+    s.build(cfg)
+    h = s.fit(steps=steps, batch_size=64, verbose=False, mode="split")
+    return [float(r["loss"]) for r in h["train"]]
+
+
+def test_nopeek_weight_changes_split_fit_loss_trail():
+    """The silently-ignored-weight bug: split-mode fit() with
+    nopeek_weight > 0 must optimize a different objective — the loss
+    trail diverges from the undefended run, while weight=0 reruns stay
+    bit-identical (the regularizer is baked at trace time)."""
+    base = _nopeek_fit(0.0)
+    again = _nopeek_fit(0.0)
+    assert base == again                   # deterministic baseline
+    defended = _nopeek_fit(0.3)
+    assert all(np.isfinite(v) for v in defended)
+    assert defended != base, \
+        "nopeek_weight > 0 did not change split-mode training"
+
+
+def test_nopeek_weight_also_regularizes_joint_loss():
+    """MLPSplitNN.loss_fn: weight w adds exactly w * sum of per-owner
+    distance correlations between raw slices and cut activations."""
+    import dataclasses
+    from repro.configs.pyvertical_mnist import CONFIG as MNIST_CFG
+    from repro.core.splitnn import MLPSplitNN
+    m0 = MLPSplitNN(MNIST_CFG)
+    cfg1 = dataclasses.replace(
+        MNIST_CFG, split=dataclasses.replace(MNIST_CFG.split,
+                                             nopeek_weight=0.7))
+    m1 = MLPSplitNN(cfg1)
+    params = m0.init(jax.random.PRNGKey(0))
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.normal(size=(32, 784)).astype(np.float32))
+    sizes = m0.splits
+    offs = np.cumsum([0] + list(sizes))
+    batch = {"x_slices": jnp.stack([x[:, offs[i]:offs[i + 1]]
+                                    for i in range(len(sizes))]),
+             "labels": jnp.asarray(rng.integers(0, 10, 32))}
+    l0 = float(m0.loss_fn(params, batch)[0])
+    l1 = float(m1.loss_fn(params, batch)[0])
+    cut = m0.heads_forward(params["heads"], batch["x_slices"])
+    pen = sum(float(distance_correlation(xs, c))
+              for xs, c in zip(batch["x_slices"], cut))
+    np.testing.assert_allclose(l1 - l0, 0.7 * pen, rtol=1e-4)
+
+
+def test_nopeek_unsupported_by_sequence_lm_raises_loudly():
+    """The other half of the bugfix contract: an adapter that cannot
+    honor the weight must refuse it instead of silently ignoring it."""
+    import dataclasses
+    from repro.configs import get_config
+    from repro.federation.registry import build_adapter
+    cfg = get_config("llama3.2-3b", reduced=True)
+    bad = dataclasses.replace(
+        cfg, split=dataclasses.replace(cfg.split, nopeek_weight=0.1))
+    with pytest.raises(ValueError, match="nopeek_weight"):
+        build_adapter(bad)

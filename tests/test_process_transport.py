@@ -351,7 +351,10 @@ def test_spawned_psi_worker_lifecycle():
             "mode": np.frombuffer(b"noinv", np.uint8),
             "nb": np.int64(GROUPS[GROUP][2]),
             "n_items": np.int64(8), "chunk_size": np.int64(4),
-            "blind_tag": np.zeros(16, np.uint8)})
+            "blind_tag": np.zeros(16, np.uint8),
+            "base_tag": np.zeros(16, np.uint8),
+            "server_tag": np.zeros(16, np.uint8),
+            "have_resp": np.uint8(0)})
         m = w.endpoint.recv_kind("psi_hello_ack", timeout=60.0)
         assert int(np.asarray(m.payload["n_server_items"]).reshape(-1)[0]) \
             == 8
@@ -574,3 +577,57 @@ def test_serving_process_transport_matches_queue():
         engine_q.stats["cut_wire_bytes"]
     assert engine_p.stats["cut_messages"] == \
         engine_q.stats["cut_messages"]
+
+
+def test_repeat_and_delta_resolve_on_process_backend():
+    """ISSUE 10 on spawned workers: round 2 with unchanged populations
+    re-ships nothing (caches are mirrored back to the parent parties
+    across worker generations), and a ±2 churn round takes the delta
+    path — O(hello)/O(Δ) upload bytes, asserted on round wire stats."""
+    s = _mnist_session(200, keep_frac=1.0)
+    st1 = s.resolve(group=GROUP, backend="process")
+    ids1 = list(s.scientist.ids)
+    full_up = max(r["upload_wire_bytes"] for r in st1["rounds"])
+
+    st2 = s.resolve(group=GROUP, backend="process")
+    assert s.scientist.ids == ids1
+    for r in st2["rounds"]:
+        assert r["upload_skipped"] and r["resp_skipped"]
+        assert r["server_leg_skipped"]
+        assert r["upload_wire_bytes"] < 1024
+        assert r["download_wire_bytes"] < 1024
+
+    sci = s.scientist
+    pop = list(sci._full.ids)
+    new_ids = pop[2:] + ["fresh-0", "fresh-1"]
+    new_data = np.concatenate(
+        [sci._full.data[2:], np.zeros((2,) + sci._full.data.shape[1:],
+                                      sci._full.data.dtype)])
+    sci.update_rows(new_ids, new_data)
+    st3 = s.resolve(group=GROUP, backend="process")
+    for r in st3["rounds"]:
+        assert r["delta_used"] and r["server_leg_skipped"]
+        assert r["upload_wire_bytes"] < 0.05 * full_up
+    expect = sorted(set(pop[2:]))
+    assert s.scientist.ids == expect
+    for o in s.owners:
+        assert o.ids == expect
+
+
+def test_hidden_resolve_process_matches_queue():
+    """mode="hidden" through spawned workers is bit-stable with the
+    thread-backed queue backend: identical pseudonymous ID order and
+    identical aligned feature bytes on every party."""
+    sq = _mnist_session(150, seed=4, keep_frac=0.85)
+    sq.resolve(group=GROUP, mode="hidden", backend="queue")
+    sp = _mnist_session(150, seed=4, keep_frac=0.85)
+    st = sp.resolve(group=GROUP, mode="hidden", backend="process")
+    assert st["mode"] == "hidden"
+    assert sp.scientist.ids == sq.scientist.ids
+    assert sp.scientist.ids and \
+        all(i.startswith("anon") for i in sp.scientist.ids)
+    assert sp.scientist._vd.data.tobytes() == \
+        sq.scientist._vd.data.tobytes()
+    for oq, op in zip(sq.owners, sp.owners):
+        assert op.ids == sp.scientist.ids
+        assert op._vd.data.tobytes() == oq._vd.data.tobytes()

@@ -440,33 +440,56 @@ def test_degenerate_sets_over_the_wire(mode):
 # little-endian throughout (docs/WIRE_PROTOCOL.md §1).
 GOLDEN_FRAMES = {
     "psi_hello":
-        "0600000004006d6f6465050075696e7438010500000000000000050000000000"
+        "0900000004006d6f6465050075696e7438010500000000000000050000000000"
         "00006e6f696e76050067726f7570050075696e74380107000000000000000700"
         "0000000000006d6f64703531320900626c696e645f746167050075696e743801"
         "1000000000000000100000000000000030313233343536373839616263646566"
-        "07006e5f6974656d730500696e74363401010000000000000008000000000000"
-        "0003000000000000000a006368756e6b5f73697a650500696e74363401010000"
-        "00000000000800000000000000020000000000000002006e620500696e743634"
-        "01010000000000000008000000000000004000000000000000",
+        "0800626173655f746167050075696e7438011000000000000000100000000000"
+        "0000000000000000000000000000000000000a007365727665725f7461670500"
+        "75696e7438011000000000000000100000000000000000000000000000000000"
+        "0000000000000900686176655f72657370050075696e74380101000000000000"
+        "0001000000000000000007006e5f6974656d730500696e743634010100000000"
+        "000000080000000000000003000000000000000a006368756e6b5f73697a6505"
+        "00696e7436340101000000000000000800000000000000020000000000000002"
+        "006e620500696e74363401010000000000000008000000000000004000000000"
+        "000000",
     "psi_blind_chunk":
         "02000000040064617461050075696e7438010800000000000000080000000000"
         "000000010203040506070400626173650500696e743634010100000000000000"
         "08000000000000000000000000000000",
-    "psi_hello_ack_noinv":
-        "030000000c00626c696e645f636163686564050075696e743801010000000000"
-        "00000100000000000000000e006e5f7365727665725f6974656d730500696e74"
-        "3634010100000000000000080000000000000003000000000000000f006e5f73"
-        "65727665725f6368756e6b730500696e74363401010000000000000008000000"
+    "psi_delta_chunk":
+        "03000000040064617461050075696e7438010800000000000000080000000000"
+        "00000001020304050607070072656d6f7665640500696e743634010200000000"
+        "0000001000000000000000010000000000000003000000000000000a006e5f72"
+        "657461696e65640500696e743634010100000000000000080000000000000002"
+        "00000000000000",
+    "psi_lift_chunk":
+        "02000000040064617461050075696e7438010400000000000000040000000000"
+        "0000000102030400626173650500696e74363401010000000000000008000000"
         "000000000200000000000000",
+    "psi_hello_ack_noinv":
+        "060000000c00626c696e645f636163686564050075696e743801010000000000"
+        "0000010000000000000000080064656c74615f6f6b050075696e743801010000"
+        "00000000000100000000000000000d007365727665725f636163686564050075"
+        "696e74380101000000000000000100000000000000000a007365727665725f74"
+        "6167050075696e74380110000000000000001000000000000000666564636261"
+        "393837363534333231300e006e5f7365727665725f6974656d730500696e7436"
+        "34010100000000000000080000000000000003000000000000000f006e5f7365"
+        "727665725f6368756e6b730500696e7436340101000000000000000800000000"
+        "0000000200000000000000",
     "psi_hello_ack_bloom":
-        "050000000c00626c696e645f636163686564050075696e743801010000000000"
-        "00000100000000000000010e006e5f7365727665725f6974656d730500696e74"
-        "36340101000000000000000800000000000000030000000000000008006e5f73"
-        "68617264730500696e7436340101000000000000000800000000000000010000"
-        "00000000000c0073686172645f6e5f626974730500696e743634010100000000"
-        "000000080000000000000080000000000000000e0073686172645f6e5f686173"
-        "6865730500696e74363401010000000000000008000000000000001e00000000"
-        "000000",
+        "080000000c00626c696e645f636163686564050075696e743801010000000000"
+        "0000010000000000000001080064656c74615f6f6b050075696e743801010000"
+        "00000000000100000000000000000d007365727665725f636163686564050075"
+        "696e74380101000000000000000100000000000000000a007365727665725f74"
+        "6167050075696e74380110000000000000001000000000000000666564636261"
+        "393837363534333231300e006e5f7365727665725f6974656d730500696e7436"
+        "340101000000000000000800000000000000030000000000000008006e5f7368"
+        "617264730500696e743634010100000000000000080000000000000001000000"
+        "000000000c0073686172645f6e5f626974730500696e74363401010000000000"
+        "0000080000000000000080000000000000000e0073686172645f6e5f68617368"
+        "65730500696e74363401010000000000000008000000000000001e0000000000"
+        "0000",
     "psi_server_set_chunk":
         "02000000040064617461050075696e7438010400000000000000040000000000"
         "0000000102030400626173650500696e74363401010000000000000008000000"
@@ -475,12 +498,22 @@ GOLDEN_FRAMES = {
         "02000000040064617461050075696e7438010400000000000000040000000000"
         "0000000102030400626173650500696e74363401010000000000000008000000"
         "000000000200000000000000",
+    "psi_delta_ack":
+        "02000000040064617461050075696e7438010400000000000000040000000000"
+        "00000001020307006e5f746f74616c0500696e74363401010000000000000008"
+        "000000000000000300000000000000",
+    "psi_keep_mask":
+        "0200000004006b6565700500696e743634010300000000000000180000000000"
+        "00000000000000000000020000000000000005000000000000000400726f7773"
+        "0500696e74363401030000000000000018000000000000000700000000000000"
+        "01000000000000000400000000000000",
     "psi_bloom_shard":
         "01000000040064617461050075696e7438010200000000000000020000000000"
         "0000ff00",
     "psi_done":
-        "0100000008006e5f6368756e6b730500696e7436340101000000000000000800"
-        "0000000000000200000000000000",
+        "0200000008006e5f6368756e6b730500696e7436340101000000000000000800"
+        "00000000000002000000000000000a006d6f646578705f6f70730500696e7436"
+        "3401010000000000000008000000000000000500000000000000",
     "empty": "00000000",
 }
 
@@ -492,17 +525,32 @@ def _u8(b):
 def _canonical_payloads():
     """The fixed payloads the goldens were frozen from — mirroring the
     exact dict construction order of the live actors."""
+    zero_tag = b"\x00" * 16
     return {
         "psi_hello": {"mode": _u8(b"noinv"), "group": _u8(b"modp512"),
                       "blind_tag": _u8(b"0123456789abcdef"),
+                      "base_tag": _u8(zero_tag),
+                      "server_tag": _u8(zero_tag),
+                      "have_resp": np.uint8(0),
                       "n_items": np.int64(3), "chunk_size": np.int64(2),
                       "nb": np.int64(64)},
         "psi_blind_chunk": {"data": _u8(bytes(range(8))),
                             "base": np.int64(0)},
+        "psi_delta_chunk": {"data": _u8(bytes(range(8))),
+                            "removed": np.array([1, 3], np.int64),
+                            "n_retained": np.int64(2)},
+        "psi_lift_chunk": {"data": _u8(bytes(range(4))),
+                           "base": np.int64(2)},
         "psi_hello_ack_noinv": {"blind_cached": np.uint8(0),
+                                "delta_ok": np.uint8(0),
+                                "server_cached": np.uint8(0),
+                                "server_tag": _u8(b"fedcba9876543210"),
                                 "n_server_items": np.int64(3),
                                 "n_server_chunks": np.int64(2)},
         "psi_hello_ack_bloom": {"blind_cached": np.uint8(1),
+                                "delta_ok": np.uint8(0),
+                                "server_cached": np.uint8(0),
+                                "server_tag": _u8(b"fedcba9876543210"),
                                 "n_server_items": np.int64(3),
                                 "n_shards": np.int64(1),
                                 "shard_n_bits": np.int64(128),
@@ -511,8 +559,13 @@ def _canonical_payloads():
                                  "base": np.int64(2)},
         "psi_double_chunk": {"data": _u8(bytes(range(4))),
                              "base": np.int64(2)},
+        "psi_delta_ack": {"data": _u8(bytes(range(4))),
+                          "n_total": np.int64(3)},
+        "psi_keep_mask": {"keep": np.array([0, 2, 5], np.int64),
+                          "rows": np.array([7, 1, 4], np.int64)},
         "psi_bloom_shard": {"data": _u8(b"\xff\x00")},
-        "psi_done": {"n_chunks": np.int64(2)},
+        "psi_done": {"n_chunks": np.int64(2),
+                     "modexp_ops": np.int64(5)},
         "empty": {},
     }
 
@@ -603,15 +656,20 @@ def test_live_traffic_conforms_to_frame_schema():
         th.join(timeout=10.0)
     schema = {
         "psi_hello": [("mode", "uint8"), ("group", "uint8"),
-                      ("blind_tag", "uint8"), ("n_items", "int64"),
+                      ("blind_tag", "uint8"), ("base_tag", "uint8"),
+                      ("server_tag", "uint8"), ("have_resp", "uint8"),
+                      ("n_items", "int64"),
                       ("chunk_size", "int64"), ("nb", "int64")],
         "psi_hello_ack": [("blind_cached", "uint8"),
+                          ("delta_ok", "uint8"),
+                          ("server_cached", "uint8"),
+                          ("server_tag", "uint8"),
                           ("n_server_items", "int64"),
                           ("n_server_chunks", "int64")],
         "psi_blind_chunk": [("data", "uint8"), ("base", "int64")],
         "psi_server_set_chunk": [("data", "uint8"), ("base", "int64")],
         "psi_double_chunk": [("data", "uint8"), ("base", "int64")],
-        "psi_done": [("n_chunks", "int64")],
+        "psi_done": [("n_chunks", "int64"), ("modexp_ops", "int64")],
         "psi_stop": [],
     }
     seen = set()
@@ -655,18 +713,19 @@ def _resolve_with_tap(mode):
     return session, captured
 
 
-@pytest.mark.parametrize("mode", ["noinv", "bloom"])
+@pytest.mark.parametrize("mode", ["noinv", "bloom", "hidden"])
 def test_no_raw_ids_on_the_wire(mode):
     """Every byte of every frame of a full resolve: raw IDs never cross
     in any encoding the protocol could accidentally emit — plaintext,
-    sha256(id), or the unblinded group element H(id)."""
+    sha256(id), or the unblinded group element H(id).  (Populations, not
+    the aligned view — in hidden mode the view holds pseudonyms.)"""
     import hashlib
     from repro.core.psi import hash_to_group
     session, captured = _resolve_with_tap(mode)
     assert captured, "tap captured no traffic"
-    all_ids = set(session.scientist.ids)
+    all_ids = set(session.scientist._full.ids)
     for o in session.owners:
-        all_ids |= set(o.ids)
+        all_ids |= set(o._full.ids)
     p = GROUPS[GROUP][0]
     needles = []
     for i in sorted(all_ids)[:40]:                    # bound test cost
@@ -734,3 +793,507 @@ def test_pipelined_chunks_amortize_latency():
     assert timed - base < 0.75 * seq_floor, \
         (f"latency not amortized: {1e3 * (timed - base):.0f} ms added "
          f"vs sequential floor {1e3 * seq_floor:.0f} ms")
+
+
+# ---------------------------------------------------------------------------
+# delta resolution (ISSUE 10): O(Δ) repeat rounds after population churn
+# ---------------------------------------------------------------------------
+
+
+def _tapped_pair(ys):
+    """Queue pair + running worker with a both-directions frame tap.
+    Returns (client-endpoint, worker, thread, captured [(kind, nbytes)])."""
+    captured = []
+    server = PSIServer(ys, group=GROUP)
+    ep_c, ep_s = transport.channel_pair(
+        "scientist", "owner0", backend="queue",
+        tap=lambda m, b: captured.append((m.kind, len(b))))
+    worker, th = serve_psi("owner0", server, ep_s)
+    return ep_c, worker, th, captured
+
+
+def test_delta_round_after_small_churn_is_o_delta():
+    """±4 churn on a 200-item set: the repeat round ships one small
+    psi_delta_chunk (no blind chunks, no server-set leg), costs O(Δ)
+    modexp on both sides, and returns the exact from-scratch result."""
+    xs = [f"id-{i}" for i in range(200)]
+    ys = [f"id-{i + 50}" for i in range(200)]
+    client = PSIClient(xs, GROUP)
+    ep_c, worker, th, captured = _tapped_pair(ys)
+    try:
+        _, st1 = wire_psi_round(client, ep_c, worker=worker,
+                                chunk_size=32)
+        mark = len(captured)
+        ops_mark = client.ops
+        xs2 = xs[4:] + [f"new-{i}" for i in range(4)]
+        client.update_items(xs2)
+        i2, st2 = wire_psi_round(client, ep_c, worker=worker,
+                                 chunk_size=32)
+    finally:
+        ep_c.send("psi_stop", {})
+        th.join(timeout=10.0)
+    ref, _ = psi_round(PSIClient(list(client.items), GROUP),
+                       PSIServer(ys, group=GROUP), chunk_size=32)
+    assert i2 == ref
+    assert st2["delta_used"] and not st2["upload_skipped"]
+    assert st2["server_leg_skipped"]
+    # O(Δ) modexp: 4 fresh client blinds (spent in update_items) + the
+    # server's 4 responses; nothing else on either side
+    client_delta_ops = client.ops - ops_mark
+    assert client_delta_ops == 4
+    assert st2["server_modexp_ops"] == 4
+    assert st2["client_modexp_ops"] == 0          # server leg cached
+    assert client_delta_ops + st2["server_modexp_ops"] \
+        <= 0.05 * st1["modexp_ops"]
+    # O(Δ) wire: no full upload, no server-set re-ship, tiny delta frame
+    kinds2 = [k for k, _ in captured[mark:]]
+    assert "psi_blind_chunk" not in kinds2
+    assert "psi_server_set_chunk" not in kinds2
+    delta_bytes = sum(n for k, n in captured[mark:]
+                      if k == "psi_delta_chunk")
+    assert 0 < delta_bytes < 0.05 * st1["client_upload_bytes"]
+
+
+def test_unchanged_update_is_empty_delta_and_hello_only_round():
+    """update_items with the identical list records no delta; the repeat
+    round degenerates to the O(hello) cached path: zero modexp, zero
+    chunk frames in either direction."""
+    xs = [f"id-{i}" for i in range(60)]
+    ys = [f"id-{i + 20}" for i in range(60)]
+    client = PSIClient(xs, GROUP)
+    ep_c, worker, th, captured = _tapped_pair(ys)
+    try:
+        i1, _ = wire_psi_round(client, ep_c, worker=worker, chunk_size=16)
+        mark = len(captured)
+        client.update_items(list(xs))
+        assert client._delta is None
+        i2, st2 = wire_psi_round(client, ep_c, worker=worker,
+                                 chunk_size=16)
+    finally:
+        ep_c.send("psi_stop", {})
+        th.join(timeout=10.0)
+    assert i2 == i1
+    assert st2["upload_skipped"] and st2["resp_skipped"]
+    assert not st2["delta_used"]
+    assert st2["modexp_ops"] == 0
+    kinds2 = {k for k, _ in captured[mark:]}
+    assert kinds2 <= {"psi_hello", "psi_hello_ack", "psi_done",
+                      "psi_stop"}
+
+
+def test_removal_only_delta_costs_zero_modexp():
+    """A shrink-only churn (tombstones, nothing added) still splices:
+    zero modexp anywhere, exact intersection."""
+    xs = [f"id-{i}" for i in range(80)]
+    ys = [f"id-{i + 10}" for i in range(80)]
+    client = PSIClient(xs, GROUP)
+    ep_c, worker, th, captured = _tapped_pair(ys)
+    try:
+        wire_psi_round(client, ep_c, worker=worker, chunk_size=16)
+        ops_mark = client.ops
+        client.update_items(xs[10:])
+        i2, st2 = wire_psi_round(client, ep_c, worker=worker,
+                                 chunk_size=16)
+    finally:
+        ep_c.send("psi_stop", {})
+        th.join(timeout=10.0)
+    ref, _ = psi_round(PSIClient(xs[10:], GROUP),
+                       PSIServer(ys, group=GROUP), chunk_size=16)
+    assert i2 == ref
+    assert st2["delta_used"]
+    assert client.ops == ops_mark
+    assert st2["modexp_ops"] == 0
+
+
+def test_full_churn_falls_back_to_full_upload():
+    """100% churn: no delta is recorded and the round re-runs the full
+    protocol (fresh blind chunks), still exact."""
+    xs = [f"id-{i}" for i in range(50)]
+    ys = [f"id-{i + 100}" for i in range(100)]
+    client = PSIClient(xs, GROUP)
+    ep_c, worker, th, captured = _tapped_pair(ys)
+    try:
+        wire_psi_round(client, ep_c, worker=worker, chunk_size=16)
+        mark = len(captured)
+        xs2 = [f"id-{i + 120}" for i in range(50)]      # disjoint from xs
+        client.update_items(xs2)
+        assert client._delta is None
+        i2, st2 = wire_psi_round(client, ep_c, worker=worker,
+                                 chunk_size=16)
+    finally:
+        ep_c.send("psi_stop", {})
+        th.join(timeout=10.0)
+    ref, _ = psi_round(PSIClient(xs2, GROUP),
+                       PSIServer(ys, group=GROUP), chunk_size=16)
+    assert i2 == ref and len(i2) > 0
+    assert not st2["delta_used"] and not st2["upload_skipped"]
+    assert "psi_blind_chunk" in [k for k, _ in captured[mark:]]
+
+
+def test_duplicate_ids_in_delta_keep_multiset_semantics():
+    """Churn that raises an existing ID's multiplicity and adds new
+    duplicates: the spliced round matches the from-scratch engine with
+    exact duplicate multiplicity."""
+    xs = [f"id-{i}" for i in range(40)]
+    ys = [f"id-{i + 5}" for i in range(40)] + ["dup-x"]
+    client = PSIClient(xs, GROUP)
+    ep_c, worker, th, _ = _tapped_pair(ys)
+    try:
+        wire_psi_round(client, ep_c, worker=worker, chunk_size=8)
+        xs2 = xs[2:] + ["dup-x", "dup-x", "id-20"]      # id-20 now twice
+        client.update_items(xs2)
+        assert client._delta is not None
+        i2, st2 = wire_psi_round(client, ep_c, worker=worker,
+                                 chunk_size=8)
+    finally:
+        ep_c.send("psi_stop", {})
+        th.join(timeout=10.0)
+    ref, _ = psi_round(PSIClient(list(client.items), GROUP),
+                       PSIServer(ys, group=GROUP), chunk_size=8)
+    assert i2 == ref
+    assert st2["delta_used"]
+    assert i2.count("dup-x") == 2 and i2.count("id-20") == 2
+
+
+def test_hidden_delta_round_reuses_response_leg():
+    """Hidden mode: after ±2 churn the repeat round uses the delta path
+    (tiny upload, cached server leg) and the keep-mask stays a correct
+    padded superset of the true member positions."""
+    import math
+    from repro.core.psi import HIDDEN_PAD
+    xs = [f"id-{i}" for i in range(100)]
+    ys = [f"id-{i + 30}" for i in range(100)]
+    client = PSIClient(xs, GROUP, mode="hidden")
+    ep_c, worker, th, captured = _tapped_pair(ys)
+    try:
+        wire_psi_round(client, ep_c, worker=worker, chunk_size=16)
+        mark = len(captured)
+        xs2 = xs[2:] + ["fresh-0", "fresh-1"]
+        client.update_items(xs2)
+        keep, st2 = wire_psi_round(client, ep_c, worker=worker,
+                                   chunk_size=16)
+    finally:
+        ep_c.send("psi_stop", {})
+        th.join(timeout=10.0)
+    assert st2["delta_used"] and st2["server_leg_skipped"]
+    assert "psi_blind_chunk" not in [k for k, _ in captured[mark:]]
+    members = {i for i, it in enumerate(client.items) if it in set(ys)}
+    target = min(len(client.items),
+                 math.ceil(max(len(members), 1) / HIDDEN_PAD)
+                 * HIDDEN_PAD)
+    assert members <= set(keep)
+    assert len(keep) == target == st2["hidden_kept"]
+
+
+# ---------------------------------------------------------------------------
+# hidden mode (ISSUE 10): membership hiding on the wire
+# ---------------------------------------------------------------------------
+
+
+def _hidden_round_profile(xs, ys):
+    """Run one hidden round; return ({kind: sorted frame lengths},
+    stats)."""
+    client = PSIClient(xs, GROUP, mode="hidden")
+    ep_c, worker, th, captured = _tapped_pair(ys)
+    try:
+        _, stats = wire_psi_round(client, ep_c, worker=worker,
+                                  chunk_size=8)
+    finally:
+        ep_c.send("psi_stop", {})
+        th.join(timeout=10.0)
+    profile = {}
+    for k, n in captured:
+        profile.setdefault(k, []).append(n)
+    return {k: sorted(v) for k, v in profile.items()}, stats
+
+
+def test_hidden_mode_wire_indistinguishable_member_vs_nonmember():
+    """Swap one probe ID between member and non-member: every frame kind
+    appears the same number of times with the same byte lengths, and the
+    padded keep count is identical — a wire observer (or the scientist
+    counting frames) cannot tell whether the probe matched."""
+    ys = [f"id-{i}" for i in range(30)]
+    base = [f"id-{i}" for i in range(10)] + [f"out-{i}" for i in range(9)]
+    prof_a, st_a = _hidden_round_profile(base + ["id-20"], ys)   # member
+    prof_b, st_b = _hidden_round_profile(base + ["out-99"], ys)  # not
+    assert prof_a == prof_b
+    assert st_a["hidden_kept"] == st_b["hidden_kept"]
+    assert "psi_double_chunk" not in prof_a          # never unblinded back
+
+
+def test_hidden_mode_ships_no_double_blind_leg():
+    """The hidden response is keep positions + rows only: no
+    psi_double_chunk and no per-item unblind work on the client."""
+    xs = [f"id-{i}" for i in range(64)]
+    ys = [f"id-{i + 16}" for i in range(64)]
+    client = PSIClient(xs, GROUP, mode="hidden")
+    ep_c, worker, th, captured = _tapped_pair(ys)
+    try:
+        keep, stats = wire_psi_round(client, ep_c, worker=worker,
+                                     chunk_size=16)
+    finally:
+        ep_c.send("psi_stop", {})
+        th.join(timeout=10.0)
+    kinds = {k for k, _ in captured}
+    assert "psi_double_chunk" not in kinds
+    assert "psi_keep_mask" in kinds
+    assert len(stats["hidden_rows"]) == len(keep)
+
+
+def test_session_hidden_resolve_bit_stable_direct_vs_queue():
+    """mode="hidden" through the session: pseudonymous aligned views are
+    bit-identical between the direct and queue backends, and every party
+    ends on the same ID list with decoy padding ≤ HIDDEN_PAD - 1."""
+    from repro.core.psi import HIDDEN_PAD
+    from repro.data import make_vertical_mnist_parties
+    from repro.federation import VerticalSession, feature_parties
+    views = {}
+    for backend in ("direct", "queue"):
+        sci, owners = make_vertical_mnist_parties(120, seed=7,
+                                                  keep_frac=0.85)
+        session = VerticalSession(*feature_parties(sci, owners))
+        st = session.resolve(group=GROUP, mode="hidden", backend=backend,
+                             chunk_size=16)
+        ids = session.scientist.ids
+        assert ids and all(i.startswith("anon") for i in ids)
+        for o in session.owners:
+            assert o.ids == ids
+        true_members = set(session.scientist._full.ids)
+        for o in session.owners:
+            true_members &= set(o._full.ids)
+        assert len(true_members) <= len(ids) \
+            <= len(true_members) + HIDDEN_PAD - 1
+        views[backend] = (list(ids),
+                          session.scientist._vd.data.tobytes(),
+                          [o._vd.data.tobytes() for o in session.owners])
+        assert st["mode"] == "hidden"
+    assert views["direct"] == views["queue"]
+
+
+# ---------------------------------------------------------------------------
+# session-level repeat & delta resolution (ISSUE 10 bugfix: response-leg
+# cache makes the unchanged repeat round O(hello) wire bytes)
+# ---------------------------------------------------------------------------
+
+
+def test_session_repeat_resolve_is_hello_only_on_queue():
+    """Second resolve with unchanged populations: every owner round is
+    fully cached — zero modexp, no chunk frames, only the hello/ack/done
+    envelope crosses the wire."""
+    from repro.data import make_vertical_mnist_parties
+    from repro.federation import VerticalSession, feature_parties
+    sci, owners = make_vertical_mnist_parties(150, seed=2, keep_frac=0.9)
+    session = VerticalSession(*feature_parties(sci, owners))
+    st1 = session.resolve(group=GROUP, backend="queue", chunk_size=32)
+    ids1 = list(session.scientist.ids)
+    st2 = session.resolve(group=GROUP, backend="queue", chunk_size=32)
+    assert session.scientist.ids == ids1
+    assert st2["global_intersection"] == st1["global_intersection"]
+    for r in st2["rounds"]:
+        assert r["upload_skipped"] and r["resp_skipped"]
+        assert r["server_leg_skipped"]
+        assert r["client_modexp_ops"] == 0
+        assert r["server_modexp_ops"] == 0
+        # O(hello): psi_hello + psi_hello_ack + psi_done + psi_stop only
+        assert r["upload_wire_bytes"] < 1024
+        assert r["download_wire_bytes"] < 1024
+    reuse = [m for m in session.transcript
+             if m["kind"] == "psi_resp_reuse"]
+    assert len(reuse) >= 0                 # transcript stays parseable
+
+
+def test_session_delta_resolve_after_churn_is_o_delta_on_queue():
+    """±2 churn of the scientist's population between resolves: every
+    owner round takes the delta path, total modexp and upload bytes
+    collapse to O(Δ), the aligned result is exact, and the transcript
+    records the reuse."""
+    import numpy as np
+    from repro.data import make_vertical_mnist_parties
+    from repro.federation import VerticalSession, feature_parties
+    sci, owners = make_vertical_mnist_parties(200, seed=3, keep_frac=1.0)
+    session = VerticalSession(*feature_parties(sci, owners))
+    st1 = session.resolve(group=GROUP, backend="queue", chunk_size=64)
+    full_ops = sum(r["client_modexp_ops"] + r["server_modexp_ops"]
+                   for r in st1["rounds"])
+    full_up = max(r["upload_wire_bytes"] for r in st1["rounds"])
+    s = session.scientist
+    pop = list(s._full.ids)
+    new_ids = pop[2:] + ["fresh-0", "fresh-1"]
+    new_data = np.concatenate(
+        [s._full.data[2:], np.zeros((2,) + s._full.data.shape[1:],
+                                    s._full.data.dtype)])
+    s.update_rows(new_ids, new_data)
+    st2 = session.resolve(group=GROUP, backend="queue", chunk_size=64)
+    for r in st2["rounds"]:
+        assert r["delta_used"] and r["server_leg_skipped"]
+        assert r["upload_wire_bytes"] < 0.05 * full_up
+    delta_ops = sum(r["client_modexp_ops"] + r["server_modexp_ops"]
+                    for r in st2["rounds"])
+    assert delta_ops <= 0.05 * full_ops
+    # exactness: the fresh IDs are unknown to owners, 2 dropped IDs gone
+    expect = sorted(set(pop[2:]))
+    assert session.scientist.ids == expect
+    for o in session.owners:
+        assert o.ids == expect
+    reuse = [m for m in session.transcript
+             if m["kind"] == "psi_delta_reuse"]
+    assert [m["to"] for m in reuse] == [o.name for o in session.owners]
+
+
+# ---------------------------------------------------------------------------
+# protocol guards + population-update edge paths (coverage of the loud
+# failure modes the desync/validation layer promises)
+# ---------------------------------------------------------------------------
+
+
+def _hello_payload(server, **over):
+    from repro.federation.psi_transport import ZERO_TAG, _u8
+    pl = {"mode": _u8(b"noinv"), "group": _u8(server.group.encode()),
+          "blind_tag": _u8(b"x" * 16), "base_tag": _u8(ZERO_TAG),
+          "server_tag": _u8(ZERO_TAG), "have_resp": np.uint8(0),
+          "n_items": np.int64(4), "chunk_size": np.int64(2),
+          "nb": np.int64(server._nb)}
+    pl.update(over)
+    return pl
+
+
+def test_owner_endpoint_rejects_malformed_protocol():
+    """Every _on_hello validation arm raises loudly instead of serving a
+    desynchronized round; unknown kinds raise; heartbeats are acked."""
+    import types
+
+    from repro.federation.psi_transport import _u8
+
+    server = PSIServer([f"s{i}" for i in range(4)], group="modp512")
+    ep_c, ep_s = transport.channel_pair("scientist", "owner0",
+                                        backend="queue")
+    worker = PSIServerEndpoint("owner0", server, ep_s)
+
+    def msg(kind, payload=None, seq=0):
+        return types.SimpleNamespace(kind=kind, payload=payload or {},
+                                     seq=seq)
+
+    with pytest.raises(RuntimeError, match="unknown message kind"):
+        worker.handle(msg("not_a_psi_kind"))
+    with pytest.raises(RuntimeError, match="unknown PSI mode"):
+        worker.handle(msg("psi_hello",
+                          _hello_payload(server, mode=_u8(b"nonsense"))))
+    with pytest.raises(RuntimeError, match="element width mismatch"):
+        worker.handle(msg("psi_hello",
+                          _hello_payload(server, nb=np.int64(1))))
+    with pytest.raises(RuntimeError, match="chunk_size must be positive"):
+        worker.handle(msg("psi_hello",
+                          _hello_payload(server,
+                                         chunk_size=np.int64(0))))
+    with pytest.raises(RuntimeError, match="delta chunk without"):
+        worker.handle(msg("psi_delta_chunk",
+                          {"data": _u8(b""),
+                           "removed": np.array([], np.int64),
+                           "n_retained": np.int64(0)}))
+    with pytest.raises(RuntimeError, match="lift chunk outside"):
+        worker.handle(msg("psi_lift_chunk",
+                          {"data": _u8(b""), "base": np.int64(0)}))
+    with pytest.raises(RuntimeError, match="blind chunk outside"):
+        worker.handle(msg("psi_blind_chunk",
+                          {"data": _u8(b""), "base": np.int64(0)}))
+    # heartbeat is acked, not fatal
+    assert worker.handle(msg("heartbeat", seq=7))
+    ack = ep_c.recv(timeout=5.0)
+    assert ack.kind == "heartbeat_ack" and ack.seq == 7
+
+
+def test_client_mode_and_group_validation():
+    with pytest.raises(ValueError, match="unknown PSI mode"):
+        PSIClient(["a"], "modp512", mode="nonsense")
+    with pytest.raises(ValueError, match="group mismatch"):
+        psi_round(PSIClient(["a"], "modp512"),
+                  PSIServer(["a"], group="modp2048"))
+
+
+def test_update_items_before_any_blinding_is_a_plain_swap():
+    """Churning a client that never ran a round has no memoized upload
+    to splice — the population swaps and no delta is recorded."""
+    client = PSIClient(["a", "b"], "modp512")
+    client.update_items(["b", "c"])
+    assert list(client.items) == ["b", "c"]
+    assert client._delta is None
+    assert client.ops == 0                  # nothing blinded yet
+
+
+def test_reorder_only_update_records_no_delta():
+    """Same multiset, different order: nothing was added or removed, so
+    there is no delta to ship and the blinded upload keeps its canonical
+    positional order (peers' caches stay valid)."""
+    client = PSIClient([f"c{i}" for i in range(6)], "modp512")
+    server = PSIServer([f"c{i}" for i in range(3, 9)], group="modp512")
+    psi_round(client, server, chunk_size=4)
+    items = list(client.items)
+    ops0 = client.ops
+    client.update_items(items[::-1])
+    assert client._delta is None
+    assert list(client.items) == items     # base order preserved
+    assert client.ops == ops0              # nothing re-blinded
+
+
+def test_server_population_update_invalidates_response_leg():
+    """PSIServer.update_items: the owner's own set churns between
+    rounds — the server leg's content tag changes (so a caching client
+    re-downloads it) while only genuinely new items get blinded, and the
+    next round resolves the NEW intersection exactly."""
+    client = PSIClient([f"c{i}" for i in range(8)], "modp512")
+    server = PSIServer([f"c{i}" for i in range(4, 12)], group="modp512")
+    i1, _ = psi_round(client, server, chunk_size=4)
+    assert sorted(i1) == [f"c{i}" for i in range(4, 8)]
+    tag1 = server.server_leg_tag("noinv", None, 4)
+    ops0 = server.ops
+
+    server.update_items([f"c{i}" for i in range(2, 10)])
+    # no-op update is free
+    server.update_items([f"c{i}" for i in range(2, 10)])
+    tag2 = server.server_leg_tag("noinv", None, 4)
+    assert tag2 != tag1
+    i2, _ = psi_round(client, server, chunk_size=4)
+    assert sorted(i2) == [f"c{i}" for i in range(2, 8)]
+    # round 2 cost: 8 fresh double-blind responses + ONLY the two
+    # genuinely-new own items (c2, c3) blinded — the 6 retained own
+    # blinds were reused from the element cache
+    assert server.ops - ops0 == len(client.items) + 2
+
+
+def test_blind_cached_but_client_response_lost_reships_doubles():
+    """The client loses its transcript cache (fresh process) while the
+    owner still holds the blind/response caches: the owner replays the
+    double-blind leg from its response cache — zero modexp, zero upload
+    bytes, same intersection."""
+    xs = [f"x{i}" for i in range(12)]
+    ys = [f"x{i}" for i in range(6, 18)]
+    client = PSIClient(xs, GROUP)
+    server = PSIServer(ys, group=GROUP)
+    ep_c, ep_s = transport.channel_pair("scientist", "owner0",
+                                        backend="queue")
+    worker, th = serve_psi("owner0", server, ep_s)
+    try:
+        i1, _ = wire_psi_round(client, ep_c, worker=worker, chunk_size=4)
+    finally:
+        ep_c.send("psi_stop", {})
+        th.join(timeout=10.0)
+
+    client.round_cache.clear()
+    ep_c, ep_s = transport.channel_pair("scientist", "owner0",
+                                        backend="queue")
+    w2 = PSIServerEndpoint("owner0", worker.server, ep_s,
+                           blind_cache=worker._blind_cache,
+                           resp_cache=worker._resp_cache,
+                           lift_cache=worker._lift_cache)
+    th = threading.Thread(target=w2.run, daemon=True)
+    th.start()
+    try:
+        i2, st2 = wire_psi_round(client, ep_c, worker=w2, chunk_size=4)
+    finally:
+        ep_c.send("psi_stop", {})
+        th.join(timeout=10.0)
+    assert sorted(i2) == sorted(i1)
+    assert st2["blind_cached"] and st2["upload_skipped"]
+    assert not st2["resp_skipped"]
+    assert ep_c.recv_stats["by_kind"]["psi_double_chunk"]["count"] > 0
+    assert st2["server_modexp_ops"] == 0    # replayed from the cache

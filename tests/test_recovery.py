@@ -412,3 +412,41 @@ def test_restore_requires_built():
     s = VerticalSession(*feature_parties(sci, owners))
     with pytest.raises(RuntimeError):
         s.restore("/nonexistent")
+
+
+@pytest.mark.parametrize("backend", ["queue", "process"])
+def test_psi_retry_wire_accounting_and_cache_hygiene(backend):
+    """ISSUE 10 regression: a crashed PSI attempt must not (a) fold its
+    bytes into ``per_party_wire`` — only the verified attempt is
+    measured — or (b) leave the failed generation's entries in any
+    blind/response cache: the post-retry repeat resolve is still the
+    O(hello) cached fast path and stays exact."""
+    def build():
+        return VerticalSession(*feature_parties(
+            *make_vertical_mnist_parties(200, seed=0, keep_frac=0.8)))
+
+    clean = build()
+    st_clean = clean.resolve(group="modp512", backend=backend,
+                             timeout=60.0)
+
+    with pytest.MonkeyPatch.context() as mp_:
+        mp_.setenv(faults.CHAOS_ENV, "owner0:crash_psi")
+        s = build()
+        st = s.resolve(group="modp512", backend=backend, retries=1,
+                       timeout=60.0)
+    assert any(e["action"] == "psi_retry" for e in s.recovery_events)
+    assert s.scientist.ids == clean.scientist.ids
+    # (a) per-party totals equal the fault-free run's: the crashed
+    # generation's traffic is not double-counted into the retry's
+    for name, wire in st["per_party_wire"].items():
+        ref = st_clean["per_party_wire"][name]
+        assert wire["sent_wire_bytes"] == ref["sent_wire_bytes"]
+        assert wire["recv_wire_bytes"] == ref["recv_wire_bytes"]
+        assert wire["messages"] == ref["messages"]
+    # (b) cache hygiene: with chaos disarmed, the next resolve rides the
+    # caches the *verified* attempt wrote — no re-upload, no stale tags
+    st2 = s.resolve(group="modp512", backend=backend, timeout=60.0)
+    for r in st2["rounds"]:
+        assert r["upload_skipped"] and r["server_leg_skipped"]
+        assert r["upload_wire_bytes"] == 0
+    assert s.scientist.ids == clean.scientist.ids

@@ -9,9 +9,14 @@ attacker strictly worse off:
   * model inversion (held-out R^2) and dcor leakage must drop under
     ``cut_noise_std`` and under ``aggregation="masked_sum"``;
   * the norm attack's label-inference AUC must drop under
-    ``grad_noise_std`` and both ``grad_norm_mode`` settings.
+    ``grad_noise_std`` and both ``grad_norm_mode`` settings;
+  * PSI membership inference (scientist-side, against resolved-round
+    transcripts) must lose advantage under ``resolve(mode="hidden")``
+    vs the plaintext-intersection modes (WIRE_PROTOCOL invariant 12).
 
 Usage:  PYTHONPATH=src:tests python tools/attack_check.py [--steps N]
+        (``--psi-only`` runs just the PSI membership check — the other
+        attacks need a full split fit and dominate the runtime)
 """
 from __future__ import annotations
 
@@ -28,21 +33,11 @@ def main() -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--steps", type=int, default=6)
     ap.add_argument("--n", type=int, default=256)
+    ap.add_argument("--psi-only", action="store_true",
+                    help="run only the PSI membership-inference check")
     args = ap.parse_args()
 
     from attacks import harness as H
-
-    kw = dict(steps=args.steps, n=args.n)
-    base = H.capture_transcript(**kw)
-    runs = {
-        "cut_noise": H.capture_transcript(cut_noise_std=2.0, **kw),
-        "masked_sum": H.capture_transcript(aggregation="masked_sum",
-                                           **kw),
-        "grad_noise": H.capture_transcript(grad_noise_std=0.05, **kw),
-        "grad_unit": H.capture_transcript(grad_norm_mode="unit", **kw),
-        "grad_sign": H.capture_transcript(grad_norm_mode="sign", **kw),
-    }
-    owners = sorted(base.cuts)
 
     failures = []
 
@@ -55,18 +50,41 @@ def main() -> int:
         if not ok:
             failures.append((attacker, label))
 
-    for defense in ("cut_noise", "masked_sum"):
-        for owner in owners:
-            check(defense, f"inversion_r2[{owner}]",
-                  H.inversion_r2(base, owner),
-                  H.inversion_r2(runs[defense], owner))
-            check(defense, f"dcor[{owner}]",
-                  H.dcor_leakage(base, owner),
-                  H.dcor_leakage(runs[defense], owner))
-    for defense in ("grad_noise", "grad_unit", "grad_sign"):
-        check(defense, "norm_auc",
-              H.norm_attack_auc(base),
-              H.norm_attack_auc(runs[defense]))
+    # PSI membership inference: the hidden-mode keep-mask must strictly
+    # reduce the scientist-side attacker's advantage over the plaintext
+    # intersection (it stays > 0 — padding hides identity, not the
+    # every-member-is-kept property; see ARCHITECTURE threat model)
+    check("hidden_mode", "psi_membership",
+          H.psi_membership_advantage("noinv"),
+          H.psi_membership_advantage("hidden"))
+
+    if not args.psi_only:
+        kw = dict(steps=args.steps, n=args.n)
+        base = H.capture_transcript(**kw)
+        runs = {
+            "cut_noise": H.capture_transcript(cut_noise_std=2.0, **kw),
+            "masked_sum": H.capture_transcript(aggregation="masked_sum",
+                                               **kw),
+            "grad_noise": H.capture_transcript(grad_noise_std=0.05,
+                                               **kw),
+            "grad_unit": H.capture_transcript(grad_norm_mode="unit",
+                                              **kw),
+            "grad_sign": H.capture_transcript(grad_norm_mode="sign",
+                                              **kw),
+        }
+        owners = sorted(base.cuts)
+        for defense in ("cut_noise", "masked_sum"):
+            for owner in owners:
+                check(defense, f"inversion_r2[{owner}]",
+                      H.inversion_r2(base, owner),
+                      H.inversion_r2(runs[defense], owner))
+                check(defense, f"dcor[{owner}]",
+                      H.dcor_leakage(base, owner),
+                      H.dcor_leakage(runs[defense], owner))
+        for defense in ("grad_noise", "grad_unit", "grad_sign"):
+            check(defense, "norm_auc",
+                  H.norm_attack_auc(base),
+                  H.norm_attack_auc(runs[defense]))
 
     if failures:
         print(f"\n{len(failures)} defense(s) failed to reduce leakage")
